@@ -1,0 +1,52 @@
+"""Index-partitioning comparison (paper Sec 2.1's long-running debate):
+document vs term vs hybrid partitioning on the same corpus + workload.
+
+Metrics per scheme: storage imbalance (max/mean postings per server) and
+per-query work imbalance (max/mean postings *touched* per server over a
+Zipf query stream) — the quantity that becomes service-time imbalance and
+thus the H_p tax (Sec 3.4).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine import corpus as corpus_lib
+from repro.engine import partition
+from repro.workloadgen import querygen
+
+
+def _work_imbalance(part, qterms: np.ndarray) -> float:
+    """max/mean per-server postings touched over the stream."""
+    p = part.p
+    work = np.zeros(p)
+    for s, shard in enumerate(part.shards):
+        lens = shard.list_lengths()
+        for row in qterms:
+            terms = row[row >= 0]
+            work[s] += lens[terms].sum()
+    return float(work.max() / max(work.mean(), 1.0))
+
+
+def bench_partitioning(rows):
+    cfg = corpus_lib.CorpusConfig(n_docs=3000, vocab_size=1500,
+                                  mean_doc_len=40, seed=0)
+    corp = corpus_lib.generate_corpus(cfg)
+    uni = querygen.build_universe(querygen.WorkloadConfig(
+        "t", n_unique_queries=400, vocab_size=1500, seed=0))
+    _, qterms = querygen.sample_query_stream(uni, 200)
+    p = 8
+
+    schemes = {
+        "document": partition.partition_documents(corp, p),
+        "term": partition.partition_terms(corp, p),
+        "hybrid": partition.partition_hybrid(corp, p),
+    }
+    for name, part in schemes.items():
+        sizes = np.array([s.n_postings for s in part.shards], float)
+        storage = sizes.max() / max(sizes.mean(), 1.0)
+        work = _work_imbalance(part, qterms)
+        rows.append((f"partition_{name}", 0.0,
+                     f"storage_imb={storage:.3f} work_imb={work:.3f} "
+                     f"(paper Sec 2.1: doc partitioning is the standard; "
+                     f"hybrid balances best)"))

@@ -1,0 +1,63 @@
+"""Benchmark harness: one function per paper table/figure + kernel/DES
+micro-benches.  Prints ``name,us_per_call,derived`` CSV.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only PREFIX]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import kernels_bench, paper_tables, partitioning_bench
+
+BENCHES = [
+    paper_tables.bench_table2_query_lengths,
+    paper_tables.bench_fig2_zipf_popularity,
+    paper_tables.bench_table3_folding,
+    paper_tables.bench_fig6_interarrival_fits,
+    paper_tables.bench_fig7_service_time_fits,
+    paper_tables.bench_fig9_server_residence,
+    paper_tables.bench_fig10_response_vs_lambda,
+    paper_tables.bench_fig11_response_vs_p,
+    paper_tables.bench_fig12_scenarios,
+    paper_tables.bench_fig13_upgrade_grids,
+    paper_tables.bench_fig14_result_cache,
+    paper_tables.bench_table5_measurement,
+    kernels_bench.bench_maxplus_scan,
+    kernels_bench.bench_flash_attention,
+    kernels_bench.bench_decode_attention,
+    kernels_bench.bench_embedding_bag,
+    kernels_bench.bench_cin_fuse,
+    kernels_bench.bench_simulator_scale,
+    partitioning_bench.bench_partitioning,
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    failures = 0
+    for bench in BENCHES:
+        if args.only and args.only not in bench.__name__:
+            continue
+        try:
+            bench(rows)
+        except Exception:  # noqa: BLE001 — keep the harness running
+            failures += 1
+            print(f"# BENCH FAILED: {bench.__name__}", file=sys.stderr)
+            traceback.print_exc()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

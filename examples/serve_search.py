@@ -1,0 +1,113 @@
+"""End-to-end serving driver (the paper's kind of system is a serving
+system, so this is the flagship example): a live vertical search engine
+under open-loop Poisson load with batched request processing, an
+application-level result cache, and capacity-model-driven admission.
+
+The loop measures actual per-request latencies on this machine and
+compares them against the queueing model parameterized from the same
+measurements — the full Sec 5.3 validation, live.
+
+Run:  PYTHONPATH=src python examples/serve_search.py [--duration 20]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import queueing
+from repro.engine import cache as cache_lib
+from repro.engine import corpus as corpus_lib
+from repro.engine import index as index_lib
+from repro.engine import server
+from repro.launch.elastic import hedge_threshold
+from repro.workloadgen import loadgen, querygen
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=15.0)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="target qps (default: 60%% of capacity)")
+    ap.add_argument("--batch-window-ms", type=float, default=20.0)
+    args = ap.parse_args()
+
+    print("== build engine ==")
+    ccfg = corpus_lib.CorpusConfig(n_docs=4000, vocab_size=2500,
+                                   mean_doc_len=40, seed=0)
+    corp = corpus_lib.generate_corpus(ccfg)
+    idx = index_lib.build_index(corp)
+    srv = server.IndexServer(idx, k_local=10)
+    uni = querygen.build_universe(querygen.WorkloadConfig(
+        "serve", n_unique_queries=2000, vocab_size=2500, seed=0))
+
+    # warm + measure service time per query at the serving batch size
+    batch = 32
+    qids, qterms = querygen.sample_query_stream(uni, 4096, seed=7)
+    qt = jnp.asarray(qterms[:batch])
+    srv.timed_process(qt)
+    s_query = srv.timed_process(qt) / batch
+    cap = 1.0 / s_query
+    rate = args.rate or 0.6 * cap
+    print(f"   measured S_query={s_query * 1e3:.3f} ms  capacity~{cap:.0f}"
+          f" qps  offering {rate:.0f} qps")
+
+    # the model's prediction for this operating point (p=1 local server)
+    params = queueing.ServerParams(p=1, s_broker=1e-5, s_hit=s_query,
+                                   s_miss=s_query, s_disk=0.0, hit=1.0)
+    lo, hi = queueing.response_time_bounds(rate, params)
+    hedge = hedge_threshold(s_query, 8)
+    print(f"   model: {float(lo) * 1e3:.2f} <= R <= {float(hi) * 1e3:.2f}"
+          f" ms;  hedged-duplicate threshold {hedge * 1e3:.1f} ms")
+
+    print("== open-loop serving ==")
+    n_req = int(rate * args.duration)
+    arrivals = loadgen.poisson_arrivals(rate, args.duration, seed=3)
+    qids, qterms = querygen.sample_query_stream(uni, len(arrivals), seed=9)
+    result_cache = cache_lib.ResultCache(capacity_entries=500)
+
+    t0 = time.perf_counter()
+    latencies, cache_hits, served = [], 0, 0
+    i = 0
+    while i < len(arrivals):
+        now = time.perf_counter() - t0
+        if arrivals[i] > now:
+            time.sleep(min(arrivals[i] - now, 0.01))
+            continue
+        # batching window: take every request that has arrived
+        j = i
+        window_end = arrivals[i] + args.batch_window_ms / 1e3
+        while j < len(arrivals) and arrivals[j] <= window_end \
+                and j - i < batch:
+            j += 1
+        req_ids = qids[i:j]
+        # result cache short-circuits repeats (Scenario 6)
+        misses = [k for k, qid in enumerate(req_ids)
+                  if not result_cache.lookup(int(qid))]
+        cache_hits += len(req_ids) - len(misses)
+        if misses:
+            qt = np.full((batch, qterms.shape[1]), -1, np.int32)
+            qt[: len(misses)] = qterms[i:j][misses]
+            scores, docs = srv.process(jnp.asarray(qt))
+            jax.block_until_ready(scores)
+        done = time.perf_counter() - t0
+        latencies.extend(done - arrivals[i:j])
+        served += j - i
+        i = j
+
+    lat = np.asarray(latencies)
+    print(f"   served {served} requests; result-cache hit "
+          f"{cache_hits / max(served, 1):.2f}")
+    print(f"   measured mean={lat.mean() * 1e3:.1f} ms "
+          f"p50={np.quantile(lat, .5) * 1e3:.1f} "
+          f"p95={np.quantile(lat, .95) * 1e3:.1f} "
+          f"p99={np.quantile(lat, .99) * 1e3:.1f} ms")
+    print(f"   model bound was [{float(lo) * 1e3:.1f}, "
+          f"{float(hi) * 1e3:.1f}] ms + batching window "
+          f"{args.batch_window_ms:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Simulate fork-join clusters at the scale the paper left as future work.
+
+Sweeps cluster sizes p = 8 .. 1024 under the Table-5 workload and shows
+where the measured (simulated) response sits between Eq 7's bounds for
+the three service regimes: the model's iid-exponential assumption, the
+mechanistic disk-cache mixture, and the prior-work "balanced" assumption.
+
+Run:  PYTHONPATH=src python examples/simulate_cluster.py [--queries 40000]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.core import capacity, queueing, simulator
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=40_000)
+    ap.add_argument("--lam", type=float, default=15.0)
+    args = ap.parse_args()
+
+    print(f"{'p':>5s} {'lower':>8s} {'upper':>8s} | "
+          f"{'exp':>8s} {'cache':>8s} {'balanced':>9s} {'wall_s':>7s}")
+    for p in (8, 32, 128, 512, 1024):
+        pr = dataclasses.replace(capacity.TABLE5_PARAMS, p=p)
+        lo, hi = queueing.response_time_bounds(args.lam, pr)
+        t0 = time.time()
+        sims = {}
+        for mode in ("exponential", "cache", "balanced"):
+            res = simulator.simulate_fork_join(
+                jax.random.PRNGKey(p), args.lam, args.queries, pr,
+                mode=mode)
+            sims[mode] = float(res.mean_response)
+        dt = time.time() - t0
+        print(f"{p:5d} {float(lo):8.3f} {float(hi):8.3f} | "
+              f"{sims['exponential']:8.3f} {sims['cache']:8.3f} "
+              f"{sims['balanced']:9.3f} {dt:7.1f}")
+
+    print("\nReading: 'balanced' (the Chowdhury & Pass assumption) hugs the"
+          "\nlower bound at every scale — the paper's point that ignoring"
+          "\nservice-time imbalance underestimates response time by up to"
+          "\nthe H_p factor; the exponential regime approaches the upper"
+          "\nbound as p grows.")
+
+
+if __name__ == "__main__":
+    main()

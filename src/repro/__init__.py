@@ -1,0 +1,3 @@
+"""repro: capacity-planning framework for vertical search engines in JAX."""
+
+__version__ = "1.0.0"

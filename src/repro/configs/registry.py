@@ -1,0 +1,40 @@
+"""--arch <id> registry over the 10 assigned architectures."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchSpec
+
+_MODULES = {
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "dimenet": "repro.configs.dimenet",
+    "deepfm": "repro.configs.deepfm",
+    "xdeepfm": "repro.configs.xdeepfm",
+    "autoint": "repro.configs.autoint",
+    "mind": "repro.configs.mind",
+}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).SPEC
+
+
+def list_archs() -> list[str]:
+    return sorted(_MODULES)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every (arch, shape) pair — the 40 dry-run cells."""
+    cells = []
+    for a in list_archs():
+        spec = get_arch(a)
+        for s in spec.shapes:
+            cells.append((a, s.name))
+    return cells

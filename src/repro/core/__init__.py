@@ -1,0 +1,23 @@
+"""Core contribution: queueing-network capacity planning for search engines.
+
+Modules:
+  queueing   — the analytical model (Eq 1-8, fork-join bounds)
+  workload   — characterization: distribution fits, Zipf, folding
+  imbalance  — mechanistic disk-cache model of service-time imbalance
+  capacity   — Section-6 what-if engine, SLO solver, replication planner
+  simulator  — (max,+) discrete-event simulator (validation instrument)
+  planner    — capacity planning for ML serving from compiled dry-run costs
+"""
+
+from repro.core.queueing import (  # noqa: F401
+    ServerParams,
+    harmonic_number,
+    service_time_server,
+    mm1_residence_time,
+    utilization,
+    fork_join_lower_bound,
+    fork_join_upper_bound,
+    response_time_bounds,
+    response_time_with_result_cache,
+    saturation_rate,
+)

@@ -1,0 +1,229 @@
+"""Capacity planning engine (paper Section 6).
+
+Encodes the paper's measured parameter tables (Table 5 validation cluster,
+Table 6 100-server case study with 1x..4x main memory) and the Scenario 1-6
+what-if machinery: resource upgrades, SLO solving, replication sizing, and
+the application-level result cache (Eq 8).
+
+All sweeps evaluate as single XLA programs over (lambda-grid x scenario).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import queueing
+from repro.core.queueing import ServerParams
+
+Array = jax.Array
+
+__all__ = [
+    "TABLE5_PARAMS",
+    "MEMORY_TABLE",
+    "broker_service_time",
+    "scenario_params",
+    "upper_bound_curve",
+    "max_rate_under_slo",
+    "replicas_needed",
+    "CapacityPlan",
+    "plan_capacity",
+    "upgrade_grid",
+]
+
+_MS = 1e-3
+
+# --- Paper Table 5: validation cluster (8 servers, b = 1.25M pages) -------
+TABLE5_PARAMS = ServerParams(
+    p=8, s_broker=0.52 * _MS, s_hit=9.20 * _MS, s_miss=10.04 * _MS,
+    s_disk=28.08 * _MS, hit=0.17)
+
+TABLE5_SBROKER = {2: 0.33 * _MS, 4: 0.39 * _MS, 8: 0.52 * _MS}
+
+# --- Paper Table 6: case-study parameters, p=100, b = 10M pages -----------
+# Keyed by main-memory size as a multiple of the reference machine.
+# (s_hit, s_miss, s_disk, hit)
+MEMORY_TABLE = {
+    1: (28.23 * _MS, 35.31 * _MS, 66.03 * _MS, 0.02),
+    2: (33.38 * _MS, 33.77 * _MS, 35.89 * _MS, 0.09),
+    3: (34.57 * _MS, 32.66 * _MS, 30.48 * _MS, 0.15),
+    4: (34.68 * _MS, 32.04 * _MS, 26.14 * _MS, 0.18),
+}
+
+
+def broker_service_time(p) -> Array:
+    """Paper's broker fit: S_broker = 3.18e-2 * p + 0.265  (milliseconds).
+
+    R^2 = 0.99999 on the Table 5 measurements; gives 3.45 ms at p = 100.
+    """
+    p = jnp.asarray(p, jnp.float32)
+    return (3.18e-2 * p + 0.265) * _MS
+
+
+def scenario_params(
+    *, memory: int = 1, cpu: float = 1.0, disk: float = 1.0, p: int = 100,
+) -> ServerParams:
+    """Build Section-6 scenario parameters.
+
+    memory in {1,2,3,4} selects the re-measured Table 6 column; cpu/disk
+    are speedup factors applied per the paper (divide CPU times by ``cpu``,
+    disk time by ``disk``; the broker is CPU-bound so it scales with cpu).
+    """
+    s_hit, s_miss, s_disk, hit = MEMORY_TABLE[memory]
+    return ServerParams(
+        p=p,
+        s_broker=broker_service_time(p) / cpu,
+        s_hit=s_hit / cpu,
+        s_miss=s_miss / cpu,
+        s_disk=s_disk / disk,
+        hit=hit,
+    )
+
+
+# Named paper scenarios (Section 6 / Figure 12).
+def scenario(name: str, p: int = 100) -> ServerParams:
+    table = {
+        "baseline": dict(memory=1),
+        "memory+disks": dict(memory=4, disk=4.0),
+        "memory+cpus": dict(memory=4, cpu=4.0),
+        "cpus+disks": dict(memory=1, cpu=4.0, disk=4.0),
+        "memory+cpus+disks": dict(memory=4, cpu=4.0, disk=4.0),
+    }
+    return scenario_params(p=p, **table[name])
+
+
+def upper_bound_curve(lam_grid: Array, params: ServerParams) -> Array:
+    """Eq 7 upper bound over a lambda grid (one XLA program)."""
+    _, hi = queueing.response_time_bounds(lam_grid, params)
+    return hi
+
+
+def max_rate_under_slo(
+    params: ServerParams,
+    slo_seconds: float,
+    *,
+    result_cache: Optional[tuple[float, float]] = None,
+    iters: int = 60,
+) -> Array:
+    """Largest lambda with upper-bound response time <= SLO (bisection).
+
+    result_cache: optional (hit_result, s_broker_cache_hit) enabling Eq 8.
+    R(lambda) is monotone increasing up to saturation, so bisection on
+    [0, saturation_rate) is exact to float precision.
+    """
+    lam_max = queueing.saturation_rate(params) * (1.0 - 1e-6)
+
+    def response(lam):
+        if result_cache is None:
+            _, hi = queueing.response_time_bounds(lam, params)
+            return hi
+        hit_r, s_cache = result_cache
+        return queueing.response_time_with_result_cache(
+            lam, params, hit_r, s_cache)
+
+    lo = jnp.asarray(0.0)
+    hi = lam_max
+
+    def body(state, _):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        ok = response(mid) <= slo_seconds
+        return (jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)), None
+
+    (lo, hi), _ = jax.lax.scan(body, (lo, hi), None, length=iters)
+    # infeasible SLO (even lambda->0 exceeds it) -> 0
+    feasible = response(jnp.asarray(1e-6)) <= slo_seconds
+    return jnp.where(feasible, lo, 0.0)
+
+
+def replicas_needed(
+    params: ServerParams,
+    target_rate: float,
+    slo_seconds: float,
+    *,
+    result_cache: Optional[tuple[float, float]] = None,
+) -> tuple[Array, Array]:
+    """Cluster replicas to serve target_rate within the SLO (Sec 6).
+
+    Replication splits arrivals evenly; gains are linear per the paper.
+    Returns (n_replicas, per_replica_rate).
+    """
+    per_replica = max_rate_under_slo(params, slo_seconds,
+                                     result_cache=result_cache)
+    n = jnp.ceil(jnp.asarray(target_rate) / jnp.maximum(per_replica, 1e-9))
+    return n.astype(jnp.int32), per_replica
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityPlan:
+    """Output of plan_capacity — the manager-facing answer (Sec 5, Q i-iii)."""
+
+    n_replicas: int
+    servers_per_replica: int
+    total_servers: int
+    per_replica_rate_qps: float
+    response_upper_ms: float
+    response_lower_ms: float
+    utilization: float
+
+
+def plan_capacity(
+    params: ServerParams,
+    target_rate: float,
+    slo_seconds: float,
+    *,
+    result_cache: Optional[tuple[float, float]] = None,
+) -> CapacityPlan:
+    n, per_replica = replicas_needed(
+        params, target_rate, slo_seconds, result_cache=result_cache)
+    n_i = int(n)
+    rate = float(target_rate) / max(n_i, 1)
+    lo, hi = queueing.response_time_bounds(rate, params)
+    if result_cache is not None:
+        hi = queueing.response_time_with_result_cache(
+            rate, params, *result_cache)
+    p = int(jnp.asarray(params.p))
+    util = queueing.utilization(rate, queueing.service_time_server(params))
+    return CapacityPlan(
+        n_replicas=n_i,
+        servers_per_replica=p,
+        total_servers=n_i * p,
+        per_replica_rate_qps=rate,
+        response_upper_ms=float(hi) * 1e3,
+        response_lower_ms=float(lo) * 1e3,
+        utilization=float(util),
+    )
+
+
+def upgrade_grid(
+    lam: float,
+    *,
+    memory: int = 1,
+    cpu_speeds: Array = None,
+    disk_speeds: Array = None,
+    p: int = 100,
+    result_cache: Optional[tuple[float, float]] = None,
+) -> Array:
+    """Fig 13/14 surface: upper-bound R over (cpu_speed x disk_speed)."""
+    cpu_speeds = jnp.asarray(
+        cpu_speeds if cpu_speeds is not None else jnp.linspace(1, 4, 7))
+    disk_speeds = jnp.asarray(
+        disk_speeds if disk_speeds is not None else jnp.linspace(1, 4, 7))
+    s_hit, s_miss, s_disk, hit = MEMORY_TABLE[memory]
+    cs = cpu_speeds[:, None]
+    ds = disk_speeds[None, :]
+    params = ServerParams(
+        p=p,
+        s_broker=broker_service_time(p) / cs,
+        s_hit=s_hit / cs,
+        s_miss=s_miss / cs,
+        s_disk=s_disk / ds,
+        hit=hit,
+    )
+    if result_cache is None:
+        _, hi = queueing.response_time_bounds(lam, params)
+        return hi
+    return queueing.response_time_with_result_cache(lam, params, *result_cache)

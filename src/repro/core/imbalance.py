@@ -1,0 +1,193 @@
+"""Mechanistic model of per-query service-time imbalance (paper Sec 3.4).
+
+The paper attributes imbalance among *homogeneous* index servers to
+heterogeneous disk-cache behavior: for a given query some servers find the
+needed inverted lists in the OS page cache while others go to disk.  Here we
+model that mechanism analytically so the capacity planner can predict the
+(hit, S_hit, S_miss, S_disk) decomposition of Eq 1 from first principles —
+term popularity (Zipf), posting-list sizes, per-server memory, and the
+number of servers p — instead of only from /proc measurements.
+
+Cache model: Che's approximation for an LRU cache under the independent
+reference model.  For object i with request rate lambda_i and size z_i, the
+hit probability is  h_i = 1 - exp(-lambda_i * T_c)  where the
+characteristic time T_c solves
+
+    sum_i  z_i * (1 - exp(-lambda_i * T_c))  =  C        (cache bytes)
+
+Document partitioning divides every posting list by p, so z_i(p) = z_i / p:
+more servers (or more memory) => higher hit probability => *less* disk time
+but (as the paper observes) a wider hit/miss split across servers until hit
+saturates — the imbalance window.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import queueing
+
+Array = jax.Array
+ArrayLike = Union[Array, float]
+
+__all__ = [
+    "CacheGeometry",
+    "che_characteristic_time",
+    "term_hit_probabilities",
+    "query_full_hit_probability",
+    "imbalance_probability",
+    "service_params_from_cache_model",
+    "service_time_cv",
+]
+
+_CHE_ITERS = 40
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheGeometry:
+    """Inputs to the disk-cache model.
+
+    term_rates:  (T,) per-term request rate (queries/sec * terms-per-query
+                 share), i.e. Zipf-shaped popularity.
+    list_bytes:  (T,) full (unpartitioned) inverted-list size per term.
+    cache_bytes: per-server memory available to the OS page cache.
+    p:           number of index servers (document partitioning => each
+                 server stores list_bytes / p per term).
+    disk_bw:     sustained disk read bandwidth, bytes/sec.
+    disk_seek:   per-query seek+rotation overhead, seconds.
+    """
+
+    term_rates: Array
+    list_bytes: Array
+    cache_bytes: ArrayLike
+    p: ArrayLike
+    disk_bw: float = 50e6
+    disk_seek: float = 8e-3
+
+
+def che_characteristic_time(geom: CacheGeometry) -> Array:
+    """Solve Che's fixed point for T_c by bisection (monotone in T_c)."""
+    z = geom.list_bytes / jnp.asarray(geom.p, jnp.float32)
+    lam = geom.term_rates
+    cap = jnp.asarray(geom.cache_bytes, jnp.float32)
+
+    def filled(log_t):
+        t = jnp.exp(log_t)
+        return jnp.sum(z * (1.0 - jnp.exp(-lam * t)))
+
+    # Bisection in log space: cache fill is monotone increasing in T_c.
+    lo = jnp.asarray(-20.0, jnp.float32)
+    hi = jnp.asarray(25.0, jnp.float32)
+
+    def body(state, _):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        too_big = filled(mid) > cap
+        return (jnp.where(too_big, lo, mid), jnp.where(too_big, mid, hi)), None
+
+    (lo, hi), _ = jax.lax.scan(body, (lo, hi), None, length=_CHE_ITERS)
+    t_c = jnp.exp(0.5 * (lo + hi))
+    # If the whole (partitioned) working set fits in cache, T_c -> inf.
+    total = jnp.sum(z)
+    return jnp.where(total <= cap, jnp.inf, t_c)
+
+
+def term_hit_probabilities(geom: CacheGeometry) -> Array:
+    """h_i = 1 - exp(-lambda_i T_c) per term."""
+    t_c = che_characteristic_time(geom)
+    h = 1.0 - jnp.exp(-geom.term_rates * t_c)
+    return jnp.where(jnp.isinf(t_c), jnp.ones_like(h), h)
+
+
+def query_full_hit_probability(
+    geom: CacheGeometry, query_terms: Array, lengths: Array
+) -> Array:
+    """P(all lists for the query are cached) per query (Eq 1's ``hit``).
+
+    query_terms: (Q, Lmax) padded term ids; lengths: (Q,) #valid terms.
+    Terms are independent under the IRM, so the full-hit probability is the
+    product of per-term hit probabilities.
+    """
+    h = term_hit_probabilities(geom)
+    ht = h[query_terms]  # (Q, Lmax)
+    mask = jnp.arange(query_terms.shape[1])[None, :] < lengths[:, None]
+    log_h = jnp.where(mask, jnp.log(jnp.maximum(ht, 1e-30)), 0.0)
+    return jnp.exp(jnp.sum(log_h, axis=1))
+
+
+def imbalance_probability(hit_q: Array, p: ArrayLike) -> Array:
+    """P(servers split: some hit AND some miss) for one query.
+
+    Under document partitioning each server's cache sees the same term
+    stream with 1/p-size objects; treating per-server hits as independent
+    Bernoulli(hit_q):  P_split = 1 - hit^p - (1-hit)^p.  This is the
+    probability that the fork-join join actually pays the imbalance tax.
+    """
+    p = jnp.asarray(p, jnp.float32)
+    return 1.0 - hit_q ** p - (1.0 - hit_q) ** p
+
+
+def service_params_from_cache_model(
+    geom: CacheGeometry,
+    query_terms: Array,
+    lengths: Array,
+    *,
+    cpu_per_entry: float = 20e-9,
+    entry_bytes: float = 12.0,
+    cpu_base: float = 2e-3,
+) -> queueing.ServerParams:
+    """Derive Eq 1 parameters (hit, S_hit, S_miss, S_disk) from the model.
+
+    CPU time scales with the number of posting entries touched
+    (intersection + ranking ~ linear pass over the shortest lists); disk
+    time = seek + bytes_missed / disk_bw.  Constants are calibratable; the
+    defaults land in the same regime as paper Table 5.
+    """
+    p = jnp.asarray(geom.p, jnp.float32)
+    h_term = term_hit_probabilities(geom)
+    hit_q = query_full_hit_probability(geom, query_terms, lengths)
+
+    mask = (jnp.arange(query_terms.shape[1])[None, :] < lengths[:, None])
+    q_bytes = jnp.where(mask, geom.list_bytes[query_terms] / p, 0.0)
+    q_entries = q_bytes / entry_bytes
+
+    # CPU time: linear in entries processed (both hit and miss paths).
+    s_cpu_q = cpu_base + cpu_per_entry * jnp.sum(q_entries, axis=1)
+    hit = jnp.mean(hit_q)
+    w_hit = hit_q / jnp.maximum(jnp.sum(hit_q), 1e-9)
+    w_miss = (1 - hit_q) / jnp.maximum(jnp.sum(1 - hit_q), 1e-9)
+    s_hit = jnp.sum(w_hit * s_cpu_q)
+    s_miss = jnp.sum(w_miss * s_cpu_q)
+
+    # Disk bytes actually read: per term, missed with prob (1 - h_term).
+    miss_bytes = jnp.where(mask, (1.0 - h_term[query_terms]) * q_bytes, 0.0)
+    bytes_per_miss_query = jnp.sum(w_miss * jnp.sum(miss_bytes, axis=1))
+    s_disk = geom.disk_seek + bytes_per_miss_query / geom.disk_bw
+
+    return queueing.ServerParams(
+        p=p, s_broker=jnp.asarray(0.0), s_hit=s_hit, s_miss=s_miss,
+        s_disk=s_disk, hit=hit)
+
+
+def service_time_cv(params: queueing.ServerParams) -> Array:
+    """Coefficient of variation of the per-server service time under Eq 1.
+
+    Mixture of Exp(s_hit) w.p. hit and Exp(s_miss)+Exp(s_disk) w.p. 1-hit.
+    CV near 1 supports the paper's exponential service-time finding; the
+    hit/miss split is what spreads *per-query* times across servers.
+    """
+    hit = jnp.asarray(params.hit)
+    m_hit = jnp.asarray(params.s_hit)
+    m_miss = jnp.asarray(params.s_miss) + jnp.asarray(params.s_disk)
+    mean = hit * m_hit + (1 - hit) * m_miss
+    # E[X^2]: exp => 2 mu^2; sum of two indep exps => 2(a^2+b^2)+2ab... use
+    # Var(A+B)=a^2+b^2 with means a,b => E[(A+B)^2] = (a+b)^2 + a^2 + b^2.
+    a = jnp.asarray(params.s_miss)
+    b = jnp.asarray(params.s_disk)
+    ex2 = hit * 2.0 * m_hit**2 + (1 - hit) * ((a + b) ** 2 + a**2 + b**2)
+    var = ex2 - mean**2
+    return jnp.sqrt(jnp.maximum(var, 0.0)) / mean

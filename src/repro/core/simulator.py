@@ -1,0 +1,227 @@
+"""Massively parallel discrete-event simulator for fork-join search clusters.
+
+The paper validates its model on an 8-node physical cluster and leaves
+"simulation-based analysis ... for larger clusters with thousands of index
+servers" as future work.  This module delivers that in JAX.
+
+Key idea: FCFS queueing is a linear recurrence in the (max, +) semiring.
+With arrival times A_i (sorted) and service times S_i, the completion time
+
+    C_i = S_i + max(A_i, C_{i-1})  =  max(a_i, C_{i-1} + b_i),
+          a_i = A_i + S_i,  b_i = S_i
+
+and the affine maps c -> max(a, c + b) compose associatively:
+
+    (a1,b1) then (a2,b2)  =  (max(a2, a1 + b2), b1 + b2)
+
+so an entire M/M/1 sample path is one `jax.lax.associative_scan` (O(log n)
+depth), a p-server fork-join cluster is a batch dimension, and millions of
+queries x thousands of servers simulate in one XLA program.  A Pallas TPU
+kernel for the blockwise scan lives in `repro.kernels.maxplus_scan`.
+
+Simulated system (paper Fig 8): broker FCFS queue -> fork to p index-server
+FCFS queues -> join (max over servers) -> response = join - arrival.
+Service-time generators cover three regimes:
+
+  * "exponential" — iid Exp(S_server) per (query, server): the model's
+    assumption, full imbalance across servers.
+  * "cache"       — per-(query, server) Bernoulli(hit) mixture of
+    Exp(s_hit) vs Exp(s_miss)+Exp(s_disk): the mechanistic story of Sec 3.4.
+  * "balanced"    — identical service time for all servers per query: the
+    Chowdhury & Pass assumption the paper argues against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.queueing import ServerParams, service_time_server
+
+Array = jax.Array
+
+__all__ = [
+    "maxplus_combine",
+    "fcfs_completion_times",
+    "SimResult",
+    "simulate_fork_join",
+    "simulate_mmc",
+    "sample_service_times",
+]
+
+
+def maxplus_combine(x, y):
+    """Associative composition of affine max-plus maps; y is *later*."""
+    a1, b1 = x
+    a2, b2 = y
+    return jnp.maximum(a2, a1 + b2), b1 + b2
+
+
+def fcfs_completion_times(arrivals: Array, services: Array,
+                          impl: str = "xla") -> Array:
+    """Completion times of an FCFS single-server queue.
+
+    arrivals: (..., n) nondecreasing along the last axis.
+    services: (..., n) positive.
+    impl: "xla" (associative_scan) or "pallas" (TPU kernel; interpret=True
+    on CPU) — both compute the identical recurrence.
+    """
+    a = arrivals + services
+    b = services
+    if impl == "pallas":
+        from repro.kernels.maxplus_scan import ops as mp_ops
+        out_a, _ = mp_ops.maxplus_scan(a, b)
+        return out_a
+    out_a, _ = jax.lax.associative_scan(maxplus_combine, (a, b), axis=-1)
+    return out_a
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Per-query response times plus the summary stats the paper reports."""
+
+    response: Array          # (n_queries,) end-to-end response time
+    server_residence: Array  # (n_queries,) residence at ONE tagged server
+    cluster_residence: Array  # (n_queries,) fork-join (max over servers)
+    broker_residence: Array  # (n_queries,)
+
+    @property
+    def mean_response(self) -> Array:
+        return jnp.mean(self.response)
+
+    @property
+    def mean_server_residence(self) -> Array:
+        return jnp.mean(self.server_residence)
+
+    @property
+    def mean_cluster_residence(self) -> Array:
+        return jnp.mean(self.cluster_residence)
+
+    def quantile(self, q: float) -> Array:
+        return jnp.quantile(self.response, q)
+
+
+def sample_service_times(
+    key: Array, n_queries: int, p: int, params: ServerParams, mode: str
+) -> Array:
+    """(p, n_queries) per-server service times under the chosen regime."""
+    s_mean = service_time_server(params)
+    if mode == "exponential":
+        return jax.random.exponential(key, (p, n_queries)) * s_mean
+    if mode == "balanced":
+        one = jax.random.exponential(key, (1, n_queries)) * s_mean
+        return jnp.broadcast_to(one, (p, n_queries))
+    if mode == "cache":
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        is_hit = jax.random.bernoulli(k1, params.hit, (p, n_queries))
+        t_hit = jax.random.exponential(k2, (p, n_queries)) * params.s_hit
+        t_miss = (jax.random.exponential(k3, (p, n_queries)) * params.s_miss
+                  + jax.random.exponential(k4, (p, n_queries)) * params.s_disk)
+        return jnp.where(is_hit, t_hit, t_miss)
+    raise ValueError(f"unknown service mode: {mode}")
+
+
+def simulate_fork_join(
+    key: Array,
+    lam: float,
+    n_queries: int,
+    params: ServerParams,
+    *,
+    p: Optional[int] = None,
+    mode: str = "exponential",
+    impl: str = "xla",
+    warmup_fraction: float = 0.1,
+) -> SimResult:
+    """Simulate the full broker + p-server fork-join network (Fig 8).
+
+    The broker is visited once per query with service S_broker (the paper
+    lumps broadcast+merge); its completions are the fork times.  Each index
+    server runs an independent FCFS queue over the forked stream.  The join
+    waits for the slowest server.  Warmup queries are masked out of the
+    returned samples by replacing them with the post-warmup mean (keeps
+    shapes static for jit).
+    """
+    p = int(params.p) if p is None else p  # static before tracing
+    return _simulate_fork_join(key, lam, n_queries, params, p, mode, impl,
+                               warmup_fraction)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_queries", "p", "mode", "impl",
+                              "warmup_fraction"))
+def _simulate_fork_join(
+    key: Array,
+    lam: float,
+    n_queries: int,
+    params: ServerParams,
+    p: int,
+    mode: str,
+    impl: str,
+    warmup_fraction: float,
+) -> SimResult:
+    k_arr, k_brk, k_srv = jax.random.split(key, 3)
+
+    gaps = jax.random.exponential(k_arr, (n_queries,)) / lam
+    arrivals = jnp.cumsum(gaps)
+
+    s_broker = (jax.random.exponential(k_brk, (n_queries,))
+                * jnp.asarray(params.s_broker))
+    broker_done = fcfs_completion_times(arrivals, s_broker, impl=impl)
+    broker_residence = broker_done - arrivals
+
+    services = sample_service_times(k_srv, n_queries, p, params, mode)
+    fork_times = jnp.broadcast_to(broker_done, (p, n_queries))
+    completions = fcfs_completion_times(fork_times, services, impl=impl)
+
+    join = jnp.max(completions, axis=0)
+    response = join - arrivals
+    cluster_residence = join - broker_done
+    server_residence = completions[0] - broker_done
+
+    n_warm = int(n_queries * warmup_fraction)
+    mask = jnp.arange(n_queries) >= n_warm
+
+    def masked(x):
+        mean = jnp.sum(jnp.where(mask, x, 0.0)) / jnp.maximum(
+            jnp.sum(mask), 1)
+        return jnp.where(mask, x, mean)
+
+    return SimResult(
+        response=masked(response),
+        server_residence=masked(server_residence),
+        cluster_residence=masked(cluster_residence),
+        broker_residence=masked(broker_residence),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("c",))
+def simulate_mmc(arrivals: Array, services: Array, c: int) -> Array:
+    """M/M/c FCFS via the Kiefer-Wolfowitz workload-vector recursion.
+
+    State w = sorted vector of the c servers' remaining work at an arrival.
+    On arrival i: start delay = w[0]; after assigning service S_i to the
+    least-loaded server and advancing time by the next interarrival gap:
+
+        w' = sort( (w + S_i e_1) - gap )_+
+
+    Supports the paper's stated future work (multi-threaded index servers).
+    Returns response times (delay + own service).
+    """
+    gaps = jnp.diff(arrivals, prepend=arrivals[:1] * 0.0)
+
+    def step(w, inp):
+        gap, s = inp
+        w = jnp.maximum(w - gap, 0.0)          # advance to this arrival
+        delay = w[0]
+        w = w.at[0].add(s)                     # assign to least loaded
+        w = jnp.sort(w)
+        return w, delay + s
+
+    _, resp = jax.lax.scan(step, jnp.zeros((c,), services.dtype),
+                           (gaps, services))
+    return resp

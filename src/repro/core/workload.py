@@ -1,0 +1,248 @@
+"""Workload characterization (paper Section 4).
+
+Five distribution families exactly as evaluated in the paper — Exponential,
+Gamma, Weibull, Lognormal, Pareto — with MLE fitting, their CDFs, and the
+paper's two goodness-of-fit criteria (sum of squared differences between
+empirical and model CDFs, and the Kolmogorov-Smirnov statistic).
+
+Plus: Zipf popularity sampling/fitting (Fig 2) and the log *folding*
+procedure (Sec 4.2) that boosts a dataset's arrival rate while preserving
+its distributional shape.
+
+Everything is jnp and jit-friendly; fits use fixed-iteration Newton steps
+(no data-dependent Python control flow) so they can run inside scans and
+be vmapped over many one-hour windows at once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+__all__ = [
+    "DistFit",
+    "fit_exponential",
+    "fit_gamma",
+    "fit_weibull",
+    "fit_lognormal",
+    "fit_pareto",
+    "fit_all",
+    "ks_statistic",
+    "ssq_statistic",
+    "best_fit",
+    "zipf_probs",
+    "sample_zipf",
+    "fit_zipf_alpha",
+    "rank_frequencies",
+    "fold_timestamps",
+    "sample_poisson_arrivals",
+    "empirical_cdf_points",
+]
+
+_NEWTON_ITERS = 25
+
+
+@dataclasses.dataclass(frozen=True)
+class DistFit:
+    """A fitted distribution: name, parameter pytree, and its CDF."""
+
+    name: str
+    params: Dict[str, Array]
+    cdf: Callable[[Array], Array] = dataclasses.field(compare=False)
+
+    def __repr__(self) -> str:  # params as floats for readability
+        p = {k: float(v) for k, v in self.params.items()}
+        return f"DistFit({self.name}, {p})"
+
+
+# --------------------------------------------------------------------------
+# MLE fits. Each returns a DistFit whose cdf closes over fitted params.
+# --------------------------------------------------------------------------
+
+def fit_exponential(x: Array) -> DistFit:
+    """f(t) = (1/mu) exp(-t/mu); MLE mu = mean (paper footnote 6)."""
+    mu = jnp.mean(x)
+    return DistFit("exponential", {"mu": mu}, lambda t: 1.0 - jnp.exp(-t / mu))
+
+
+def fit_gamma(x: Array) -> DistFit:
+    """Gamma(k, theta) via Newton on  ln k - psi(k) = s."""
+    x = jnp.asarray(x, jnp.float32)
+    mean = jnp.mean(x)
+    s = jnp.log(mean) - jnp.mean(jnp.log(x))
+    s = jnp.maximum(s, 1e-6)
+    k0 = (3.0 - s + jnp.sqrt((s - 3.0) ** 2 + 24.0 * s)) / (12.0 * s)
+
+    def newton(k, _):
+        f = jnp.log(k) - jax.scipy.special.digamma(k) - s
+        fp = 1.0 / k - jax.scipy.special.polygamma(1, k)
+        k = jnp.clip(k - f / fp, 1e-4, 1e6)
+        return k, None
+
+    k, _ = jax.lax.scan(newton, k0, None, length=_NEWTON_ITERS)
+    theta = mean / k
+    return DistFit(
+        "gamma", {"k": k, "theta": theta},
+        lambda t: jax.scipy.special.gammainc(k, jnp.maximum(t, 0.0) / theta))
+
+
+def fit_weibull(x: Array) -> DistFit:
+    """Weibull(k, lam) via Newton on the profile-likelihood shape equation."""
+    x = jnp.asarray(x, jnp.float32)
+    lx = jnp.log(x)
+    mlx = jnp.mean(lx)
+
+    def g(k):
+        # numerically stable weighted means of log x under weights x^k
+        w = jnp.exp(k * (lx - jnp.max(lx)))
+        sw = jnp.sum(w)
+        return jnp.sum(w * lx) / sw - 1.0 / k - mlx
+
+    k0 = jnp.asarray(1.0, jnp.float32)
+
+    def newton(k, _):
+        f = g(k)
+        fp = jax.grad(g)(k)
+        k = jnp.clip(k - f / fp, 1e-3, 1e3)
+        return k, None
+
+    k, _ = jax.lax.scan(newton, k0, None, length=_NEWTON_ITERS)
+    lam = jnp.mean(x ** k) ** (1.0 / k)
+    return DistFit(
+        "weibull", {"k": k, "lam": lam},
+        lambda t: 1.0 - jnp.exp(-jnp.maximum(t / lam, 0.0) ** k))
+
+
+def fit_lognormal(x: Array) -> DistFit:
+    lx = jnp.log(jnp.asarray(x, jnp.float32))
+    mu = jnp.mean(lx)
+    sigma = jnp.maximum(jnp.std(lx), 1e-6)
+    return DistFit(
+        "lognormal", {"mu": mu, "sigma": sigma},
+        lambda t: 0.5 * (1.0 + jax.scipy.special.erf(
+            (jnp.log(jnp.maximum(t, 1e-30)) - mu) / (sigma * jnp.sqrt(2.0)))))
+
+
+def fit_pareto(x: Array) -> DistFit:
+    """Pareto(x_m, alpha), x_m = min(x); MLE alpha = n / sum ln(x/x_m)."""
+    x = jnp.asarray(x, jnp.float32)
+    xm = jnp.min(x)
+    alpha = x.shape[0] / jnp.maximum(jnp.sum(jnp.log(x / xm)), 1e-6)
+    return DistFit(
+        "pareto", {"xm": xm, "alpha": alpha},
+        lambda t: jnp.where(t >= xm, 1.0 - (xm / jnp.maximum(t, xm)) ** alpha, 0.0))
+
+
+def fit_all(x: Array) -> Dict[str, DistFit]:
+    """All five families of Sec 4.2/4.3."""
+    return {
+        f.name: f
+        for f in (fit_exponential(x), fit_gamma(x), fit_weibull(x),
+                  fit_lognormal(x), fit_pareto(x))
+    }
+
+
+# --------------------------------------------------------------------------
+# Goodness of fit (paper Sec 4.2): SSQ of CDF differences + KS statistic.
+# --------------------------------------------------------------------------
+
+def empirical_cdf_points(x: Array) -> tuple[Array, Array]:
+    xs = jnp.sort(x)
+    n = xs.shape[0]
+    ecdf = (jnp.arange(1, n + 1, dtype=jnp.float32)) / n
+    return xs, ecdf
+
+
+def ks_statistic(x: Array, fit: DistFit) -> Array:
+    """Kolmogorov-Smirnov D = sup |F_emp - F_model| over the sample."""
+    xs = jnp.sort(x)
+    n = xs.shape[0]
+    f = fit.cdf(xs)
+    hi = jnp.arange(1, n + 1, dtype=jnp.float32) / n
+    lo = jnp.arange(0, n, dtype=jnp.float32) / n
+    return jnp.maximum(jnp.max(jnp.abs(f - hi)), jnp.max(jnp.abs(f - lo)))
+
+
+def ssq_statistic(x: Array, fit: DistFit) -> Array:
+    """Sum of squared differences between the empirical and model CDFs."""
+    xs, ecdf = empirical_cdf_points(x)
+    return jnp.sum((fit.cdf(xs) - ecdf) ** 2)
+
+
+def best_fit(x: Array, criterion: str = "ks") -> tuple[str, Dict[str, Array]]:
+    """Name + per-family statistic; lowest statistic wins."""
+    stat = ks_statistic if criterion == "ks" else ssq_statistic
+    fits = fit_all(x)
+    stats = {name: stat(x, f) for name, f in fits.items()}
+    winner = min(stats, key=lambda k: float(stats[k]))
+    return winner, stats
+
+
+# --------------------------------------------------------------------------
+# Zipf popularity (paper Fig 2): Prob(E_n) ∝ n^-alpha.
+# --------------------------------------------------------------------------
+
+def zipf_probs(n_elements: int, alpha: float) -> Array:
+    ranks = jnp.arange(1, n_elements + 1, dtype=jnp.float32)
+    w = ranks ** (-alpha)
+    return w / jnp.sum(w)
+
+
+def sample_zipf(key: Array, n_elements: int, alpha: float, shape) -> Array:
+    """Inverse-CDF sampling of Zipf ranks (0-based element ids)."""
+    cdf = jnp.cumsum(zipf_probs(n_elements, alpha))
+    u = jax.random.uniform(key, shape)
+    return jnp.searchsorted(cdf, u).astype(jnp.int32)
+
+
+def rank_frequencies(ids: Array, n_elements: int) -> Array:
+    """Frequency of each element, sorted descending (rank-frequency curve)."""
+    counts = jnp.zeros((n_elements,), jnp.int32).at[ids].add(1)
+    return jnp.sort(counts)[::-1]
+
+
+def fit_zipf_alpha(freqs_desc: Array, min_count: int = 5) -> Array:
+    """Slope of the log-log rank-frequency line (paper's fitting method).
+
+    Weighted least squares over ranks whose count >= min_count (the deep
+    tail of 1-count elements otherwise biases the slope).
+    """
+    n = freqs_desc.shape[0]
+    ranks = jnp.arange(1, n + 1, dtype=jnp.float32)
+    mask = (freqs_desc >= min_count).astype(jnp.float32)
+    x = jnp.log(ranks)
+    y = jnp.log(jnp.maximum(freqs_desc.astype(jnp.float32), 1e-9))
+    w = mask / jnp.maximum(jnp.sum(mask), 1.0)
+    xm = jnp.sum(w * x)
+    ym = jnp.sum(w * y)
+    slope = jnp.sum(w * (x - xm) * (y - ym)) / jnp.maximum(
+        jnp.sum(w * (x - xm) ** 2), 1e-9)
+    return -slope  # alpha
+
+
+# --------------------------------------------------------------------------
+# Folding (paper Sec 4.2) and Poisson arrival synthesis.
+# --------------------------------------------------------------------------
+
+def fold_timestamps(timestamps: Array, window: float) -> tuple[Array, Array]:
+    """Fold arrivals modulo ``window`` and sort.
+
+    Returns (folded_sorted_timestamps, boost_factor) where boost_factor is
+    the arrival-rate multiplier = ceil(duration / window) merged windows.
+    """
+    t = jnp.asarray(timestamps)
+    folded = jnp.sort(jnp.mod(t, window))
+    duration = jnp.max(t) - jnp.min(t)
+    boost = jnp.ceil(duration / window)
+    return folded, boost
+
+
+def sample_poisson_arrivals(key: Array, lam: float, n: int) -> Array:
+    """n arrival timestamps of a rate-lam Poisson process (cumsum of Exp)."""
+    gaps = jax.random.exponential(key, (n,)) / lam
+    return jnp.cumsum(gaps)

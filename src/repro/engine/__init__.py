@@ -1,0 +1,2 @@
+"""The vertical search engine substrate (paper Sec 3): corpus, inverted
+index, partitioning, scoring, broker, caches, and distributed execution."""

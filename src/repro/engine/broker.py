@@ -1,0 +1,33 @@
+"""Broker: broadcast, in-memory top-k merge, result cache (paper Sec 3.1).
+
+The merge is the fork-join *join point*: partial ranked answers from all p
+index servers are combined by a single top-k over the concatenated
+candidates.  The broker "does not have to make ranking computations ...
+other than comparing document ranks" (Sec 5.1) — the merge is exactly that
+comparison, O(p*k log k) work, all in memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["merge_topk"]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk(
+    partial_scores: jax.Array,   # (p, Q, k_local)
+    partial_docs: jax.Array,     # (p, Q, k_local) — GLOBAL doc ids
+    *,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Merge p partial ranked answers into the final top-k per query."""
+    p, q, kl = partial_scores.shape
+    flat_s = jnp.moveaxis(partial_scores, 0, 1).reshape(q, p * kl)
+    flat_d = jnp.moveaxis(partial_docs, 0, 1).reshape(q, p * kl)
+    top_s, idx = jax.lax.top_k(flat_s, k)
+    top_d = jnp.take_along_axis(flat_d, idx, axis=1)
+    return top_s, top_d

@@ -1,0 +1,114 @@
+"""Distributed query processing: document partitioning on a JAX mesh.
+
+The paper's cluster (Fig 1) maps onto the mesh as: one index server per
+slice along the ``servers`` axis; the broker broadcast is the replication
+of the query batch; the join is an all_gather of local top-k; the broker
+merge is a final top_k.  Under `shard_map`, each shard runs exactly the
+single-server hot path (`scoring.score_queries`) on its subcollection —
+the code is literally the paper's architecture.
+
+Index shards are stacked into leading-axis-p arrays (padded to the longest
+shard) so one `NamedSharding` over the ``servers`` axis scatters them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.engine.broker import merge_topk
+from repro.engine.partition import Partitioned
+from repro.engine.scoring import score_queries
+
+__all__ = ["StackedShards", "stack_shards", "make_search_fn"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StackedShards:
+    term_offsets: jax.Array   # (p, V+1)
+    doc_ids: jax.Array        # (p, NNZ_max)
+    weights: jax.Array        # (p, NNZ_max)
+    doc_norms: jax.Array      # (p, B_max)
+    local_to_global: jax.Array  # (p, B_max) int32
+    meta: dict = dataclasses.field(
+        metadata=dict(static=True), default_factory=dict)
+
+
+def stack_shards(part: Partitioned) -> StackedShards:
+    p = part.p
+    nnz_max = max(s.n_postings for s in part.shards)
+    b_max = max(s.n_docs for s in part.shards)
+    v = part.shards[0].vocab_size
+
+    offs = np.zeros((p, v + 1), np.int64)
+    docs = np.zeros((p, nnz_max), np.int32)
+    wts = np.zeros((p, nnz_max), np.float32)
+    norms = np.ones((p, b_max), np.float32)
+    l2g = np.zeros((p, b_max), np.int32)
+    budget = 1
+    for s, shard in enumerate(part.shards):
+        offs[s] = shard.term_offsets
+        docs[s, : shard.n_postings] = shard.doc_ids
+        w = shard.tf * shard.idf[np.repeat(np.arange(v),
+                                           shard.list_lengths())]
+        wts[s, : shard.n_postings] = w
+        norms[s, : shard.n_docs] = shard.doc_norms
+        if hasattr(part, "local_to_global"):
+            g = part.local_to_global[s]
+            l2g[s, : len(g)] = g
+        else:
+            l2g[s, : shard.n_docs] = np.arange(shard.n_docs)
+        budget = max(budget, int(shard.list_lengths().max()))
+    return StackedShards(
+        term_offsets=jnp.asarray(offs),
+        doc_ids=jnp.asarray(docs),
+        weights=jnp.asarray(wts),
+        doc_norms=jnp.asarray(norms),
+        local_to_global=jnp.asarray(l2g),
+        meta=dict(p=p, b_max=b_max, budget=budget),
+    )
+
+
+def make_search_fn(mesh: Mesh, stacked: StackedShards, *, k: int = 10,
+                   k_local: Optional[int] = None, axis: str = "servers"):
+    """Build the jitted distributed search: queries (Q, L) -> top-k.
+
+    Fork: queries replicated to every shard.  Local processing: the
+    single-server scorer.  Join: all_gather of (scores, global ids).
+    Merge: broker top-k.  One XLA program; the collectives ARE the
+    broker/join of Fig 1.
+    """
+    k_local = k_local or k
+    n_docs = stacked.meta["b_max"]
+    budget = stacked.meta["budget"]
+
+    def local(term_offsets, doc_ids, weights, doc_norms, l2g, queries):
+        # shard_map gives (1, ...) slices along the servers axis
+        s, d = score_queries(
+            term_offsets[0], doc_ids[0], weights[0], doc_norms[0],
+            queries, n_docs=n_docs, budget=budget, k=k_local)
+        g = l2g[0][d]                                  # global doc ids
+        s_all = jax.lax.all_gather(s, axis)            # (p, Q, k_local)
+        g_all = jax.lax.all_gather(g, axis)
+        return merge_topk(s_all, g_all, k=k)
+
+    shard = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def search(queries: jax.Array):
+        return shard(stacked.term_offsets, stacked.doc_ids, stacked.weights,
+                     stacked.doc_norms, stacked.local_to_global, queries)
+
+    return search

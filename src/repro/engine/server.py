@@ -1,0 +1,91 @@
+"""Index server: local query processing + the measurement harness.
+
+`IndexServer` wraps one shard's device arrays with the jitted scorer and a
+service-time instrumentation path that mirrors the paper's methodology
+(Sec 4.3/5.3): CPU time is measured around the compiled scorer; disk time
+comes from the LRU cache replay; the two compose into Eq 1 parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.queueing import ServerParams
+from repro.engine import cache as cache_lib
+from repro.engine.index import InvertedIndex
+from repro.engine.scoring import score_queries
+
+__all__ = ["IndexServer", "measure_service_params"]
+
+
+class IndexServer:
+    def __init__(self, index: InvertedIndex, *, budget: int = None,
+                 k_local: int = 10):
+        self.index = index
+        (self.term_offsets, self.doc_ids,
+         self.weights, self.doc_norms) = index.as_device_arrays()
+        max_list = int(index.list_lengths().max()) if index.n_postings else 1
+        self.budget = int(budget or max_list)
+        self.k_local = k_local
+
+    def process(self, query_terms: jax.Array):
+        """Local top-k for a batch of queries (the hot path)."""
+        return score_queries(
+            self.term_offsets, self.doc_ids, self.weights, self.doc_norms,
+            query_terms, n_docs=self.index.n_docs, budget=self.budget,
+            k=self.k_local)
+
+    def timed_process(self, query_terms: jax.Array) -> float:
+        """Wall-clock seconds for one batch (compiled, post-warmup)."""
+        t0 = time.perf_counter()
+        s, d = self.process(query_terms)
+        jax.block_until_ready((s, d))
+        return time.perf_counter() - t0
+
+
+def measure_service_params(
+    server: IndexServer,
+    query_terms: np.ndarray,          # (Q, L) int, padded -1
+    cache_bytes: int,
+    *,
+    p: int,
+    s_broker: float,
+    batch: int = 64,
+    warmup_batches: int = 2,
+    disk_bw: float = 50e6,
+    disk_seek: float = 8e-3,
+) -> ServerParams:
+    """The paper's parameterization step, end to end.
+
+    CPU time: measured around the compiled scorer per batch, divided by
+    batch (hit and miss share the compute path; S_hit vs S_miss differ by
+    the masked fraction of postings actually touched, which the replay
+    splits).  Disk time and hit probability: LRU replay over this server's
+    list sizes.  Returns Eq 1 parameters for the queueing model.
+    """
+    stats, hits, disk_time = cache_lib.measure_cache_behavior(
+        query_terms, server.index.list_bytes(), cache_bytes,
+        disk_bw=disk_bw, disk_seek=disk_seek,
+        warmup=min(query_terms.shape[0] // 10, 2000))
+
+    q = query_terms.shape[0]
+    times = []
+    qt = jnp.asarray(query_terms[: batch * (q // batch)].reshape(
+        -1, batch, query_terms.shape[1]))
+    for i in range(qt.shape[0]):
+        dt = server.timed_process(qt[i])
+        if i >= warmup_batches:
+            times.append(dt / batch)
+    s_cpu = float(np.mean(times)) if times else 1e-3
+
+    miss = ~hits
+    s_disk = float(disk_time[miss].mean()) if miss.any() else 0.0
+    return ServerParams(
+        p=p, s_broker=s_broker,
+        s_hit=s_cpu, s_miss=s_cpu, s_disk=s_disk,
+        hit=stats.hit)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused xDeepFM CIN layer.
+
+The jnp CIN layer materializes the outer product (B, Hk, m, D) before
+compressing with W — at serve_bulk scale that intermediate is the memory
+bottleneck (roofline: xdeepfm cells are memory-bound).  Per output
+element: y[b,o,d] = sum_{h,m} xk[b,h,d] * x0[b,m,d] * W[h,m,o].
+
+Fusion: for one (batch-block, d) the contraction is
+    y[:, :, d] = (xk[:, :, d] outer x0[:, :, d]) @ W_flat
+and the outer product lives only in VMEM.  We tile over (B/bb, D) with W
+resident; each step does bb small (Hk x m) outers + one (bb, Hk*m) x
+(Hk*m, O) MXU matmul.  HBM traffic: read xk/x0 once, write y once —
+the (B, Hk, m, D) tensor never exists.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_B = 256
+
+
+def _cin_kernel(xk_ref, x0_ref, w_ref, o_ref):
+    xk = xk_ref[...]                     # (bb, Hk, 1)
+    x0 = x0_ref[...]                     # (bb, m, 1)
+    w = w_ref[...]                       # (Hk*m, O)
+    bb, hk, _ = xk.shape
+    m = x0.shape[1]
+    outer = (xk[:, :, None, 0] * x0[:, None, :, 0]).reshape(bb, hk * m)
+    o_ref[...] = jax.lax.dot_general(
+        outer, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)[..., None]
+
+
+def cin_layer_pallas(
+    xk: jax.Array,   # (B, Hk, D)
+    x0: jax.Array,   # (B, m, D)
+    w: jax.Array,    # (Hk*m, O)
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hk, d = xk.shape
+    _, m, _ = x0.shape
+    o = w.shape[1]
+    assert b % block_b == 0, (b, block_b)
+    grid = (b // block_b, d)
+
+    return pl.pallas_call(
+        _cin_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, hk, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((block_b, m, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((hk * m, o), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, o, 1), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o, d), xk.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(xk, x0, w)

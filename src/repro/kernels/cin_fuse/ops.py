@@ -1,0 +1,31 @@
+"""Jitted wrapper for the fused CIN layer."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cin_fuse.kernel import DEFAULT_BLOCK_B, cin_layer_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def cin_layer(
+    xk: jax.Array,   # (B, Hk, D)
+    x0: jax.Array,   # (B, m, D)
+    w: jax.Array,    # (Hk*m, O)
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = xk.shape[0]
+    bb = min(block_b, b)
+    pad = (-b) % bb
+    if pad:
+        xk = jnp.pad(xk, ((0, pad), (0, 0), (0, 0)))
+        x0 = jnp.pad(x0, ((0, pad), (0, 0), (0, 0)))
+    out = cin_layer_pallas(xk, x0, w, block_b=bb, interpret=interpret)
+    return out[:b]

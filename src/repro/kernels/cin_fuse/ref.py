@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: the unfused CIN layer from repro.models.recsys."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cin_layer_ref(xk, x0, w):
+    """xk (B,Hk,D), x0 (B,m,D), w (Hk*m,O) -> (B,O,D)."""
+    b, hk, d = xk.shape
+    m = x0.shape[1]
+    outer = jnp.einsum("bhd,bmd->bhmd", xk, x0)
+    return jnp.einsum("bhmd,hmo->bod", outer, w.reshape(hk, m, -1))

@@ -1,0 +1,39 @@
+"""Jitted wrapper: model cache layout -> kernel layout."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import (
+    DEFAULT_BLOCK_K,
+    decode_attention_pallas,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,        # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, KV, D)
+    v_cache: jax.Array,  # (B, S, KV, D)
+    length: jax.Array,   # () int32 — last valid position (inclusive)
+    *,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, one, h, d = q.shape
+    _, s, kv, _ = k_cache.shape
+    g = h // kv
+
+    qk = q.reshape(b, kv, g, d).reshape(b * kv, g, d)
+    kk = jnp.moveaxis(k_cache, 2, 1).reshape(b * kv, s, d)
+    vk = jnp.moveaxis(v_cache, 2, 1).reshape(b * kv, s, d)
+    bk = min(block_k, s)
+    out = decode_attention_pallas(
+        qk, kk, vk, jnp.asarray(length, jnp.int32), block_k=bk,
+        interpret=interpret)
+    return out.reshape(b, 1, h, d)

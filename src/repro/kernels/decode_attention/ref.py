@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for decode attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, length):
+    """q (B*KV, G, D), k/v (B*KV, S, D), length () -> (B*KV, G, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("hgd,hsd->hgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    valid = jnp.arange(k.shape[1]) <= length
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hgs,hsd->hgd", p, v.astype(jnp.float32)).astype(
+        q.dtype)

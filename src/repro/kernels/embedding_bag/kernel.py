@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: EmbeddingBag (multi-hot gather + mean pool).
+
+JAX has no native EmbeddingBag; the jnp formulation (take + masked mean)
+round-trips every gathered row through HBM.  This kernel uses
+scalar-prefetched ids to DMA exactly the needed table rows into VMEM and
+accumulates the bag mean in-register, so each output row is written once
+and no (B, F, M, D) intermediate ever exists — on TPU the ids are
+available at DMA-issue time (scalar prefetch), which is the TPU-native
+replacement for the GPU's per-thread gather.
+
+Grid (B*F, M): one table row per step, revisiting the same output block
+across the sequential bag dimension.  ids/mask live in SMEM (prefetched);
+the table row index_map picks block ids[b, m] of a (rows/1, D)-blocked
+table — i.e. the DMA engine does the gather.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(ids_ref, cnt_ref, table_ref, o_ref, acc_scr, *, bag: int):
+    m = pl.program_id(1)
+
+    @pl.when(m == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    bf = pl.program_id(0)
+    valid = m < cnt_ref[bf]
+    row = table_ref[...].astype(jnp.float32)       # (1, D)
+    acc_scr[...] += jnp.where(valid, row, 0.0)
+
+    @pl.when(m == bag - 1)
+    def _finalize():
+        denom = jnp.maximum(cnt_ref[bf], 1).astype(jnp.float32)
+        o_ref[...] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def embedding_bag_pallas(
+    table: jax.Array,    # (R, D)
+    ids: jax.Array,      # (B*F, M) int32 — row ids (masked entries: 0)
+    counts: jax.Array,   # (B*F,) int32 — valid entries per bag
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    bf, m = ids.shape
+    r, d = table.shape
+    grid = (bf, m)
+
+    kernel = functools.partial(_bag_kernel, bag=m)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, d),
+                    lambda b, m, ids_ref, cnt_ref: (ids_ref[b, m], 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, d), lambda b, m, ids_ref, cnt_ref: (b, 0)),
+            scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bf, d), table.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(ids, counts, table)

@@ -1,0 +1,33 @@
+"""Jitted wrapper matching repro.models.recsys.embedding_bag semantics."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(
+    table: jax.Array,  # (R, D)
+    ids: jax.Array,    # (B, F, M) globalized row ids
+    mask: jax.Array,   # (B, F, M) bool
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(B, F, D) mean-pooled bags — drop-in for the jnp formulation.
+
+    Assumes valid ids are contiguous at the front of each bag (the data
+    pipeline's layout); masked tail entries are ignored via counts.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, f, m = ids.shape
+    counts = jnp.sum(mask, axis=-1).reshape(b * f).astype(jnp.int32)
+    flat_ids = jnp.where(mask, ids, 0).reshape(b * f, m).astype(jnp.int32)
+    out = embedding_bag_pallas(table, flat_ids, counts,
+                               interpret=interpret)
+    return out.reshape(b, f, -1)

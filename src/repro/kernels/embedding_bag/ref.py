@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for EmbeddingBag (the recsys.embedding_bag op)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, counts):
+    """table (R,D), ids (BF,M), counts (BF,) -> (BF,D) mean-pooled."""
+    vecs = jnp.take(table, ids, axis=0).astype(jnp.float32)  # (BF,M,D)
+    mask = (jnp.arange(ids.shape[1])[None, :]
+            < counts[:, None]).astype(jnp.float32)
+    s = jnp.sum(vecs * mask[..., None], axis=1)
+    return (s / jnp.maximum(counts[:, None], 1)).astype(table.dtype)

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: causal GQA flash attention (forward).
+
+Adaptation notes (GPU flash -> TPU, DESIGN.md):
+  * the online-softmax recurrence is identical, but tiling follows the TPU
+    memory hierarchy: Q/K/V blocks are DMA'd HBM->VMEM by BlockSpecs and
+    the (bq x bk) score tile feeds the 128x128 MXU directly — block sizes
+    default to 128/256 so every matmul dim is MXU-aligned;
+  * instead of warp-level reductions, running (m, l, acc) live in VMEM
+    scratch across the sequential kv-block grid dimension;
+  * GQA is expressed by an index_map that sends n_rep consecutive q-head
+    rows to the same kv head — no KV duplication in HBM.
+
+Layout: q (B*H, Sq, D), k/v (B*KV, Sk, D); grid (B*H, Sq/bq, Sk/bk) with
+the kv dimension sequential ("arbitrary") and the rest parallel.
+
+VMEM: q/k/v/out blocks + scratch =
+(bq + 2*bk + bq) * D * 4B + bq*(D+2)*4B ~= 0.8 MiB at defaults — far under
+budget, leaving room for the scheduler to double-buffer the K/V streams.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 256
+
+_NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, block_q: int, block_k: int, scale: float,
+                  causal: bool):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                          # (bq, D)
+    k = k_ref[0]                          # (bk, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale     # (bq, bk)
+
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(qpos >= kpos, s, _NEG_INF)
+
+    m_prev = m_scr[...]                   # (bq, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                # (bq, bk)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * alpha
+                    + jax.lax.dot_general(
+                        p.astype(v_ref.dtype), v_ref[0],
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,     # (B*H, Sq, D)
+    k: jax.Array,     # (B*KV, Sk, D)
+    v: jax.Array,     # (B*KV, Sk, D)
+    *,
+    n_rep: int,       # H // KV (GQA replication factor)
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    assert bh == bkv * n_rep, (bh, bkv, n_rep)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    grid = (bh, sq // block_q, sk // block_k)
+    scale = d ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, scale=scale,
+        causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda h, i, j, n_rep=n_rep: (h // n_rep, j, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda h, i, j, n_rep=n_rep: (h // n_rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

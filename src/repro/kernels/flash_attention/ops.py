@@ -1,0 +1,46 @@
+"""Jitted wrapper: (B, S, H, D) model layout -> kernel layout and back."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
+    flash_attention_pallas,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(
+    q: jax.Array,     # (B, Sq, H, D)
+    k: jax.Array,     # (B, Sk, KV, D)
+    v: jax.Array,     # (B, Sk, KV, D)
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    n_rep = h // kv
+
+    # (B, S, H, D) -> (B*H, S, D) with q heads grouped by kv head so the
+    # kernel's h // n_rep index_map hits the right kv row.
+    qk = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, d)
+    kk = jnp.moveaxis(k, 2, 1).reshape(b * kv, sk, d)
+    vk = jnp.moveaxis(v, 2, 1).reshape(b * kv, sk, d)
+
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    out = flash_attention_pallas(
+        qk, kk, vk, n_rep=n_rep, causal=causal, block_q=bq, block_k=bk,
+        interpret=interpret)
+    return jnp.moveaxis(out.reshape(b, h, sq, d), 1, 2)

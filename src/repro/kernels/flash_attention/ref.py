@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for GQA flash attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, n_rep: int, causal: bool = True):
+    """q (B*H, Sq, D), k/v (B*KV, Sk, D) -> (B*H, Sq, D), fp32 softmax."""
+    bh, sq, d = q.shape
+    k = jnp.repeat(k, n_rep, axis=0)
+    v = jnp.repeat(v, n_rep, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[1]), bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(
+        q.dtype)

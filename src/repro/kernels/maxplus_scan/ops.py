@@ -1,0 +1,57 @@
+"""Jitted public wrapper for the max-plus scan Pallas kernel.
+
+Handles arbitrary leading shapes, pads the scan axis with the semiring
+identity (a = -inf, b = 0), and picks interpret mode automatically off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maxplus_scan.kernel import (
+    DEFAULT_BLOCK_LEN,
+    DEFAULT_ROW_TILE,
+    maxplus_scan_pallas,
+)
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_len", "row_tile",
+                                             "interpret"))
+def maxplus_scan(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_len: int = DEFAULT_BLOCK_LEN,
+    row_tile: int = DEFAULT_ROW_TILE,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Inclusive (max, +) scan along the last axis; any leading shape."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    orig_shape = a.shape
+    n = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    a2 = a.reshape(rows, n)
+    b2 = b.reshape(rows, n)
+
+    pad_n = (-n) % block_len
+    pad_r = (-rows) % row_tile
+    if pad_n or pad_r:
+        a2 = jnp.pad(a2, ((0, pad_r), (0, pad_n)),
+                     constant_values=-jnp.inf)
+        b2 = jnp.pad(b2, ((0, pad_r), (0, pad_n)), constant_values=0.0)
+
+    out_a, out_b = maxplus_scan_pallas(
+        a2, b2, block_len=block_len, row_tile=row_tile, interpret=interpret)
+    out_a = out_a[:rows, :n].reshape(orig_shape)
+    out_b = out_b[:rows, :n].reshape(orig_shape)
+    return out_a, out_b

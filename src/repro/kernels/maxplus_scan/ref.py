@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the max-plus scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maxplus_combine(x, y):
+    a1, b1 = x
+    a2, b2 = y
+    return jnp.maximum(a2, a1 + b2), b1 + b2
+
+
+def maxplus_scan_ref(a: jax.Array, b: jax.Array):
+    """O(log n)-depth oracle via jax.lax.associative_scan."""
+    return jax.lax.associative_scan(maxplus_combine, (a, b), axis=-1)
+
+
+def maxplus_scan_sequential(a: jax.Array, b: jax.Array):
+    """O(n) sequential oracle via lax.scan — the definitional recurrence."""
+
+    def step(carry, ab):
+        c = maxplus_combine(carry, ab)
+        return c, c
+
+    init = (jnp.full(a.shape[:-1], -jnp.inf, a.dtype),
+            jnp.zeros(b.shape[:-1], b.dtype))
+    _, (out_a, out_b) = jax.lax.scan(
+        step, init, (jnp.moveaxis(a, -1, 0), jnp.moveaxis(b, -1, 0)))
+    return jnp.moveaxis(out_a, 0, -1), jnp.moveaxis(out_b, 0, -1)

@@ -1,0 +1,137 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape) cell on the production meshes and record
+memory/cost/collective analysis for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import all_cells, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import sharding_rules
+from repro.launch.specs import build_cell
+from repro.roofline.analysis import roofline_from_compiled
+
+
+def _lower_compile(spec, shape, mesh, multi_pod, **kw):
+    build = build_cell(spec, shape, mesh, multi_pod, **kw)
+    with mesh, sharding_rules(build.rules):
+        jitted = jax.jit(build.fn, donate_argnums=build.donate)
+        lowered = jitted.lower(*build.args)
+        compiled = lowered.compile()
+    return build, compiled
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str = None, verbose: bool = True) -> dict:
+    spec = get_arch(arch_id)
+    shape = next(s for s in spec.shapes if s.name == shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    n_chips = 512 if multi_pod else 256
+
+    t0 = time.time()
+    build, compiled = _lower_compile(spec, shape, mesh, multi_pod)
+    t_compile = time.time() - t0
+
+    # XLA cost analysis counts a while (scan) body once regardless of trip
+    # count.  For LM cells the layer stack is a scan over n_layers: compile
+    # a second variant with scan_unroll=2 — the cost delta is exactly one
+    # layer's worth — and extrapolate: total = cost1 + delta * (L - 1).
+    extrapolate = None
+    if spec.family == "lm":
+        _, compiled2 = _lower_compile(spec, shape, mesh, multi_pod,
+                                      scan_unroll=2)
+        extrapolate = (compiled2, spec.config.n_layers)
+
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(f"[{arch_id} x {shape_name} x {mesh_name}] "
+              f"compile {t_compile:.1f}s (+extrap {time.time()-t0-t_compile:.1f}s)")
+        print("  memory_analysis:", mem)
+
+    cell = roofline_from_compiled(
+        arch=arch_id, shape=shape_name, mesh_name=mesh_name,
+        n_chips=n_chips, compiled=compiled, model_flops=build.model_flops,
+        extrapolate=extrapolate)
+    rec = cell.to_json()
+    t_lower, t_compile = 0.0, t_compile
+    rec["lower_s"] = t_lower
+    rec["compile_s"] = t_compile
+    rec["notes"] = build.notes
+    if verbose:
+        print(f"  cost_analysis: flops/dev={cell.flops_global / n_chips:.3e}"
+              f" bytes/dev={cell.bytes_global / n_chips:.3e}"
+              f" coll_bytes/dev={cell.collective_bytes_global / n_chips:.3e}")
+        print(f"  terms: compute={cell.terms.compute_s:.4e}s "
+              f"memory={cell.terms.memory_s:.4e}s "
+              f"collective={cell.terms.collective_s:.4e}s "
+              f"bound={cell.bound} useful={cell.useful_flops_ratio:.3f}")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(
+            out_dir, f"{arch_id}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells whose JSON already exists")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch_id, shape_name in cells:
+        for multi_pod in meshes:
+            mesh_name = "multi" if multi_pod else "single"
+            path = os.path.join(
+                args.out, f"{arch_id}__{shape_name}__{mesh_name}.json")
+            if args.skip_done and os.path.exists(path):
+                print(f"skip {arch_id} x {shape_name} x {mesh_name}")
+                continue
+            try:
+                run_cell(arch_id, shape_name, multi_pod, out_dir=args.out)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((arch_id, shape_name, mesh_name, repr(e)))
+                print(f"FAILED {arch_id} x {shape_name} x {mesh_name}: {e}")
+                traceback.print_exc()
+
+    print(f"\n{'=' * 60}\ndry-run complete;"
+          f" {len(failures)} failures" + (":" if failures else ""))
+    for f in failures:
+        print("  ", *f)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

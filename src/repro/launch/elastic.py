@@ -1,0 +1,87 @@
+"""Elastic scaling + straggler mitigation.
+
+Node failure at scale is routine; the framework's contract is:
+  1. training state is checkpointed every N steps (async, atomic);
+  2. on failure, surviving hosts form a SMALLER mesh (same axis names,
+     reduced ``data``/``pod`` extent), `restore` re-shards the checkpoint
+     onto it, and the pure-function data pipeline replays from the saved
+     step — bitwise-identical semantics, fewer chips;
+  3. when capacity returns, the same path scales back up.
+
+Straggler mitigation uses the paper's own mathematics: a synchronous
+fork-join step waits for the slowest of p participants, and with iid
+exponential tails the expected straggler tax is H_p (queueing.Eq 6).
+`hedge_threshold` converts that into when to fire a hedged duplicate
+(serving) or re-dispatch a microbatch (training): wait until the
+conditional expected remaining time of the laggard exceeds the cost of a
+duplicate, i.e. the (1 - 1/p)-quantile of the residence distribution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core import queueing
+
+__all__ = ["survivor_mesh_shape", "hedge_threshold", "ElasticPlan",
+           "plan_downsize"]
+
+
+def survivor_mesh_shape(original: Sequence[int], failed_hosts: int,
+                        chips_per_host: int, axes: Sequence[str]
+                        ) -> tuple[int, ...]:
+    """Shrink the data-most axis to exclude failed hosts' chips.
+
+    Keeps the ``model`` extent intact (TP degree is a property of the
+    model's sharding) and shrinks ``data`` (then ``pod``): DP width is the
+    elastic dimension.
+    """
+    shape = list(original)
+    lost = failed_hosts * chips_per_host
+    order = [axes.index(a) for a in ("data", "pod") if a in axes]
+    for ax in order:
+        while lost > 0 and shape[ax] > 1:
+            total_other = int(np.prod(shape)) // shape[ax]
+            shape[ax] -= 1
+            lost -= total_other
+    if lost > 0:
+        raise ValueError("not enough surviving capacity for model shards")
+    return tuple(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_shape: tuple
+    new_shape: tuple
+    throughput_fraction: float
+    step_time_factor: float
+
+
+def plan_downsize(old_shape: Sequence[int], new_shape: Sequence[int]
+                  ) -> ElasticPlan:
+    old_n = int(np.prod(old_shape))
+    new_n = int(np.prod(new_shape))
+    return ElasticPlan(
+        old_shape=tuple(old_shape), new_shape=tuple(new_shape),
+        throughput_fraction=new_n / old_n,
+        step_time_factor=old_n / new_n,
+    )
+
+
+def hedge_threshold(mean_service: float, p: int, *,
+                    duplicate_cost_fraction: float = 1.0) -> float:
+    """Wait time after which a hedged duplicate is worth sending.
+
+    For exponential residence with mean R, the slowest of p has expected
+    value H_p R; the marginal straggler (the gap between the (p-1)-th and
+    p-th order statistic) costs R/1 on average.  Hedging pays when the
+    observed wait exceeds the (1 - 1/p) quantile:
+        t* = R * ln(p)        (quantile of Exp at 1 - 1/p)
+    scaled by the relative cost of a duplicate.
+    """
+    return float(mean_service * np.log(max(p, 2))
+                 * duplicate_cost_fraction)

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS for 512 host devices BEFORE any jax
+import; smoke tests and benches must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axes", "data_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axes(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+def data_axes(multi_pod: bool) -> tuple[str, ...]:
+    """The data-parallel axes (replica dimension for DP batch sharding)."""
+    return ("pod", "data") if multi_pod else ("data",)

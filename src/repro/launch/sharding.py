@@ -1,0 +1,108 @@
+"""Logical-axis sharding: model code names axes, meshes bind them.
+
+Model definitions call ``constrain(x, "batch", "seq", "embed")`` with
+*logical* axis names.  A `sharding_rules` context binds logical names to
+mesh axis names (or None).  Outside any context (CPU unit tests) the call
+is a no-op, so the same model code runs everywhere.
+
+Standard rule sets for the production meshes live here too; the per-shape
+overrides used by the §Perf hillclimb are plain dict updates.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisBinding = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, AxisBinding]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(rules: Optional[Dict[str, AxisBinding]]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def spec(*logical: Optional[str]) -> P:
+    """PartitionSpec for logical axis names under the active rules."""
+    rules = current_rules() or {}
+    return P(*[rules.get(name) if name else None for name in logical])
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without rules."""
+    if current_rules() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec(*logical))
+
+
+# ---------------------------------------------------------------------------
+# Standard rule sets.  Mesh axes: ("pod",) "data", "model".
+# ---------------------------------------------------------------------------
+
+def lm_rules(multi_pod: bool, *, seq_sharded_decode: bool = True
+             ) -> Dict[str, AxisBinding]:
+    """Megatron TP + (pod, data) DP + sequence-parallel residual stream."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": dp,
+        "seq": "model",        # sequence-parallel residual stream
+        "seq_q": None,         # attention runs with heads sharded instead
+        "embed": None,
+        "heads": "model",      # TP: attention heads
+        "kv_heads": "model",
+        "qkv": None,
+        "ffn": "model",        # TP: FFN hidden
+        "experts": "model",    # expert parallelism
+        "vocab": "model",      # row-sharded embedding/logits
+        "kv_seq": "model" if seq_sharded_decode else None,  # decode KV cache
+        "kv_batch": dp,
+        "cand": "model",
+    }
+
+
+def gnn_rules(multi_pod: bool, *, replicate_nodes: bool = False
+              ) -> Dict[str, AxisBinding]:
+    """Edge/triplet partitioning over the whole mesh.
+
+    replicate_nodes=True keeps node states replicated (≤1 GB even at
+    2.45M nodes): gathers h[edge_src] become LOCAL on every edge shard,
+    instead of GSPMD replicating gather outputs mesh-wide (§Perf Cell D).
+    """
+    everything = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {
+        "edges": everything,
+        "triplets": everything,
+        "nodes": None if replicate_nodes else everything,
+        "graph_batch": everything,
+        "feat": None,
+        "hidden": None,
+    }
+
+
+def recsys_rules(multi_pod: bool) -> Dict[str, AxisBinding]:
+    """Row-sharded embedding tables; batch DP; candidates model-sharded."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": dp,
+        "rows": "model",       # embedding-table rows (the 'index servers')
+        "embed": None,
+        "fields": None,
+        "mlp": None,           # MLP weights are replicated (tiny)
+        "cand": "model",       # retrieval candidates
+        "hist": None,
+    }

@@ -1,0 +1,492 @@
+"""Per-cell dry-run builders: input_specs + param shardings + step fns.
+
+For every (arch x shape) cell this module produces:
+  * ``fn``            — the jittable step (train / prefill / decode / serve),
+  * ``args``          — a pytree of jax.ShapeDtypeStruct stand-ins carrying
+                        NamedShardings (weak-type-correct, NO allocation),
+  * ``rules``         — logical-axis sharding rules active while tracing,
+  * ``model_flops``   — MODEL_FLOPS for §Roofline's useful-compute ratio,
+  * ``donate``        — donated arg indices (params/opt/caches), matching
+                        how production would run the step.
+
+Divisibility policy: tensor dims are padded (vocab, experts, candidate
+count, graph buffers) or the corresponding logical axis is left unsharded
+(e.g. granite's 24 heads on a 16-way model axis) — recorded in `notes`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, GNNConfig, LMConfig, RecsysConfig, ShapeSpec
+from repro.launch.mesh import data_axes
+from repro.models import dimenet as DN
+from repro.models import recsys as RS
+from repro.models import transformer as T
+from repro.models.gnn_common import GraphBatch
+from repro.train.optimizer import AdamW, AdamWState
+
+Array = jax.Array
+
+# candidate count padded so retrieval shards over the full 512-chip mesh
+RETRIEVAL_CAND_PADDED = 1_000_448
+
+
+@dataclasses.dataclass
+class CellBuild:
+    fn: Callable
+    args: tuple
+    rules: Dict[str, Any]
+    model_flops: float
+    donate: tuple = ()
+    notes: str = ""
+
+
+def _sharded_sds(tree, pspec_fn, mesh: Mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree via path rules."""
+
+    def visit(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "name", p)))
+                       for p in path)
+        spec = pspec_fn(key, leaf)
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(visit, tree)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+# -------------------------------------------------------------------------
+# LM family
+# -------------------------------------------------------------------------
+
+def _lm_param_pspec(cfg: LMConfig, tp: int = 16, *, fsdp: bool = False,
+                    dp_size: int = 16):
+    """TP rules on the model axis; with fsdp=True, additionally shard the
+    first remaining (non-layer-stack) divisible dim over ``data`` —
+    ZeRO-3: at 104B params, replicating fp32 optimizer state across the
+    data axis costs 54 GB/chip, far over HBM.  XLA inserts the per-layer
+    all-gather inside the scan (classic FSDP schedule)."""
+    heads_ok = cfg.n_heads % tp == 0
+    ffn_ok = cfg.d_ff % tp == 0 if cfg.moe is None else False
+
+    def base_rule(key: str, nd: int) -> list:
+        if key == "embed":
+            return [None, "model"]   # column-sharded: local gathers
+        if key == "lm_head":
+            return [None, "model"]
+        if key.endswith("wq") and heads_ok:
+            return [None, None, "model"]
+        if key.endswith("wo") and heads_ok:
+            return [None, "model", None]
+        if (key.endswith("w_gate") or key.endswith("w_up")) and nd == 3 \
+                and ffn_ok:
+            return [None, None, "model"]           # dense mlp (L, d, ff)
+        if key.endswith("w_down") and nd == 3 and ffn_ok:
+            return [None, "model", None]
+        if "moe" in key and nd == 4:                # (L, E, ., .)
+            return [None, "model", None, None]
+        return [None] * nd                          # norms, wk/wv, router
+
+    def rule(key: str, leaf) -> P:
+        nd = len(leaf.shape)
+        spec = base_rule(key, nd)
+        if fsdp:
+            # skip dim 0 of layer-stacked tensors (scan slices that dim)
+            start = 1 if nd >= 2 and key not in ("embed", "lm_head") else 0
+            for i in range(start, nd):
+                if spec[i] is None and leaf.shape[i] % dp_size == 0:
+                    spec[i] = "data"
+                    break
+        return P(*spec)
+
+    return rule
+
+
+def lm_rules(cfg: LMConfig, shape: ShapeSpec, multi_pod: bool
+             ) -> Dict[str, Any]:
+    dp = data_axes(multi_pod)
+    tp = 16
+    heads = "model" if cfg.n_heads % tp == 0 else None
+    ffn = "model" if (cfg.moe is None and cfg.d_ff % tp == 0) else None
+    rules: Dict[str, Any] = {
+        "batch": dp, "seq": "model", "seq_q": None, "embed": None,
+        "embed_rows": None, "embed_cols": "model",
+        "heads": heads, "kv_heads": None, "ffn": ffn, "experts": "model",
+        "vocab": "model", "kv_seq": "model", "kv_batch": dp, "cand": None,
+        "mlp": None, "fields": None, "rows": None,
+    }
+    if shape.kind == "decode":
+        rules["seq"] = None
+        if shape["global_batch"] == 1:             # long_500k
+            rules["batch"] = None
+            rules["kv_batch"] = None
+            rules["kv_seq"] = (("pod", "data", "model") if multi_pod
+                               else ("data", "model"))
+    return rules
+
+
+def _lm_params_sds(cfg: LMConfig, mesh: Mesh, *, fsdp: bool = False):
+    shapes = jax.eval_shape(
+        functools.partial(T.init_params, cfg=cfg), jax.random.key(0))
+    return _sharded_sds(shapes, _lm_param_pspec(cfg, fsdp=fsdp), mesh)
+
+
+def _opt_sds(param_sds, mesh: Mesh):
+    def f32_like(s):
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                    sharding=s.sharding)
+    return AdamWState(
+        step=_sds((), jnp.int32, mesh, P()),
+        m=jax.tree.map(f32_like, param_sds),
+        v=jax.tree.map(f32_like, param_sds),
+    )
+
+
+def build_lm_cell(spec: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                  multi_pod: bool, *, scan_unroll: int = 1) -> CellBuild:
+    # dry-run execution knobs: layers stay under lax.scan (compact HLO,
+    # fast SPMD compiles); attention chunk loops are Python-unrolled so
+    # per-layer cost analysis is exact.  XLA counts the scan body once
+    # regardless of trip count, so the dry-run compiles each LM cell at
+    # scan_unroll=1 and 2 and extrapolates per-layer costs to n_layers
+    # (launch.dryrun).
+    cfg: LMConfig = dataclasses.replace(
+        spec.config, scan_layers=True, unroll_attn=True,
+        scan_unroll=scan_unroll,
+        attn_chunk=2048 if shape.kind == "train" else 0)
+    dp = data_axes(multi_pod)
+    rules = lm_rules(cfg, shape, multi_pod)
+    # ZeRO-3 over data for training (optimizer state dominates at 104B);
+    # serving keeps params TP-sharded + data-replicated (latency path).
+    params_sds = _lm_params_sds(cfg, mesh, fsdp=shape.kind == "train")
+    b = shape["global_batch"]
+    s = shape["seq_len"]
+    batch_spec = P(dp, None) if b > 1 else P(None, None)
+
+    if shape.kind == "train":
+        opt = AdamW(lr=1e-4)
+
+        def fn(params, opt_state, tokens, labels):
+            loss, grads = jax.value_and_grad(T.train_step_loss)(
+                params, cfg, tokens, labels)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            return new_params, new_state, loss
+
+        args = (params_sds, _opt_sds(params_sds, mesh),
+                _sds((b, s), jnp.int32, mesh, batch_spec),
+                _sds((b, s), jnp.int32, mesh, batch_spec))
+        flops = 6.0 * cfg.n_active_params * b * s
+        return CellBuild(fn, args, rules, flops, donate=(0, 1))
+
+    if shape.kind == "prefill":
+        def fn(params, tokens):
+            return T.prefill(params, cfg, tokens, chunk=4096)
+
+        args = (params_sds, _sds((b, s), jnp.int32, mesh, batch_spec))
+        flops = 2.0 * cfg.n_active_params * b * s
+        return CellBuild(fn, args, rules, flops)
+
+    # decode (decode_32k / long_500k): one token against a KV cache
+    kv_spec = P(None, rules["kv_batch"], rules["kv_seq"], None, None)
+    cache_sds = {
+        "k": _sds((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.d_head),
+                  jnp.dtype(cfg.dtype), mesh, kv_spec),
+        "v": _sds((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.d_head),
+                  jnp.dtype(cfg.dtype), mesh, kv_spec),
+        "len": _sds((), jnp.int32, mesh, P()),
+    }
+
+    def fn(params, tokens, cache):
+        return T.decode_step(params, cfg, tokens, cache)
+
+    args = (params_sds,
+            _sds((b, 1), jnp.int32, mesh,
+                 P(rules["batch"], None)),
+            cache_sds)
+    # decode step: 2*N_active per token + KV read "flops" are memory-side
+    flops = 2.0 * cfg.n_active_params * b
+    return CellBuild(fn, args, rules, flops, donate=(2,),
+                     notes="serve_step (decode), not train_step")
+
+
+# -------------------------------------------------------------------------
+# GNN (DimeNet)
+# -------------------------------------------------------------------------
+
+def _pad_to(x: int, m: int) -> int:
+    return x + (-x) % m
+
+
+def gnn_cell_dims(shape: ShapeSpec) -> dict:
+    """Padded (nodes, edges, triplets, feat, graphs) for a GNN cell."""
+    pad = 512  # lcm of both mesh sizes
+    if shape.name == "molecule":
+        n = shape["batch"] * shape["n_nodes"]
+        e = shape["batch"] * shape["n_edges"]
+        return dict(nodes=_pad_to(n, pad), edges=_pad_to(e, pad),
+                    triplets=_pad_to(4 * e, pad), feat=32,
+                    graphs=shape["batch"])
+    if shape.name == "minibatch_lg":
+        return dict(nodes=_pad_to(shape["sub_nodes"], pad),
+                    edges=_pad_to(shape["sub_edges"], pad),
+                    triplets=_pad_to(4 * shape["sub_edges"], pad),
+                    feat=shape["d_feat"], graphs=1)
+    return dict(nodes=_pad_to(shape["n_nodes"], pad),
+                edges=_pad_to(shape["n_edges"], pad),
+                triplets=_pad_to(4 * shape["n_edges"], pad),
+                feat=shape["d_feat"], graphs=1)
+
+
+def gnn_model_flops(cfg: GNNConfig, dims: dict, train: bool = True) -> float:
+    t, e, h, nb = dims["triplets"], dims["edges"], cfg.d_hidden, cfg.n_bilinear
+    s = cfg.n_spherical * cfg.n_radial
+    per_block = (2.0 * t * (s * nb + nb * h * h + h)    # sbf proj + bilinear
+                 + 2.0 * e * h * h * 4)                 # edge MLPs
+    fwd = cfg.n_blocks * per_block + 2.0 * e * h * (3 * h)
+    return fwd * (3.0 if train else 1.0)
+
+
+def build_gnn_cell(spec: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                   multi_pod: bool) -> CellBuild:
+    from repro.launch.sharding import gnn_rules
+    cfg: GNNConfig = spec.config
+    dims = gnn_cell_dims(shape)
+    # replicated node states: ≤1 GB at ogb_products scale, and it keeps
+    # every h[edge_src] gather local per edge shard (§Perf Cell D)
+    rules = gnn_rules(multi_pod, replicate_nodes=True)
+    every = rules["edges"]
+    nodes_spec = rules["nodes"]
+
+    params_shapes = jax.eval_shape(
+        functools.partial(DN.init_params, cfg=cfg, d_feat=dims["feat"]),
+        jax.random.key(0))
+    params_sds = _sharded_sds(
+        params_shapes, lambda k, l: P(*([None] * len(l.shape))), mesh)
+
+    nspec, espec, tspec = P(nodes_spec), P(every), P(every)
+    g_sds = GraphBatch(
+        node_feat=_sds((dims["nodes"], dims["feat"]), jnp.dtype(cfg.dtype),
+                       mesh, P(nodes_spec, None)),
+        edge_src=_sds((dims["edges"],), jnp.int32, mesh, espec),
+        edge_dst=_sds((dims["edges"],), jnp.int32, mesh, espec),
+        edge_dist=_sds((dims["edges"],), jnp.float32, mesh, espec),
+        edge_mask=_sds((dims["edges"],), jnp.bool_, mesh, espec),
+        tri_kj=_sds((dims["triplets"],), jnp.int32, mesh, tspec),
+        tri_ji=_sds((dims["triplets"],), jnp.int32, mesh, tspec),
+        tri_angle=_sds((dims["triplets"],), jnp.float32, mesh, tspec),
+        tri_mask=_sds((dims["triplets"],), jnp.bool_, mesh, tspec),
+        node_graph=_sds((dims["nodes"],), jnp.int32, mesh, nspec),
+        n_graphs=dims["graphs"],
+    )
+    targets = _sds((dims["graphs"], cfg.d_out), jnp.float32, mesh,
+                   P(None, None))
+    opt = AdamW(lr=1e-4)
+
+    def fn(params, opt_state, g, y):
+        loss, grads = jax.value_and_grad(DN.train_step_loss)(
+            params, cfg, g, y)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    args = (params_sds, _opt_sds(params_sds, mesh), g_sds, targets)
+    return CellBuild(fn, args, rules, gnn_model_flops(cfg, dims),
+                     donate=(0, 1),
+                     notes=f"padded dims {dims}")
+
+
+# -------------------------------------------------------------------------
+# RecSys
+# -------------------------------------------------------------------------
+
+def _recsys_param_pspec(key: str, leaf, *, shard_rows: bool = True) -> P:
+    nd = len(leaf.shape)
+    if key.endswith("table") or key.endswith("wide") \
+            or key.endswith("item_table"):
+        if shard_rows:
+            return P("model", *([None] * (nd - 1)))  # row-sharded tables
+        return P(*([None] * nd))  # serving: replicated read-only table
+    return P(*([None] * nd))
+
+
+def recsys_model_flops(cfg: RecsysConfig, batch: int, train: bool) -> float:
+    d, f = cfg.embed_dim, cfg.n_sparse
+    flops = 0.0
+    sizes = (f * d,) + cfg.mlp + (1,)
+    flops += 2.0 * sum(a * b for a, b in zip(sizes[:-1], sizes[1:]))
+    if cfg.interaction == "fm":
+        flops += 4.0 * f * d
+    elif cfg.interaction == "cin":
+        h_prev = f
+        for h in cfg.cin_layers:
+            flops += 2.0 * h_prev * f * d * (1 + h)
+            h_prev = h
+    elif cfg.interaction == "self-attn":
+        da = cfg.n_heads * cfg.d_attn
+        flops += cfg.n_attn_layers * (
+            2.0 * f * cfg.embed_dim * da * 4 + 4.0 * f * f * da)
+    elif cfg.interaction == "multi-interest":
+        flops += cfg.capsule_iters * 4.0 * cfg.n_interests * cfg.hist_len * d
+        flops += 4.0 * cfg.n_interests * d   # label-aware scoring per cand
+        flops += 2.0 * d * d * 3             # out MLP per interest (coarse)
+    return batch * flops * (3.0 if train else 1.0)
+
+
+def build_recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                      multi_pod: bool) -> CellBuild:
+    from repro.launch.sharding import recsys_rules
+    cfg: RecsysConfig = spec.config
+    rules = recsys_rules(multi_pod)
+    dp = data_axes(multi_pod)
+    is_mind = cfg.interaction == "multi-interest"
+
+    if is_mind:
+        init = functools.partial(RS.init_mind, cfg=cfg)
+    else:
+        init = functools.partial(
+            {"fm": RS.init_deepfm, "cin": RS.init_xdeepfm,
+             "self-attn": RS.init_autoint}[cfg.interaction], cfg=cfg)
+    params_shapes = jax.eval_shape(init, jax.random.key(0))
+    # training shards table rows (optimizer state scales with rows);
+    # serving replicates the read-only table (<1 GB) so every lookup is
+    # local — a gather from a row-sharded table otherwise all-reduces the
+    # full output across the mesh on every request.
+    train_cell = shape.name == "train_batch"
+    params_sds = _sharded_sds(
+        params_shapes,
+        functools.partial(_recsys_param_pspec, shard_rows=train_cell),
+        mesh)
+    rules = dict(rules, rows="model" if train_cell else None)
+
+    def ctr_args(b, spec_b):
+        m = cfg.multi_hot
+        return (_sds((b, cfg.n_sparse, m), jnp.int32, mesh,
+                     P(spec_b, None, None)),
+                _sds((b, cfg.n_sparse, m), jnp.bool_, mesh,
+                     P(spec_b, None, None)))
+
+    logits_fn = (None if is_mind else
+                 {"fm": RS.deepfm_logits, "cin": RS.xdeepfm_logits,
+                  "self-attn": RS.autoint_logits}[cfg.interaction])
+
+    if shape.name == "train_batch":
+        b = shape["batch"]
+        opt = AdamW(lr=1e-4)
+        if is_mind:
+            n_neg = 1024  # shared sampled negatives
+
+            def fn(params, opt_state, hist, mask, target, negs):
+                def loss_fn(p):
+                    lg = RS.mind_train_logits(p, cfg, hist, mask, target,
+                                              negs)
+                    return RS.sampled_softmax_loss(lg, inbatch=False)
+                loss, grads = jax.value_and_grad(loss_fn)(params)
+                new_p, new_s = opt.update(grads, opt_state, params)
+                return new_p, new_s, loss
+            args = (params_sds, _opt_sds(params_sds, mesh),
+                    _sds((b, cfg.hist_len), jnp.int32, mesh, P(dp, None)),
+                    _sds((b, cfg.hist_len), jnp.bool_, mesh, P(dp, None)),
+                    _sds((b,), jnp.int32, mesh, P(dp)),
+                    _sds((n_neg,), jnp.int32, mesh, P(None)))
+        else:
+            def fn(params, opt_state, ids, mask, labels):
+                def loss_fn(p):
+                    return RS.ctr_loss(logits_fn(p, cfg, ids, mask), labels)
+                loss, grads = jax.value_and_grad(loss_fn)(params)
+                new_p, new_s = opt.update(grads, opt_state, params)
+                return new_p, new_s, loss
+            ids_sds, mask_sds = ctr_args(b, dp)
+            args = (params_sds, _opt_sds(params_sds, mesh), ids_sds,
+                    mask_sds, _sds((b,), jnp.float32, mesh, P(dp)))
+        return CellBuild(fn, args, rules,
+                         recsys_model_flops(cfg, b, True), donate=(0, 1))
+
+    if shape.name in ("serve_p99", "serve_bulk"):
+        b = shape["batch"]
+        if is_mind:
+            n_rerank = 1024
+
+            def fn(params, hist, mask, cand):
+                u = RS.mind_user_interests(params, cfg, hist, mask)
+                c = jnp.take(params["item_table"], cand, axis=0)
+                return jnp.max(jnp.einsum("bkd,cd->bkc", u, c),
+                               axis=1).astype(jnp.float32)
+
+            args = (params_sds,
+                    _sds((b, cfg.hist_len), jnp.int32, mesh, P(dp, None)),
+                    _sds((b, cfg.hist_len), jnp.bool_, mesh, P(dp, None)),
+                    _sds((n_rerank,), jnp.int32, mesh, P(None)))
+            notes = "MIND serve = interests + rerank 1024 candidates"
+        else:
+            def fn(params, ids, mask):
+                return logits_fn(params, cfg, ids, mask)
+            args = (params_sds,) + ctr_args(b, dp)
+            notes = ""
+        return CellBuild(fn, args, rules,
+                         recsys_model_flops(cfg, b, False), notes=notes)
+
+    # retrieval_cand: one query against ~1M candidates
+    c = RETRIEVAL_CAND_PADDED
+    every = ("pod", "data", "model") if multi_pod else ("data", "model")
+    rules = dict(rules, cand=every, rows=None,
+                 batch=None if is_mind else every)
+    if is_mind:
+        def fn(params, hist, mask, cand_ids):
+            return RS.mind_retrieve(params, cfg, hist, mask, cand_ids,
+                                    k=100)
+        args = (params_sds,
+                _sds((1, cfg.hist_len), jnp.int32, mesh, P(None, None)),
+                _sds((1, cfg.hist_len), jnp.bool_, mesh, P(None, None)),
+                _sds((c,), jnp.int32, mesh, P(every)))
+        notes = "ANN-free exact max-interest dot over sharded candidates"
+    else:
+        # CTR retrieval: fixed user fields + per-candidate item fields
+        m = cfg.multi_hot
+
+        def fn(params, ids, mask):
+            scores = logits_fn(params, cfg, ids, mask)
+            return jax.lax.top_k(scores, 100)
+
+        args = (params_sds,
+                _sds((c, cfg.n_sparse, m), jnp.int32, mesh,
+                     P(every, None, None)),
+                _sds((c, cfg.n_sparse, m), jnp.bool_, mesh,
+                     P(every, None, None)))
+        notes = "bulk candidate scoring, batch axis = candidates"
+    return CellBuild(fn, args, rules,
+                     recsys_model_flops(cfg, c, False), notes=notes)
+
+
+# -------------------------------------------------------------------------
+# entry point
+# -------------------------------------------------------------------------
+
+def build_cell(spec: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+               multi_pod: bool, **kw) -> CellBuild:
+    if spec.family == "lm":
+        return build_lm_cell(spec, shape, mesh, multi_pod, **kw)
+    if spec.family == "gnn":
+        return build_gnn_cell(spec, shape, mesh, multi_pod)
+    if spec.family == "recsys":
+        return build_recsys_cell(spec, shape, mesh, multi_pod)
+    raise ValueError(spec.family)
+
+
+def input_specs(arch_id: str, shape_name: str, mesh: Mesh,
+                multi_pod: bool) -> tuple:
+    """ShapeDtypeStruct stand-ins for every model input of one cell."""
+    from repro.configs.registry import get_arch
+    spec = get_arch(arch_id)
+    shape = next(s for s in spec.shapes if s.name == shape_name)
+    return build_cell(spec, shape, mesh, multi_pod).args

@@ -1,0 +1,70 @@
+"""GNN substrate: padded graph batches + segment-op message passing.
+
+JAX has no native sparse message passing — per the kernel taxonomy, the
+scatter/gather over an edge index IS part of the system.  Graphs are
+carried in fixed-size (padded, masked) buffers so every step jits; the
+neighbor sampler (data.graph_sampler) produces these for minibatch
+training on large graphs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+__all__ = ["GraphBatch", "segment_sum", "segment_mean", "segment_softmax"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """Padded graph(s) with triplet structure for directional MP.
+
+    Edge e: src[e] -> dst[e] with length dist[e].
+    Triplet t: (k -> j) then (j -> i); tri_kj/tri_ji are EDGE ids, and
+    angle[t] is the angle between the two edge directions at j.
+    node_graph maps nodes to graph ids for batched readout.
+    """
+
+    node_feat: Array     # (N, F) float — or (N,) int atom numbers
+    edge_src: Array      # (E,) int32
+    edge_dst: Array      # (E,) int32
+    edge_dist: Array     # (E,) float32
+    edge_mask: Array     # (E,) bool
+    tri_kj: Array        # (T,) int32 — edge id of (k->j)
+    tri_ji: Array        # (T,) int32 — edge id of (j->i)
+    tri_angle: Array     # (T,) float32
+    tri_mask: Array      # (T,) bool
+    node_graph: Array    # (N,) int32
+    n_graphs: int = dataclasses.field(metadata=dict(static=True), default=1)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_feat.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.edge_src.shape[0]
+
+
+def segment_sum(data: Array, segment_ids: Array, num_segments: int) -> Array:
+    return jax.ops.segment_sum(data, segment_ids, num_segments)
+
+
+def segment_mean(data: Array, segment_ids: Array, num_segments: int) -> Array:
+    s = jax.ops.segment_sum(data, segment_ids, num_segments)
+    ones = jnp.ones(data.shape[:1], data.dtype)
+    n = jax.ops.segment_sum(ones, segment_ids, num_segments)
+    return s / jnp.maximum(n, 1.0)[..., None]
+
+
+def segment_softmax(logits: Array, segment_ids: Array, num_segments: int
+                    ) -> Array:
+    m = jax.ops.segment_max(logits, segment_ids, num_segments)
+    z = jnp.exp(logits - m[segment_ids])
+    denom = jax.ops.segment_sum(z, segment_ids, num_segments)
+    return z / jnp.maximum(denom[segment_ids], 1e-30)

@@ -1,0 +1,309 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention, SwiGLU.
+
+Pure functions over explicit param pytrees (no framework): ``init_*``
+builds params, ``apply``-style functions consume them.  All activations
+carry logical sharding constraints (repro.launch.sharding) so the same
+code runs on CPU tests and on the 512-chip dry-run meshes.
+
+Attention comes in three flavors matching the assigned shapes:
+  * full causal (train_4k) — plain einsum softmax, scores (B,H,S,S),
+  * chunked/blockwise causal (prefill_32k) — lax.scan over KV blocks with
+    running max/sum (flash-style in pure JAX; no S^2 tensor materialized),
+  * decode (decode_32k / long_500k) — one query step against a KV cache
+    whose sequence axis may be sharded across the mesh; the softmax
+    reductions over the sharded axis lower to all-reduces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+
+Array = jax.Array
+
+
+# -------------------------------------------------------------------------
+# init helpers
+# -------------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# -------------------------------------------------------------------------
+# RMSNorm
+# -------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# -------------------------------------------------------------------------
+# RoPE
+# -------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float) -> Array:
+    return theta ** (-jnp.arange(0, d_head, 2, jnp.float32) / d_head)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, heads, d_head); positions: (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (...,S,D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------------
+# GQA attention
+# -------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qk_norm: bool
+    rope_theta: float
+
+
+def init_attention(key, dims: AttnDims, dtype) -> dict:
+    kq, kk, kv, ko, kn1, kn2 = jax.random.split(key, 6)
+    d, h, kvh, dh = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.d_head
+    p = {
+        "wq": _dense_init(kq, (d, h * dh), dtype),
+        "wk": _dense_init(kk, (d, kvh * dh), dtype),
+        "wv": _dense_init(kv, (d, kvh * dh), dtype),
+        "wo": _dense_init(ko, (h * dh, d), dtype),
+    }
+    if dims.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh, dtype)
+        p["k_norm"] = init_rmsnorm(dh, dtype)
+    return p
+
+
+def _project_qkv(params, dims: AttnDims, x: Array, positions: Array):
+    b, s, _ = x.shape
+    h, kvh, dh = dims.n_heads, dims.n_kv_heads, dims.d_head
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    k = (x @ params["wk"]).reshape(b, s, kvh, dh)
+    v = (x @ params["wv"]).reshape(b, s, kvh, dh)
+    if dims.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = apply_rope(q, positions, dims.rope_theta)
+    k = apply_rope(k, positions, dims.rope_theta)
+    q = constrain(q, "batch", "seq_q", "heads", None)
+    k = constrain(k, "batch", "seq_q", "kv_heads", None)
+    v = constrain(v, "batch", "seq_q", "kv_heads", None)
+    return q, k, v
+
+
+def _gqa_scores(q: Array, k: Array, groups: int) -> Array:
+    """(B,Sq,H,D) x (B,Sk,KV,D) -> (B,KV,G,Sq,Sk), H = KV*G."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, sq, kvh, groups, dh)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k) * (dh ** -0.5)
+
+
+def _gqa_output(probs: Array, v: Array) -> Array:
+    """(B,KV,G,Sq,Sk) x (B,Sk,KV,D) -> (B,Sq,H,D)."""
+    b, kvh, g, sq, sk = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, kvh * g, v.shape[-1])
+
+
+def _chunk_step(qi, kj, vj, m, l, acc, qi_idx, kj_idx, chunk, g, dtype):
+    """One flash block: update running (max, sum, acc) with block (qi, kj)."""
+    sc = _gqa_scores(qi, kj, g).astype(jnp.float32)      # (B,KV,G,C,C)
+    if kj_idx is not None:                               # causal masking
+        qpos = qi_idx * chunk + jnp.arange(chunk)
+        kpos = kj_idx * chunk + jnp.arange(chunk)
+        causal = qpos[:, None] >= kpos[None, :]
+        sc = jnp.where(causal, sc, -jnp.inf)
+    m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    pr = jnp.exp(sc - m_new[..., None])
+    l_new = l * alpha + jnp.sum(pr, axis=-1)
+    acc_new = (acc * alpha[..., None].astype(dtype)
+               + jnp.einsum("bkgqs,bskd->bkgqd", pr.astype(dtype), vj))
+    return m_new, l_new, acc_new
+
+
+def _chunked_causal_attention(qc, kc, vc, dims: AttnDims, chunk: int,
+                              unroll: bool, dtype) -> Array:
+    """qc/kc/vc: (B, n_chunks, C, H|KV, D) -> out (B, S, H*D).
+
+    The flash-attention recurrence in pure JAX: no S x S tensor exists in
+    the HLO.  unroll=True emits static Python loops *skipping acausal
+    blocks entirely* (the dry-run path — accurate cost analysis, ~half the
+    block-pairs); unroll=False uses lax.scan/map (compact HLO for runtime).
+    """
+    b, n_chunks, _, _, dh = qc.shape
+    g = dims.n_heads // dims.n_kv_heads
+    kvh = dims.n_kv_heads
+
+    def init(qi_shape_b=b):
+        m0 = jnp.full((b, kvh, g, chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, chunk), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, chunk, dh), dtype)
+        return m0, l0, a0
+
+    def finalize(m, l, acc):
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(dtype)
+        return jnp.moveaxis(out, 3, 1).reshape(b, chunk, -1)
+
+    if unroll:
+        # remat each block-pair: backward recomputes the (bq x bk) probs
+        # per pair instead of holding every pair's fp32 tile live (cuts
+        # the attention live-set by ~n_chunks).
+        step = jax.checkpoint(functools.partial(
+            _chunk_step, chunk=chunk, g=g, dtype=dtype),
+            static_argnums=(6, 7))
+        outs = []
+        for qi_idx in range(n_chunks):
+            qi = qc[:, qi_idx]
+            m, l, acc = init()
+            for kj_idx in range(qi_idx + 1):     # causal: skip kj > qi
+                m, l, acc = step(qi, kc[:, kj_idx], vc[:, kj_idx],
+                                 m, l, acc, qi_idx, kj_idx)
+            outs.append(finalize(m, l, acc))
+        return jnp.concatenate(outs, axis=1)
+
+    def outer(qi_idx):
+        qi = qc[:, qi_idx]
+
+        def inner(carry, kj_idx):
+            m, l, acc = carry
+            return _chunk_step(qi, kc[:, kj_idx], vc[:, kj_idx],
+                               m, l, acc, qi_idx, kj_idx, chunk, g,
+                               dtype), None
+
+        (m, l, acc), _ = jax.lax.scan(inner, init(), jnp.arange(n_chunks))
+        return finalize(m, l, acc)
+
+    outs = jax.lax.map(outer, jnp.arange(n_chunks))      # (N,B,C,HD)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, n_chunks * chunk, -1)
+
+
+def attention_train(params, dims: AttnDims, x: Array, *, chunk: int = 0,
+                    unroll: bool = False) -> Array:
+    """Causal self-attention for training.
+
+    chunk == 0 (or chunk >= S): reference full-softmax path (small models,
+    oracle for tests).  Otherwise the blockwise flash-style path — the
+    production configuration for train_4k and up.
+    """
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(params, dims, x, positions)
+    g = dims.n_heads // dims.n_kv_heads
+
+    if chunk and chunk < s:
+        assert s % chunk == 0, (s, chunk)
+        n = s // chunk
+        qc = q.reshape(b, n, chunk, dims.n_heads, dims.d_head)
+        kc = k.reshape(b, n, chunk, dims.n_kv_heads, dims.d_head)
+        vc = v.reshape(b, n, chunk, dims.n_kv_heads, dims.d_head)
+        out = _chunked_causal_attention(qc, kc, vc, dims, chunk, unroll,
+                                        x.dtype)
+    else:
+        scores = _gqa_scores(q, k, g).astype(jnp.float32)
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = _gqa_output(probs, v).reshape(b, s, -1)
+    out = out @ params["wo"]
+    return constrain(out, "batch", "seq", "embed")
+
+
+def attention_prefill_chunked(params, dims: AttnDims, x: Array,
+                              chunk: int = 2048, unroll: bool = False
+                              ) -> tuple[Array, Array, Array]:
+    """Blockwise causal attention returning (out, K, V) to seed the cache."""
+    b, s, _ = x.shape
+    assert s % chunk == 0, (s, chunk)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(params, dims, x, positions)
+    n_chunks = s // chunk
+    dh = dims.d_head
+
+    qc = q.reshape(b, n_chunks, chunk, dims.n_heads, dh)
+    kc = k.reshape(b, n_chunks, chunk, dims.n_kv_heads, dh)
+    vc = v.reshape(b, n_chunks, chunk, dims.n_kv_heads, dh)
+    out = _chunked_causal_attention(qc, kc, vc, dims, chunk, unroll,
+                                    x.dtype)
+    out = out @ params["wo"]
+    return constrain(out, "batch", "seq", "embed"), k, v
+
+
+def attention_decode(params, dims: AttnDims, x: Array,
+                     k_cache: Array, v_cache: Array,
+                     cache_len: Array) -> tuple[Array, Array, Array]:
+    """One decode step: x (B,1,D) against cache (B,S,KV,Dh).
+
+    The cache sequence axis may be sharded ("kv_seq"); max/sum reductions
+    over it become all-reduces under GSPMD — the fork-join join of the
+    serving model.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cache_len, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, dims, x, positions)
+
+    # write the new KV at cache_len (static ring-buffer style update)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), cache_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), cache_len, axis=1)
+    k_cache = constrain(k_cache, "kv_batch", "kv_seq", "kv_heads", None)
+    v_cache = constrain(v_cache, "kv_batch", "kv_seq", "kv_heads", None)
+
+    g = dims.n_heads // dims.n_kv_heads
+    scores = _gqa_scores(q, k_cache, g).astype(jnp.float32)  # (B,KV,G,1,S)
+    valid = jnp.arange(k_cache.shape[1]) <= cache_len
+    scores = jnp.where(valid[None, None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_output(probs, v_cache).reshape(b, 1, -1)
+    out = out @ params["wo"]
+    return constrain(out, "batch", None, "embed"), k_cache, v_cache
+
+
+# -------------------------------------------------------------------------
+# SwiGLU MLP
+# -------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": _dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": _dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp_swiglu(params: dict, x: Array) -> Array:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = constrain(h, "batch", "seq_q", "ffn")
+    out = h @ params["w_down"]
+    return constrain(out, "batch", "seq", "embed")

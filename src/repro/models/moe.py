@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded scatter
+dispatch (GShard/Switch lineage), expert-parallel over the ``model`` axis.
+
+Dispatch is scatter-based rather than one-hot-einsum based: tokens are
+assigned slot positions inside each expert's capacity buffer via a
+per-expert running count (cumsum over a small (S*k, E) one-hot), then
+scattered into an (E, C, d) buffer.  This never materializes the
+(S, E, C) dispatch tensor — the buffer is the only intermediate, and with
+E sharded over ``model`` and tokens sharded over ``data`` the scatter/gather
+pair lowers to the expected all_to_all exchange.
+
+Padding experts (for even sharding, e.g. granite's 40 -> 48) are masked to
+-inf in the router so they receive zero probability mass.
+
+The fork-join view (DESIGN.md §5): the dispatch fan-out and the combine
+fan-in are exactly the paper's broker broadcast/merge; expert hot-spotting
+under Zipfian routing is the disk-cache imbalance; the capacity factor is
+the knob that trades the H_E straggler tax against dropped tokens.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoESpec
+from repro.launch.sharding import constrain
+from repro.models.layers import _dense_init
+
+Array = jax.Array
+
+
+def init_moe(key, d_model: int, spec: MoESpec, dtype) -> dict:
+    e = spec.n_experts_padded or spec.n_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(kr, (d_model, e), jnp.float32, scale=0.02),
+        "w_gate": _dense_init(kg, (e, d_model, spec.d_expert), dtype),
+        "w_up": _dense_init(ku, (e, d_model, spec.d_expert), dtype),
+        "w_down": _dense_init(kd, (e, spec.d_expert, d_model), dtype),
+    }
+
+
+def _capacity(s_tokens: int, spec: MoESpec) -> int:
+    e = spec.n_experts_padded or spec.n_experts
+    c = int(s_tokens * spec.top_k * spec.capacity_factor / e) + 1
+    return max(c, 1)
+
+
+def moe_ffn(params: dict, spec: MoESpec, x: Array) -> tuple[Array, Array]:
+    """x: (B, S, d) -> (same, aux_loss).  Routing group = one batch row."""
+    b, s, d = x.shape
+    e = spec.n_experts_padded or spec.n_experts
+    k = spec.top_k
+    c = _capacity(s, spec)
+
+    logits = (x.astype(jnp.float32) @ params["router"])          # (B,S,E)
+    if e != spec.n_experts:
+        pad_mask = jnp.arange(e) >= spec.n_experts
+        logits = jnp.where(pad_mask, -jnp.inf, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                       # (B,S,k)
+    top_p = top_p / jnp.maximum(
+        jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * P_e
+    density = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    router_prob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * router_prob) * e
+
+    tok = jnp.repeat(jnp.arange(s), k)
+
+    def route_one(x_row, e_row, p_row):
+        """One routing group: x (S,d) -> slot-major buffer + inverse map.
+
+        Dispatch is expressed SLOT-MAJOR: tok_map (E,C) holds the token id
+        owning each expert slot (park = S for empty/dropped), so filling
+        the buffer is a plain gather `x[tok_map]`.  Under expert-parallel
+        sharding this keeps the dispatch collective-free (each expert
+        shard gathers only its own slots) and the combine a scatter-add
+        whose cross-shard part is a small (S,d) psum — versus the naive
+        token-major scatter/gather pair that makes GSPMD all-gather the
+        whole (E,C,d) buffer on both sides (measured 14.6 GB/step/device
+        on granite train_4k; see EXPERIMENTS §Perf).
+        """
+        ef = e_row.reshape(-1)                                   # (S*k,)
+        pf = p_row.reshape(-1)
+        onehot = jax.nn.one_hot(ef, e, dtype=jnp.int32)          # (S*k,E)
+        pos = jnp.cumsum(onehot, axis=0) - onehot                # exclusive
+        slot = jnp.take_along_axis(pos, ef[:, None], axis=1)[:, 0]
+        keep = slot < c
+        ef_park = jnp.where(keep, ef, e)       # dropped -> padded row e
+        slot = jnp.minimum(slot, c - 1)
+        tok_map = jnp.full((e + 1, c), s, jnp.int32)
+        tok_map = tok_map.at[ef_park, slot].set(tok)[:e]         # (E,C)
+        w_map = jnp.zeros((e + 1, c), jnp.float32)
+        w_map = w_map.at[ef_park, slot].set(pf)[:e]              # (E,C)
+        x_pad = jnp.concatenate(
+            [x_row, jnp.zeros((1, d), x_row.dtype)], axis=0)
+        return x_pad[tok_map], tok_map, w_map
+
+    buf, tok_map, w_map = jax.vmap(route_one)(x, top_e, top_p)
+    buf = constrain(buf, "batch", "experts", None, None)
+
+    h = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    y = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    y = constrain(y, "batch", "experts", None, None)
+
+    def combine_one(y_b, tok_map_b, w_b):
+        z = jnp.zeros((s + 1, d), y_b.dtype)                     # row s = park
+        z = z.at[tok_map_b.reshape(-1)].add(
+            y_b.reshape(-1, d) * w_b.reshape(-1, 1).astype(y_b.dtype))
+        return z[:s]
+
+    out = jax.vmap(combine_one)(y, tok_map, w_map)
+    return constrain(out, "batch", "seq", "embed"), aux

@@ -1,0 +1,340 @@
+"""RecSys architectures: DeepFM, xDeepFM (CIN), AutoInt, MIND.
+
+The shared substrate is the huge sparse embedding layer: one stacked table
+(total_rows, D) with per-field offsets (DLRM layout), row-sharded over the
+``model`` mesh axis.  JAX has no native EmbeddingBag — lookup is
+``jnp.take`` + mean over the multi-hot axis (the masked-mean formulation of
+segment_sum for fixed bag width), which IS the system's embedding-bag op;
+the Pallas kernel in repro.kernels.embedding_bag is the fused TPU version.
+
+Fork-join view (DESIGN.md §5): a row-sharded lookup forks one query across
+table shards and joins on the gather — precisely the paper's index-server
+pattern, with Zipf-skewed key popularity playing the posting-list role.
+
+Interactions:
+  * DeepFM  — FM pairwise term via the 0.5*((sum v)^2 - sum v^2) identity
+              + deep MLP (arXiv:1703.04247)
+  * xDeepFM — Compressed Interaction Network, explicit vector-wise crosses
+              (arXiv:1803.05170)
+  * AutoInt — multi-head self-attention over field embeddings
+              (arXiv:1810.11921)
+  * MIND    — multi-interest capsules with dynamic routing over the user
+              behavior sequence + label-aware attention (arXiv:1904.08030)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+from repro.launch.sharding import constrain
+from repro.models.layers import _dense_init
+
+Array = jax.Array
+
+
+# -------------------------------------------------------------------------
+# Embedding substrate
+# -------------------------------------------------------------------------
+
+def field_offsets(cfg: RecsysConfig) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(cfg.field_vocabs)]).astype(np.int64)
+
+
+def padded_rows(n: int, multiple: int = 2048) -> int:
+    """Round table rows up for even row-sharding over the model axis."""
+    return n + (-n) % multiple
+
+
+def init_embedding(key, cfg: RecsysConfig, dim: Optional[int] = None) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    dim = dim or cfg.embed_dim
+    rows = padded_rows(int(sum(cfg.field_vocabs)))
+    k1, k2 = jax.random.split(key)
+    return {
+        "table": _dense_init(k1, (rows, dim), dt, scale=0.01),
+        "wide": _dense_init(k2, (rows, 1), dt, scale=0.01),
+    }
+
+
+def embedding_bag(table: Array, ids: Array, mask: Array) -> Array:
+    """(rows, D) x (B, F, M) multi-hot ids -> (B, F, D) mean-pooled.
+
+    ids are already globalized (field offset added).  Masked mean over the
+    bag axis M — torch.nn.EmbeddingBag(mode='mean') semantics.
+    """
+    table = constrain(table, "rows", None)
+    vecs = jnp.take(table, ids, axis=0)                 # (B, F, M, D)
+    m = mask[..., None].astype(vecs.dtype)
+    s = jnp.sum(vecs * m, axis=2)
+    return s / jnp.maximum(jnp.sum(m, axis=2), 1.0)
+
+
+def _mlp_init(key, sizes, dt):
+    ws = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k = jax.random.fold_in(key, i)
+        ws.append({"w": _dense_init(k, (a, b), dt),
+                   "b": jnp.zeros((b,), dt)})
+    return ws
+
+
+def _mlp_apply(ws, x, final_act: bool = False):
+    for i, layer in enumerate(ws):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(ws) - 1 or final_act:
+            x = jax.nn.relu(x)
+        x = constrain(x, "batch", "mlp") if x.ndim == 2 else x
+    return x
+
+
+# -------------------------------------------------------------------------
+# DeepFM
+# -------------------------------------------------------------------------
+
+def init_deepfm(key, cfg: RecsysConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.dtype)
+    sizes = (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp + (1,)
+    return {"embedding": init_embedding(k1, cfg),
+            "mlp": _mlp_init(k2, sizes, dt)}
+
+
+def fm_interaction(v: Array) -> Array:
+    """(B, F, D) -> (B,) second-order FM term."""
+    s = jnp.sum(v, axis=1)
+    sq = jnp.sum(v * v, axis=1)
+    return 0.5 * jnp.sum(s * s - sq, axis=-1)
+
+
+def deepfm_logits(params, cfg: RecsysConfig, ids: Array, mask: Array
+                  ) -> Array:
+    v = embedding_bag(params["embedding"]["table"], ids, mask)
+    v = constrain(v, "batch", "fields", "embed")
+    wide = jnp.sum(
+        embedding_bag(params["embedding"]["wide"], ids, mask), axis=(1, 2))
+    fm = fm_interaction(v)
+    deep = _mlp_apply(params["mlp"], v.reshape(v.shape[0], -1))[:, 0]
+    return (wide + fm + deep).astype(jnp.float32)
+
+
+# -------------------------------------------------------------------------
+# xDeepFM (CIN)
+# -------------------------------------------------------------------------
+
+def init_xdeepfm(key, cfg: RecsysConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    cin = []
+    h_prev = cfg.n_sparse
+    for i, h in enumerate(cfg.cin_layers):
+        cin.append(_dense_init(jax.random.fold_in(k3, i),
+                               (h_prev * cfg.n_sparse, h), dt))
+        h_prev = h
+    sizes = (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp + (1,)
+    return {
+        "embedding": init_embedding(k1, cfg),
+        "mlp": _mlp_init(k2, sizes, dt),
+        "cin": cin,
+        "cin_out": _dense_init(k4, (sum(cfg.cin_layers), 1), dt),
+    }
+
+
+def cin_interaction(params, cfg: RecsysConfig, v: Array) -> Array:
+    """Compressed Interaction Network: (B, F, D) -> (B,)."""
+    x0 = v                                             # (B, m, D)
+    xk = v
+    pooled = []
+    for w in params["cin"]:
+        outer = jnp.einsum("bhd,bmd->bhmd", xk, x0)    # (B, Hk, m, D)
+        b, hk, m, d = outer.shape
+        xk = jnp.einsum("bhmd,hmo->bod",
+                        outer, w.reshape(hk, m, -1))   # (B, Hk+1, D)
+        pooled.append(jnp.sum(xk, axis=-1))            # (B, Hk+1)
+    p = jnp.concatenate(pooled, axis=-1)
+    return (p @ params["cin_out"])[:, 0]
+
+
+def xdeepfm_logits(params, cfg: RecsysConfig, ids: Array, mask: Array
+                   ) -> Array:
+    v = embedding_bag(params["embedding"]["table"], ids, mask)
+    v = constrain(v, "batch", "fields", "embed")
+    wide = jnp.sum(
+        embedding_bag(params["embedding"]["wide"], ids, mask), axis=(1, 2))
+    cin = cin_interaction(params, cfg, v)
+    deep = _mlp_apply(params["mlp"], v.reshape(v.shape[0], -1))[:, 0]
+    return (wide + cin + deep).astype(jnp.float32)
+
+
+# -------------------------------------------------------------------------
+# AutoInt
+# -------------------------------------------------------------------------
+
+def init_autoint(key, cfg: RecsysConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_attn_total = cfg.n_heads * cfg.d_attn
+    layers = []
+    d_in = cfg.embed_dim
+    for i in range(cfg.n_attn_layers):
+        k = jax.random.fold_in(k2, i)
+        kq, kk, kv, kr = jax.random.split(k, 4)
+        layers.append({
+            "wq": _dense_init(kq, (d_in, d_attn_total), dt),
+            "wk": _dense_init(kk, (d_in, d_attn_total), dt),
+            "wv": _dense_init(kv, (d_in, d_attn_total), dt),
+            "w_res": _dense_init(kr, (d_in, d_attn_total), dt),
+        })
+        d_in = d_attn_total
+    return {
+        "embedding": init_embedding(k1, cfg),
+        "layers": layers,
+        "out": _dense_init(k3, (cfg.n_sparse * d_in, 1), dt),
+    }
+
+
+def autoint_logits(params, cfg: RecsysConfig, ids: Array, mask: Array
+                   ) -> Array:
+    v = embedding_bag(params["embedding"]["table"], ids, mask)
+    x = constrain(v, "batch", "fields", "embed")       # (B, F, D)
+    for lp in params["layers"]:
+        b, f, d = x.shape
+        q = (x @ lp["wq"]).reshape(b, f, cfg.n_heads, cfg.d_attn)
+        k = (x @ lp["wk"]).reshape(b, f, cfg.n_heads, cfg.d_attn)
+        vv = (x @ lp["wv"]).reshape(b, f, cfg.n_heads, cfg.d_attn)
+        att = jax.nn.softmax(
+            jnp.einsum("bfhd,bghd->bhfg", q, k) / np.sqrt(cfg.d_attn), -1)
+        o = jnp.einsum("bhfg,bghd->bfhd", att, vv).reshape(b, f, -1)
+        x = jax.nn.relu(o + x @ lp["w_res"])
+    wide = jnp.sum(
+        embedding_bag(params["embedding"]["wide"], ids, mask), axis=(1, 2))
+    return (wide + (x.reshape(x.shape[0], -1) @ params["out"])[:, 0]
+            ).astype(jnp.float32)
+
+
+# -------------------------------------------------------------------------
+# MIND (multi-interest capsules)
+# -------------------------------------------------------------------------
+
+def init_mind(key, cfg: RecsysConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "item_table": _dense_init(
+            k1, (padded_rows(cfg.item_vocab), cfg.embed_dim), dt,
+            scale=0.01),
+        "bilinear_s": _dense_init(k2, (cfg.embed_dim, cfg.embed_dim), dt),
+        "out_mlp": _mlp_init(k3, (cfg.embed_dim, cfg.embed_dim * 2,
+                                  cfg.embed_dim), dt),
+    }
+
+
+def _squash(x: Array, axis: int = -1) -> Array:
+    n2 = jnp.sum(x * x, axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_user_interests(params, cfg: RecsysConfig, hist_ids: Array,
+                        hist_mask: Array) -> Array:
+    """Behavior history (B, H) -> interest capsules (B, K, D).
+
+    B2I dynamic routing: logits b (B, K, H) updated over capsule_iters;
+    routing weights do NOT receive gradients through the iterations
+    (stop_gradient, per the paper's routing).
+    """
+    table = constrain(params["item_table"], "rows", None)
+    e = jnp.take(table, hist_ids, axis=0)              # (B, H, D)
+    e = e * hist_mask[..., None].astype(e.dtype)
+    es = e @ params["bilinear_s"]                      # shared bilinear map
+    b_init = jnp.zeros((e.shape[0], cfg.n_interests, e.shape[1]),
+                       jnp.float32)
+
+    def routing_iter(b_logits):
+        w = jax.nn.softmax(b_logits, axis=1)           # over capsules
+        w = w * hist_mask[:, None, :]
+        z = jnp.einsum("bkh,bhd->bkd", w.astype(es.dtype),
+                       jax.lax.stop_gradient(es))
+        u = _squash(z)
+        delta = jnp.einsum("bkd,bhd->bkh", u,
+                           jax.lax.stop_gradient(es)).astype(jnp.float32)
+        return b_logits + delta
+
+    b_final = b_init
+    for _ in range(cfg.capsule_iters):                 # 3 iters: unrolled
+        b_final = routing_iter(b_final)
+    w = jax.nn.softmax(b_final, axis=1) * hist_mask[:, None, :]
+    u = _squash(jnp.einsum("bkh,bhd->bkd", w.astype(es.dtype), es))
+    u = _mlp_apply(params["out_mlp"], u)
+    return constrain(u, "batch", None, "embed")        # (B, K, D)
+
+
+def _label_aware_logits(u: Array, cand: Array) -> Array:
+    """Label-aware attention score of interests u (B,K,D) against
+    candidates cand (B,K-broadcastable,C,D) or (C,D) WITHOUT materializing
+    a (B,C,D) attended-user tensor: since the final score is
+    <att-weighted u, t>, it equals sum_k att[b,k,c] * <u[b,k], t[c]>."""
+    scores = jnp.einsum("bkd,cd->bkc", u, cand).astype(jnp.float32)
+    att = jax.nn.softmax(scores ** 2, axis=1)          # pow-2, per paper
+    return jnp.sum(att * scores, axis=1)               # (B, C)
+
+
+def mind_train_logits(params, cfg: RecsysConfig, hist_ids: Array,
+                      hist_mask: Array, target_ids: Array,
+                      neg_ids: Optional[Array] = None) -> Array:
+    """Sampled-softmax logits: column 0 = positive, rest = shared sampled
+    negatives (B, 1 + N).  With neg_ids None, falls back to in-batch
+    negatives (B, B) with the diagonal positive."""
+    u = mind_user_interests(params, cfg, hist_ids, hist_mask)   # (B, K, D)
+    if neg_ids is None:
+        t = jnp.take(params["item_table"], target_ids, axis=0)
+        logits = _label_aware_logits(u, t)
+        return constrain(logits, "batch", "cand")
+    pos = jnp.take(params["item_table"], target_ids, axis=0)   # (B, D)
+    neg = jnp.take(params["item_table"], neg_ids, axis=0)      # (N, D)
+    pos_scores = jnp.einsum("bkd,bd->bk", u, pos).astype(jnp.float32)
+    pos_att = jax.nn.softmax(pos_scores ** 2, axis=1)
+    pos_logit = jnp.sum(pos_att * pos_scores, axis=1)[:, None]
+    neg_logits = _label_aware_logits(u, neg)                   # (B, N)
+    out = jnp.concatenate([pos_logit, neg_logits], axis=1)
+    return constrain(out, "batch", "cand")
+
+
+def mind_retrieve(params, cfg: RecsysConfig, hist_ids: Array,
+                  hist_mask: Array, cand_ids: Array, k: int = 100
+                  ) -> tuple[Array, Array]:
+    """Score one user's interests against a candidate set; top-k.
+
+    cand_ids (C,) with C up to 10^6 — a batched matmul over the sharded
+    candidate axis, NOT a loop (retrieval_cand cell).
+    """
+    u = mind_user_interests(params, cfg, hist_ids, hist_mask)   # (B, K, D)
+    cand = jnp.take(params["item_table"], cand_ids, axis=0)     # (C, D)
+    cand = constrain(cand, "cand", None)
+    scores = jnp.einsum("bkd,cd->bkc", u, cand)
+    best = jnp.max(scores, axis=1).astype(jnp.float32)          # (B, C)
+    best = constrain(best, "batch", "cand")
+    return jax.lax.top_k(best, k)
+
+
+# -------------------------------------------------------------------------
+# Shared losses
+# -------------------------------------------------------------------------
+
+def ctr_loss(logits: Array, labels: Array) -> Array:
+    """Binary cross-entropy with logits."""
+    z = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def sampled_softmax_loss(logits: Array, *, inbatch: bool = True) -> Array:
+    """inbatch=True: (B,B) logits, diagonal positive.  Otherwise (B,1+N)
+    sampled-negative logits with the positive in column 0."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    if inbatch:
+        return -jnp.mean(jnp.diagonal(logp))
+    return -jnp.mean(logp[:, 0])

@@ -1,0 +1,181 @@
+"""Roofline-term extraction from compiled dry-run artifacts (§Roofline).
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+`compiled.cost_analysis()` yields per-device FLOPs/bytes (the module is
+the per-device SPMD program), so global = per_device x chips.  Collective
+bytes are NOT in cost_analysis: we parse the post-optimization HLO and sum
+the RESULT-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (a standard, conservative proxy for bytes
+crossing links per device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+import numpy as np
+
+from repro.core.planner import TPU_V5E, HardwareSpec, RooflineTerms
+
+__all__ = ["CollectiveStats", "parse_collectives", "roofline_from_compiled",
+           "CellRoofline"]
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes per collective kind over an HLO module.
+
+    Skips the paired ``-done`` ops (async collectives appear as
+    start/done; the start op carries the shape).
+    """
+    bytes_by, count_by = {}, {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        nbytes = n * _DTYPE_BYTES[dtype]
+        bytes_by[kind] = bytes_by.get(kind, 0.0) + nbytes
+        count_by[kind] = count_by.get(kind, 0) + 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_global: float
+    bytes_global: float
+    collective_bytes_global: float
+    terms: RooflineTerms
+    model_flops: float             # 6*N*D (or family analogue)
+    memory_analysis: Dict[str, float]
+    collectives: Dict[str, float]
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / max(self.flops_global, 1.0)
+
+    @property
+    def bound(self) -> str:
+        return self.terms.bound
+
+    @property
+    def roofline_fraction(self) -> float:
+        """dominant-term share of the serial step: how close the step is
+        to the single-resource roofline (1.0 = perfectly bound by one
+        engine, lower = time wasted on non-dominant engines)."""
+        t = self.terms
+        tot = t.compute_s + t.memory_s + t.collective_s
+        return t.step_time_lower_bound / max(tot, 1e-30)
+
+    def to_json(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_chips": self.n_chips,
+            "flops_global": self.flops_global,
+            "bytes_global": self.bytes_global,
+            "collective_bytes_global": self.collective_bytes_global,
+            "compute_s": self.terms.compute_s,
+            "memory_s": self.terms.memory_s,
+            "collective_s": self.terms.collective_s,
+            "bound": self.bound,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "memory_analysis": self.memory_analysis,
+            "collectives": self.collectives,
+        }
+
+
+def _costs(compiled) -> tuple[float, float, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(compiled.as_text()).total_bytes
+    return flops, nbytes, coll
+
+
+def roofline_from_compiled(
+    *, arch: str, shape: str, mesh_name: str, n_chips: int,
+    compiled, model_flops: float,
+    extrapolate=None,
+    hw: HardwareSpec = TPU_V5E,
+) -> CellRoofline:
+    """extrapolate: optional (compiled_unroll2, n_layers).  XLA counts a
+    while body once; the unroll=2 variant contains one extra body copy, so
+    cost_true = cost1 + (cost2 - cost1) * (n_layers - 1)."""
+    flops_dev, bytes_dev, coll_dev = _costs(compiled)
+    if extrapolate is not None:
+        compiled2, n_layers = extrapolate
+        f2, b2, c2 = _costs(compiled2)
+        flops_dev += max(f2 - flops_dev, 0.0) * (n_layers - 1)
+        bytes_dev += max(b2 - bytes_dev, 0.0) * (n_layers - 1)
+        coll_dev += max(c2 - coll_dev, 0.0) * (n_layers - 1)
+
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    mem = compiled.memory_analysis()
+    mem_summary = {
+        "argument_bytes": float(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": float(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": float(getattr(mem, "temp_size_in_bytes", 0)),
+        "peak_bytes": float(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)),
+    }
+
+    flops_global = flops_dev * n_chips
+    bytes_global = bytes_dev * n_chips
+    coll_global = coll_dev * n_chips
+
+    terms = RooflineTerms(
+        compute_s=flops_global / (n_chips * hw.peak_flops),
+        memory_s=bytes_global / (n_chips * hw.hbm_bandwidth),
+        collective_s=coll_global / (n_chips * hw.ici_bandwidth),
+    )
+    return CellRoofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_chips=n_chips,
+        flops_global=flops_global, bytes_global=bytes_global,
+        collective_bytes_global=coll_global, terms=terms,
+        model_flops=model_flops, memory_analysis=mem_summary,
+        collectives={f"{k}_bytes": v for k, v in coll.bytes_by_kind.items()}
+        | {f"{k}_count": float(v) for k, v in coll.count_by_kind.items()},
+    )

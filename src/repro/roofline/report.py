@@ -1,0 +1,68 @@
+"""Render the §Roofline table + §Dry-run summary from the JSON records."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(*dirs):
+    recs = {}
+    for d in dirs:
+        for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+            r = json.load(open(f))
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def roofline_table(recs, mesh: str = "single") -> str:
+    rows = [r for r in recs.values() if r["mesh"] == mesh]
+    out = ["| arch | shape | compute_s | memory_s | collective_s | bound |"
+           " MODEL/HLO | peak GB/dev | sentence |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        peak = (r["memory_analysis"]["argument_bytes"]
+                + r["memory_analysis"]["temp_bytes"]) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['bound']} | {min(r['useful_flops_ratio'], 9.99):.2f} | "
+            f"{peak:.1f} | {_advice(r)} |")
+    return "\n".join(out)
+
+
+def _advice(r) -> str:
+    b = r["bound"]
+    if b == "collective":
+        return ("cut bytes on the join path (sharding/all-to-all) or "
+                "overlap with compute")
+    if b == "memory":
+        return ("raise arithmetic intensity: fuse, cut remat re-reads, "
+                "larger per-chip tiles")
+    return "compute-bound: already near the MXU roofline; check MODEL/HLO"
+
+
+def dryrun_summary(recs) -> str:
+    single = [r for r in recs.values() if r["mesh"] == "single"]
+    multi = [r for r in recs.values() if r["mesh"] == "multi"]
+    out = [f"single-pod cells compiled: {len(single)}/40",
+           f"multi-pod cells compiled:  {len(multi)}/40"]
+    worst = sorted(single, key=lambda r: -(
+        r["memory_analysis"]["argument_bytes"]
+        + r["memory_analysis"]["temp_bytes"]))[:5]
+    out.append("largest per-device footprints (args+temp):")
+    for r in worst:
+        gb = (r["memory_analysis"]["argument_bytes"]
+              + r["memory_analysis"]["temp_bytes"]) / 2**30
+        out.append(f"  {r['arch']} x {r['shape']}: {gb:.1f} GB")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    dirs = sys.argv[1:] or ["experiments/dryrun_v2", "experiments/perf"]
+    recs = load_records(*dirs)
+    print(dryrun_summary(recs))
+    print()
+    print(roofline_table(recs))

@@ -1,0 +1,91 @@
+"""Batched LM serving engine: prefill + decode with a shared KV pool.
+
+A minimal production-shaped serving loop for the LM archs: requests carry
+prompts; the engine prefills into a fixed-slot KV cache and decodes all
+active slots in lockstep (continuous batching at the step level).  The
+capacity model from repro.core.planner sizes how many of these engines a
+fleet needs — examples/plan_llm_serving.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models import transformer as T
+
+__all__ = ["LMServer"]
+
+
+@dataclasses.dataclass
+class _Slot:
+    req_id: int = -1
+    remaining: int = 0
+    tokens: list = dataclasses.field(default_factory=list)
+
+
+class LMServer:
+    """Fixed-slot continuous-batching decode server (greedy sampling)."""
+
+    def __init__(self, cfg: LMConfig, params, *, slots: int = 4,
+                 max_seq: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.slots = [_Slot() for _ in range(slots)]
+        self.cache = T.init_kv_cache(cfg, slots, max_seq)
+        self._decode = jax.jit(
+            lambda p, t, c: T.decode_step(p, cfg, t, c))
+        self.completed: List[dict] = []
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s.remaining <= 0:
+                return i
+        return None
+
+    def admit(self, req_id: int, prompt: np.ndarray, max_new: int) -> bool:
+        """Prefill a prompt into a free slot; False if server full."""
+        i = self._free_slot()
+        if i is None:
+            return False
+        # per-slot prefill (single-row) seeds that slot's cache lines
+        logits, cache = T.prefill(self.params, self.cfg,
+                                  jnp.asarray(prompt[None, :]),
+                                  chunk=min(len(prompt), 8))
+        s = len(prompt)
+        self.cache["k"] = self.cache["k"].at[:, i, :s].set(cache["k"][:, 0])
+        self.cache["v"] = self.cache["v"].at[:, i, :s].set(cache["v"][:, 0])
+        nxt = int(jnp.argmax(logits[0, -1]))
+        self.slots[i] = _Slot(req_id=req_id, remaining=max_new,
+                              tokens=list(prompt) + [nxt])
+        return True
+
+    def step(self) -> int:
+        """One lockstep decode over all active slots; returns #active."""
+        active = [i for i, s in enumerate(self.slots) if s.remaining > 0]
+        if not active:
+            return 0
+        # lockstep cache_len: the maximum prompt+generated so far; slots
+        # use causal masking via cache length (single shared len keeps the
+        # engine simple; a per-slot length mask is the production variant)
+        cur = jnp.asarray([self.slots[i].tokens[-1] if s.remaining > 0
+                           else 0 for i, s in enumerate(self.slots)],
+                          jnp.int32)[:, None]
+        self.cache["len"] = jnp.asarray(
+            max(len(self.slots[i].tokens) for i in active) - 1, jnp.int32)
+        logits, self.cache = self._decode(self.params, cur, self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i in active:
+            s = self.slots[i]
+            s.tokens.append(int(nxt[i]))
+            s.remaining -= 1
+            if s.remaining == 0:
+                self.completed.append(
+                    dict(req_id=s.req_id, tokens=s.tokens))
+        return len(active)

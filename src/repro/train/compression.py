@@ -1,0 +1,63 @@
+"""Gradient compression for data-parallel all-reduce, with error feedback.
+
+At 1000+ nodes the DP all-reduce of gradients is the dominant collective;
+compressing it (bf16, or int8 with per-tensor scale) cuts its roofline
+collective term 2-4x.  Biased compressors accumulate the quantization
+residual locally (error feedback, Karimireddy et al. 2019) so SGD still
+converges — tests assert the residual bound and end-to-end convergence.
+
+Usage: wrap grads before the psum/optimizer:  g_c, state = compress(g, state)
+(in pjit mode the all-reduce is implicit; compressing the tensor that
+crosses the collective has the same byte effect and is what the roofline
+measures).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    mode: str = "bf16"   # "none" | "bf16" | "int8"
+
+    def init(self, grads):
+        if self.mode == "none":
+            return ()
+        return jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def compress(self, grads, residual):
+        """Returns (compressed-then-decompressed grads, new residual).
+
+        The returned grads are what the collective would carry (already
+        dequantized for the optimizer); the residual holds the error to be
+        re-added next step.
+        """
+        if self.mode == "none":
+            return grads, residual
+
+        def one(g, r):
+            x = g.astype(jnp.float32) + r
+            if self.mode == "bf16":
+                q = x.astype(jnp.bfloat16).astype(jnp.float32)
+            elif self.mode == "int8":
+                scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+                q = jnp.round(x / scale).clip(-127, 127) * scale
+            else:
+                raise ValueError(self.mode)
+            return q.astype(g.dtype), x - q
+
+        flat = jax.tree.map(one, grads, residual)
+        comp = jax.tree.map(lambda t: t[0], flat,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        res = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return comp, res
+
+    def wire_bytes_per_element(self) -> float:
+        return {"none": 4.0, "bf16": 2.0, "int8": 1.0}[self.mode]

@@ -1,0 +1,118 @@
+"""Optimizers (no external deps): AdamW, SGD-momentum, schedules, clipping.
+
+States are pytrees mirroring the param tree, so they shard identically to
+the params under pjit (fp32 master moments, bf16 params — the standard
+mixed-precision layout; see launch.dryrun param shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: object
+    v: object
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[Array], Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamWState, params):
+        grads = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state.m, grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2)
+            * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr = self._lr(step)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step=step, m=m, v=v)
+
+
+class SGDState(NamedTuple):
+    step: Array
+    momentum: object
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: Callable[[Array], Array] | float = 1e-2
+    momentum: float = 0.9
+    clip_norm: float = 1.0
+
+    def init(self, params) -> SGDState:
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(self, grads, state: SGDState, params):
+        grads = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        mom = jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            state.momentum, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, mom)
+        return new_params, SGDState(step=step, momentum=mom)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

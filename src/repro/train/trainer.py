@@ -1,0 +1,67 @@
+"""Train-step builder: loss -> grads -> (compressed) update, with
+microbatch gradient accumulation under lax.scan.
+
+Accumulation serves two purposes at scale: it fits large global batches in
+HBM, and it lets XLA overlap each microbatch's gradient reduce-scatter
+with the next microbatch's compute (the standard latency-hiding trick —
+DESIGN.md §4).  The whole step is one jittable function, so the dry-run
+lowers exactly what production would run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.compression import Compressor
+from repro.train.optimizer import AdamW
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStep:
+    loss_fn: Callable            # (params, batch) -> scalar loss
+    optimizer: object = None     # AdamW-like; default AdamW()
+    microbatches: int = 1
+    compressor: Optional[Compressor] = None
+
+    def init_state(self, params):
+        opt = self.optimizer or AdamW()
+        state = {"opt": opt.init(params)}
+        if self.compressor and self.compressor.mode != "none":
+            state["residual"] = self.compressor.init(params)
+        return state
+
+    def __call__(self, params, state, batch):
+        """One optimizer step; batch leading dim splits into microbatches."""
+        opt = self.optimizer or AdamW()
+        n = self.microbatches
+
+        if n == 1:
+            loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
+        else:
+            def micro(acc, mb):
+                l, g = jax.value_and_grad(self.loss_fn)(params, mb)
+                acc_l, acc_g = acc
+                return (acc_l + l,
+                        jax.tree.map(jnp.add, acc_g, g)), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros(()), zero_g), split)
+            loss = loss / n
+            grads = jax.tree.map(lambda g: g / n, grads)
+
+        new_state = dict(state)
+        if self.compressor and self.compressor.mode != "none":
+            grads, new_state["residual"] = self.compressor.compress(
+                grads, state["residual"])
+
+        new_params, new_state["opt"] = opt.update(grads, state["opt"], params)
+        return new_params, new_state, loss

@@ -1,0 +1,3 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# ONE device; only launch/dryrun.py (and subprocess tests) force 512/8
+# host devices, each in its own process.

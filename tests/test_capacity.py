@@ -1,0 +1,88 @@
+"""Section-6 case-study reproduction: the paper's own numbers."""
+
+import numpy as np
+import pytest
+
+from repro.core import capacity, queueing
+
+
+def test_broker_fit_345ms_at_p100():
+    """Paper: S_broker = 3.45 ms for p = 100."""
+    assert np.isclose(float(capacity.broker_service_time(100)) * 1e3, 3.45,
+                      atol=0.02)
+
+
+def test_scenario4_286ms_at_56qps():
+    """Paper Scenario 4: upper bound 286 ms at 56 queries/second."""
+    p4 = capacity.scenario("memory+cpus+disks")
+    _, hi = queueing.response_time_bounds(56.0, p4)
+    assert abs(float(hi) * 1e3 - 286.0) < 3.0
+
+
+def test_scenario4_replication_4x100_for_200qps():
+    """Paper: 4 replicas x 100 servers serve 200 qps within 300 ms."""
+    p4 = capacity.scenario("memory+cpus+disks")
+    plan = capacity.plan_capacity(p4, 200.0, 0.300)
+    assert plan.n_replicas == 4
+    assert plan.total_servers == 400
+    assert plan.response_upper_ms < 300.0
+
+
+def test_scenario6_result_cache_282ms_at_65qps():
+    """Paper Scenario 6: with result caching, 65 qps at ~282 ms."""
+    p4 = capacity.scenario("memory+cpus+disks")
+    r = queueing.response_time_with_result_cache(65.0, p4, 0.5, 0.069e-3)
+    assert abs(float(r) * 1e3 - 282.0) < 5.0
+    # and 3 replicas support the paper's 195 qps (3 x 65)
+    n, per = capacity.replicas_needed(p4, 195.0, 0.300,
+                                      result_cache=(0.5, 0.069e-3))
+    assert int(n) == 3
+
+
+def test_scenario_ordering_matches_paper():
+    """Fig 12: memory+disks < memory+cpus < cpus+disks < all three
+    (in max sustainable rate under the 300 ms SLO)."""
+    names = ["baseline", "memory+disks", "memory+cpus", "cpus+disks",
+             "memory+cpus+disks"]
+    rates = [float(capacity.max_rate_under_slo(capacity.scenario(n), 0.300))
+             for n in names]
+    assert rates[0] < 1e-3                       # baseline infeasible
+    assert rates[1] < rates[2] < rates[3] < rates[4]
+
+
+def test_memory_scaling_table6():
+    """Paper Scenario 1: 4x memory -> hit x9, disk demand / 2.53."""
+    ref = capacity.MEMORY_TABLE[1]
+    mem4 = capacity.MEMORY_TABLE[4]
+    assert np.isclose(mem4[3] / ref[3], 9.0, rtol=0.01)
+    assert np.isclose(ref[2] / (mem4[2] / 1.0), 66.03 / 26.14, rtol=0.01)
+
+
+def test_upgrade_grid_shape_and_monotonicity():
+    grid = capacity.upgrade_grid(4.0, memory=1)
+    g = np.asarray(grid)
+    assert g.shape == (7, 7)
+    assert (np.diff(g, axis=0) <= 1e-9).all()  # faster cpu -> lower R
+    assert (np.diff(g, axis=1) <= 1e-9).all()  # faster disk -> lower R
+
+
+def test_fig13_crossover_memory_flips_bottleneck():
+    """Fig 13: at 1x memory disk speed dominates; at 4x memory CPU does."""
+    lam = 4.0
+    g1 = np.asarray(capacity.upgrade_grid(lam, memory=1))
+    g4 = np.asarray(capacity.upgrade_grid(lam, memory=4))
+    disk_gain_1 = g1[0, 0] - g1[0, -1]   # vary disk at slow cpu
+    cpu_gain_1 = g1[0, 0] - g1[-1, 0]
+    disk_gain_4 = g4[0, 0] - g4[0, -1]
+    cpu_gain_4 = g4[0, 0] - g4[-1, 0]
+    assert disk_gain_1 > cpu_gain_1      # 1x memory: disk-bound
+    assert cpu_gain_4 > disk_gain_4      # 4x memory: cpu-bound
+
+
+def test_slo_solver_is_exact_boundary():
+    p4 = capacity.scenario("memory+cpus+disks")
+    lam = capacity.max_rate_under_slo(p4, 0.300)
+    _, at = queueing.response_time_bounds(float(lam), p4)
+    _, above = queueing.response_time_bounds(float(lam) * 1.02, p4)
+    assert float(at) <= 0.300 + 1e-5
+    assert float(above) > 0.300

@@ -1,0 +1,174 @@
+"""Search-engine substrate: index invariants, scoring oracle, partitioning
+equivalence, caches, broker merge."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import imbalance, queueing
+from repro.engine import broker, cache as cache_lib
+from repro.engine import corpus as corpus_lib
+from repro.engine import index as index_lib
+from repro.engine import partition, scoring, server
+from repro.workloadgen import querygen
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    cfg = corpus_lib.CorpusConfig(n_docs=2000, vocab_size=1500,
+                                  mean_doc_len=40, seed=0)
+    corp = corpus_lib.generate_corpus(cfg)
+    idx = index_lib.build_index(corp)
+    wl = querygen.WorkloadConfig("t", n_unique_queries=500,
+                                 vocab_size=1500, seed=0)
+    uni = querygen.build_universe(wl)
+    qids, qterms = querygen.sample_query_stream(uni, 128)
+    return corp, idx, qterms
+
+
+def test_index_invariants(small_world):
+    corp, idx, _ = small_world
+    assert idx.n_postings == corp.n_postings
+    lens = idx.list_lengths()
+    assert lens.sum() == idx.n_postings
+    # postings doc-sorted within each term
+    for t in np.random.default_rng(0).integers(0, 1500, 20):
+        lo, hi = idx.term_offsets[t], idx.term_offsets[t + 1]
+        docs = idx.doc_ids[lo:hi]
+        assert (np.diff(docs) > 0).all()  # strictly increasing (unique)
+
+
+def test_scoring_matches_bruteforce(small_world):
+    corp, idx, qterms = small_world
+    srv = server.IndexServer(idx, k_local=5)
+    scores, docs = srv.process(jnp.asarray(qterms[:16]))
+    scores, docs = np.asarray(scores), np.asarray(docs)
+
+    # brute force: reconstruct doc-term matrix
+    lens = np.diff(corp.doc_offsets)
+    doc_of = np.repeat(np.arange(corp.n_docs), lens)
+    for qi in range(4):
+        terms = qterms[qi][qterms[qi] >= 0]
+        match = None
+        weights = np.zeros(corp.n_docs)
+        for t in terms:
+            sel = corp.doc_terms == t
+            docs_t = doc_of[sel]
+            w = corp.tf[sel] * idx.idf[t]
+            hit = np.zeros(corp.n_docs, bool)
+            hit[docs_t] = True
+            weights[docs_t] += w
+            match = hit if match is None else (match & hit)
+        if match is None or not match.any():
+            assert scores[qi, 0] == -np.inf or scores[qi, 0] <= 0 \
+                or not np.isfinite(scores[qi, 0])
+            continue
+        cos = np.where(match, weights / idx.doc_norms, -np.inf)
+        best = np.argmax(cos)
+        assert np.isclose(scores[qi, 0], cos[best], rtol=1e-4)
+        assert cos[docs[qi, 0]] >= cos[best] * (1 - 1e-5)
+
+
+def test_document_partition_equals_single(small_world):
+    """p-way document partitioning + broker merge == single index top-k —
+    the correctness contract of Fig 1."""
+    corp, idx, qterms = small_world
+    q = jnp.asarray(qterms[:8])
+    srv = server.IndexServer(idx, k_local=5)
+    s_ref, d_ref = srv.process(q)
+
+    part = partition.partition_documents(corp, 4)
+    partial_s, partial_d = [], []
+    for sh, shard in enumerate(part.shards):
+        s = server.IndexServer(shard, k_local=5)
+        ss, dd = s.process(q)
+        g = np.asarray(part.local_to_global[sh])
+        partial_s.append(np.asarray(ss))
+        partial_d.append(g[np.asarray(dd)])
+    ms, md = broker.merge_topk(jnp.asarray(np.stack(partial_s)),
+                               jnp.asarray(np.stack(partial_d)), k=5)
+    np.testing.assert_allclose(np.asarray(ms), np.asarray(s_ref), rtol=1e-4)
+
+
+def test_term_partition_covers_all_postings(small_world):
+    corp, idx, _ = small_world
+    part = partition.partition_terms(corpus_lib.generate_corpus(
+        corpus_lib.CorpusConfig(n_docs=500, vocab_size=300,
+                                mean_doc_len=20, seed=1)), 3)
+    total = sum(s.n_postings for s in part.shards)
+    c2 = corpus_lib.generate_corpus(
+        corpus_lib.CorpusConfig(n_docs=500, vocab_size=300,
+                                mean_doc_len=20, seed=1))
+    assert total == c2.n_postings
+
+
+def test_lru_cache_hit_monotone_in_memory(small_world):
+    corp, idx, qterms = small_world
+    stream = np.tile(qterms, (4, 1))
+    sizes = idx.list_bytes()
+    hits = []
+    for frac in (0.02, 0.1, 0.5):
+        cap = int(sizes.sum() * frac)
+        stats, _, _ = cache_lib.measure_cache_behavior(stream, sizes, cap)
+        hits.append(stats.hit)
+    assert hits[0] <= hits[1] <= hits[2]
+    assert hits[2] > 0.3  # zipf reuse means big cache mostly hits
+
+
+def test_result_cache_hit_ratio():
+    rc = cache_lib.ResultCache(100)
+    rng = np.random.default_rng(0)
+    ids = rng.zipf(1.5, 5000) % 500
+    for i in ids:
+        rc.lookup(int(i))
+    assert 0.3 < rc.hit_ratio < 0.99
+
+
+def test_measured_params_drive_model(small_world):
+    """The full paper methodology: measure one server, feed Eq 1-7."""
+    corp, idx, qterms = small_world
+    srv = server.IndexServer(idx, k_local=5)
+    stream = np.tile(qterms, (3, 1))
+    params = server.measure_service_params(
+        srv, stream, cache_bytes=idx.index_bytes() // 10,
+        p=8, s_broker=0.5e-3, batch=32)
+    assert 0.0 <= float(params.hit) <= 1.0
+    s = float(queueing.service_time_server(params))
+    assert 0 < s < 1.0
+    lam = 0.5 / s                           # 50% utilization
+    lo, hi = queueing.response_time_bounds(lam, params)
+    assert float(lo) < float(hi) < 10.0
+
+
+def test_che_cache_model_properties():
+    """Analytical disk-cache model: hit grows with memory AND with p
+    (paper Sec 3.4: more servers -> smaller lists -> better caching)."""
+    rng = np.random.default_rng(0)
+    t = 2000
+    rates = np.asarray(querygen._zipf_cdf(t, 1.0))
+    rates = np.diff(np.concatenate([[0], rates])) * 10.0
+    sizes = (rng.pareto(1.2, t) + 1) * 2e4
+
+    def hit(p, mem):
+        geom = imbalance.CacheGeometry(
+            term_rates=jnp.asarray(rates, jnp.float32),
+            list_bytes=jnp.asarray(sizes, jnp.float32),
+            cache_bytes=mem, p=p)
+        qt = jnp.asarray(rng.integers(0, t, (200, 2)).astype(np.int32))
+        ln = jnp.full((200,), 2, jnp.int32)
+        return float(jnp.mean(
+            imbalance.query_full_hit_probability(geom, qt, ln)))
+
+    assert hit(8, 1e6) < hit(8, 1e7) <= 1.0
+    assert hit(2, 3e6) < hit(32, 3e6) <= 1.0
+
+
+def test_imbalance_probability_peak():
+    p = 8
+    h = jnp.asarray([0.0, 0.5, 1.0])
+    pi = imbalance.imbalance_probability(h, p)
+    assert float(pi[0]) == 0.0 and float(pi[2]) == 0.0
+    assert float(pi[1]) > 0.99  # half-hit rate nearly guarantees a split

@@ -1,0 +1,83 @@
+"""Beyond-paper extensions: M/M/c servers, two-phase model, hybrid
+partitioning, distributed-search partition comparison."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import capacity, queueing, simulator
+from repro.engine import corpus as corpus_lib
+from repro.engine import partition
+
+
+def test_erlang_c_limits():
+    # c=1 reduces to M/M/1 waiting probability = rho
+    assert np.isclose(float(queueing.erlang_c(0.5, 1.0, 1)), 0.5, atol=1e-5)
+    r = queueing.mmc_residence_time(0.5, 1.0, 1)
+    assert np.isclose(float(r), 2.0, rtol=1e-4)
+    # many servers at low load -> no waiting
+    r64 = queueing.mmc_residence_time(0.5, 1.0, 64)
+    assert np.isclose(float(r64), 1.0, rtol=1e-3)
+
+
+def test_mmc_analytical_matches_simulation():
+    """Erlang-C mean response vs the Kiefer-Wolfowitz DES (future work)."""
+    lam, s, c = 1.5, 1.0, 2
+    analytic = float(queueing.mmc_residence_time(lam, s, c))
+    arr = jnp.cumsum(jax.random.exponential(jax.random.PRNGKey(0),
+                                            (80_000,)) / lam)
+    svc = jax.random.exponential(jax.random.PRNGKey(1), (80_000,)) * s
+    sim = float(jnp.mean(simulator.simulate_mmc(arr, svc, c=c)[8000:]))
+    assert abs(sim - analytic) / analytic < 0.08
+
+
+def test_multithreaded_servers_raise_capacity():
+    """2 threads per index server push the feasible arrival rate up."""
+    params = capacity.TABLE5_PARAMS
+    lam = 35.0   # over single-thread saturation (sat ~30.1 qps)
+    lo1, hi1 = queueing.response_time_bounds(lam, params)
+    lo2, hi2 = queueing.response_time_bounds_mmc(lam, params, threads=2)
+    assert np.isinf(float(hi1))
+    assert np.isfinite(float(hi2))
+
+
+def test_two_phase_model_additive():
+    params = capacity.scenario("memory+cpus+disks")
+    one = queueing.response_time_bounds(30.0, params)[1]
+    two = queueing.two_phase_response_upper(
+        30.0, params, s_docserver=2e-3, p_docservers=10)
+    assert float(two) > float(one)
+    # phase 2 roughly constant: doubling collection params doesn't touch it
+    delta = float(two) - float(one)
+    assert 0 < delta < 0.1
+
+
+def test_hybrid_partition_balances_postings():
+    cfg = corpus_lib.CorpusConfig(n_docs=1500, vocab_size=800,
+                                  mean_doc_len=30, seed=2)
+    corp = corpus_lib.generate_corpus(cfg)
+    p = 4
+    hybrid = partition.partition_hybrid(corp, p)
+    term = partition.partition_terms(corp, p)
+
+    def imbalance(part):
+        sizes = np.array([s.n_postings for s in part.shards], float)
+        return sizes.max() / max(sizes.mean(), 1.0)
+
+    assert sum(s.n_postings for s in hybrid.shards) == corp.n_postings
+    # hybrid storage balance should beat term partitioning (hot terms
+    # concentrate whole lists on single owners)
+    assert imbalance(hybrid) <= imbalance(term) + 0.05
+
+
+def test_partition_schemes_same_global_df():
+    cfg = corpus_lib.CorpusConfig(n_docs=800, vocab_size=400,
+                                  mean_doc_len=25, seed=3)
+    corp = corpus_lib.generate_corpus(cfg)
+    doc = partition.partition_documents(corp, 3)
+    hyb = partition.partition_hybrid(corp, 3)
+    np.testing.assert_allclose(doc.shards[0].idf, hyb.shards[0].idf,
+                               rtol=1e-6)

@@ -1,0 +1,120 @@
+"""Hypothesis property tests on system invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import queueing, workload
+from repro.core.queueing import ServerParams
+from repro.kernels.maxplus_scan import ref as mp_ref
+from repro.models import transformer as T
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@given(
+    p=st.integers(1, 2048),
+    lam_frac=st.floats(0.01, 0.95),
+    s_hit=st.floats(1e-4, 0.05),
+    s_miss=st.floats(1e-4, 0.05),
+    s_disk=st.floats(0.0, 0.2),
+    hit=st.floats(0.0, 1.0),
+)
+@_settings
+def test_queueing_invariants(p, lam_frac, s_hit, s_miss, s_disk, hit):
+    """For any stable operating point: 0<=U<1, lower<=upper, H_p factor."""
+    params = ServerParams(p=p, s_broker=1e-4, s_hit=s_hit, s_miss=s_miss,
+                          s_disk=s_disk, hit=hit)
+    lam = lam_frac * float(queueing.saturation_rate(params))
+    u = float(queueing.utilization(
+        lam, queueing.service_time_server(params)))
+    assert 0.0 <= u < 1.0
+    lo, hi = queueing.response_time_bounds(lam, params)
+    assert 0.0 < float(lo) <= float(hi) + 1e-9
+    hp = float(queueing.harmonic_number(p))
+    assert hp >= 1.0
+    rb = float(queueing.broker_residence_time(lam, params))
+    assert np.isclose(float(hi) - rb, hp * (float(lo) - rb), rtol=1e-4)
+
+
+@given(
+    n=st.integers(2, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+@_settings
+def test_maxplus_scan_is_fcfs(n, seed):
+    """Associative-scan completion times == sequential FCFS recurrence,
+    and are nondecreasing with spacing >= service time."""
+    rng = np.random.default_rng(seed)
+    a = np.sort(rng.random(n).astype(np.float32) * 10)
+    s = rng.random(n).astype(np.float32)
+    ra, _ = mp_ref.maxplus_scan_ref(jnp.asarray(a + s), jnp.asarray(s))
+    sa, _ = mp_ref.maxplus_scan_sequential(jnp.asarray(a + s),
+                                           jnp.asarray(s))
+    np.testing.assert_allclose(np.asarray(ra), np.asarray(sa), rtol=2e-5)
+    c = np.asarray(ra)
+    assert (c >= a + s - 1e-4).all()          # completion after arrival+svc
+    assert (np.diff(c) >= s[1:] - 1e-4).all()  # single server serializes
+
+
+@given(
+    boost_windows=st.integers(2, 40),
+    n=st.integers(100, 2000),
+    seed=st.integers(0, 2**31 - 1),
+)
+@_settings
+def test_folding_preserves_mass_and_boosts_rate(boost_windows, n, seed):
+    rng = np.random.default_rng(seed)
+    duration = boost_windows * 100.0
+    t = np.sort(rng.random(n) * duration)
+    folded, boost = workload.fold_timestamps(jnp.asarray(t, jnp.float32),
+                                             100.0)
+    assert folded.shape[0] == n                # mass preserved
+    assert float(folded.max()) <= 100.0 + 1e-3
+    assert abs(int(boost) - boost_windows) <= 1
+
+
+@given(
+    b=st.integers(1, 4),
+    s=st.integers(2, 16),
+    v=st.integers(8, 64),
+    seed=st.integers(0, 1000),
+)
+@_settings
+def test_sharded_cross_entropy_equals_naive(b, s, v, seed):
+    """The vocab-sharded CE formulation == textbook log_softmax gather."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    logits = jax.random.normal(k1, (b, s, v))
+    labels = jax.random.randint(k2, (b, s), 0, v)
+    ours = T.cross_entropy_sharded(logits, labels)
+    logp = jax.nn.log_softmax(logits, -1)
+    naive = -jnp.mean(jnp.take_along_axis(logp, labels[..., None], -1))
+    np.testing.assert_allclose(float(ours), float(naive), rtol=1e-4)
+
+
+@given(alpha=st.floats(0.5, 1.5), seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_zipf_probs_normalized_and_ordered(alpha, seed):
+    p = workload.zipf_probs(500, alpha)
+    assert np.isclose(float(jnp.sum(p)), 1.0, atol=1e-5)
+    assert bool(jnp.all(jnp.diff(p) <= 1e-12))  # nonincreasing in rank
+
+
+@given(
+    lam_scale=st.floats(0.1, 0.9),
+    hit_r=st.floats(0.0, 1.0),
+)
+@_settings
+def test_result_cache_never_hurts(lam_scale, hit_r):
+    """Eq 8 with any hit ratio <= plain Eq 7 upper bound."""
+    from repro.core import capacity
+    params = capacity.scenario("memory+cpus+disks")
+    lam = lam_scale * float(queueing.saturation_rate(params))
+    _, hi = queueing.response_time_bounds(lam, params)
+    r = queueing.response_time_with_result_cache(lam, params, hit_r,
+                                                 0.069e-3)
+    assert float(r) <= float(hi) + 1e-9

@@ -1,0 +1,96 @@
+"""Unit tests for the analytical queueing model (paper Eq 1-8)."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import capacity, queueing
+from repro.core.queueing import ServerParams
+
+
+def test_harmonic_number_integer_values():
+    assert np.isclose(float(queueing.harmonic_number(1)), 1.0, atol=1e-5)
+    assert np.isclose(float(queueing.harmonic_number(4)),
+                      1 + 0.5 + 1 / 3 + 0.25, atol=1e-5)
+    # H_100 drives the Section 6 case study
+    assert np.isclose(float(queueing.harmonic_number(100)), 5.18738,
+                      atol=1e-3)
+
+
+def test_eq1_service_time_decomposition():
+    p = ServerParams(p=8, s_broker=0.5e-3, s_hit=9.2e-3, s_miss=10.04e-3,
+                     s_disk=28.08e-3, hit=0.17)
+    s = float(queueing.service_time_server(p))
+    expect = 0.17 * 9.2e-3 + 0.83 * (10.04e-3 + 28.08e-3)
+    assert np.isclose(s, expect, rtol=1e-6)
+
+
+def test_mm1_textbook():
+    # rho = 0.5 -> R = S / (1 - rho) = 2S
+    assert np.isclose(float(queueing.mm1_residence_time(0.5, 1.0)), 2.0,
+                      rtol=1e-6)
+    # at saturation -> inf
+    assert np.isinf(float(queueing.mm1_residence_time(1.0, 1.0)))
+    assert np.isinf(float(queueing.mm1_residence_time(2.0, 1.0)))
+
+
+def test_bounds_ordering_and_logarithmic_gap():
+    params = capacity.TABLE5_PARAMS
+    lam = 20.0
+    lo, hi = queueing.response_time_bounds(lam, params)
+    assert float(lo) < float(hi)
+    # gap is exactly H_p on the server component (paper Sec 5.2.2)
+    r_b = queueing.broker_residence_time(lam, params)
+    ratio = (float(hi) - float(r_b)) / (float(lo) - float(r_b))
+    assert np.isclose(ratio, float(queueing.harmonic_number(8)), rtol=1e-5)
+
+
+def test_interpolation_within_bounds():
+    params = capacity.TABLE5_PARAMS
+    for lam in [1.0, 10.0, 20.0, 28.0]:
+        lo = queueing.fork_join_lower_bound(lam, params)
+        hi = queueing.fork_join_upper_bound(lam, params)
+        mid = queueing.fork_join_interpolation(lam, params)
+        assert float(lo) <= float(mid) <= float(hi) * (1 + 1e-6), lam
+
+
+def test_utilization_92_percent_at_28qps():
+    """Paper Sec 5.3: U_server approaches 92% at 28 qps."""
+    u = queueing.utilization(
+        28.0, queueing.service_time_server(capacity.TABLE5_PARAMS))
+    assert 0.90 < float(u) < 0.95
+
+
+def test_result_cache_eq8_reduces_response():
+    params = capacity.scenario("memory+cpus+disks")
+    lam = 50.0
+    _, hi = queueing.response_time_bounds(lam, params)
+    hi_c = queueing.response_time_with_result_cache(
+        lam, params, 0.5, 0.069e-3)
+    assert float(hi_c) < float(hi)
+    # hit -> 1 collapses to the broker-cache response
+    hi_all = queueing.response_time_with_result_cache(
+        lam, params, 1.0, 0.069e-3)
+    assert float(hi_all) < 1e-3
+
+
+def test_quantile_upper_exceeds_mean_bound():
+    params = capacity.TABLE5_PARAMS
+    q99 = queueing.response_time_quantile_upper(20.0, params, 0.99)
+    _, hi = queueing.response_time_bounds(20.0, params)
+    assert float(q99) > float(hi) * 0.9  # p99 of max >> mean bound region
+
+
+def test_expected_max_exponential_is_hp():
+    val = queueing.expected_max_exponential(8, 2.0)
+    assert np.isclose(float(val), float(queueing.harmonic_number(8)) * 2.0,
+                      rtol=1e-6)
+
+
+def test_broadcasting_over_lambda_grid():
+    grid = jnp.linspace(1.0, 25.0, 50)
+    lo, hi = queueing.response_time_bounds(grid, capacity.TABLE5_PARAMS)
+    assert lo.shape == (50,) and hi.shape == (50,)
+    assert bool(jnp.all(jnp.diff(hi) > 0))  # monotone in lambda

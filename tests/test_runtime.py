@@ -1,0 +1,167 @@
+"""Training runtime: optimizer, microbatching, compression, checkpointing,
+elastic scaling, straggler math."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as CK
+from repro.core import planner
+from repro.launch import elastic
+from repro.train.compression import Compressor
+from repro.train.optimizer import AdamW, SGD, clip_by_global_norm, cosine_schedule
+from repro.train.trainer import TrainStep
+
+
+def _toy():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(8, 1)).astype(np.float32)
+    x = rng.normal(size=(64, 8)).astype(np.float32)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(x @ w)}
+
+
+def _loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def test_adamw_converges():
+    params = {"w": jnp.zeros((8, 1)), "b": jnp.zeros((1,))}
+    step = TrainStep(loss_fn=_loss, optimizer=AdamW(lr=3e-2))
+    state = step.init_state(params)
+    batch = _toy()
+    jstep = jax.jit(step)
+    first = None
+    for _ in range(200):
+        params, state, loss = jstep(params, state, batch)
+        first = first or float(loss)
+    assert float(loss) < first * 1e-3
+
+
+def test_microbatch_equals_full_batch():
+    """Gradient accumulation is exact for mean losses over equal splits."""
+    params = {"w": jnp.ones((8, 1)), "b": jnp.zeros((1,))}
+    batch = _toy()
+    s1 = TrainStep(loss_fn=_loss, optimizer=SGD(lr=0.1, momentum=0.0,
+                                                clip_norm=0.0))
+    s4 = TrainStep(loss_fn=_loss, optimizer=SGD(lr=0.1, momentum=0.0,
+                                                clip_norm=0.0),
+                   microbatches=4)
+    p1, _, l1 = s1(params, s1.init_state(params), batch)
+    p4, _, l4 = s4(params, s4.init_state(params), batch)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(l1), float(l4), rtol=1e-5)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped = clip_by_global_norm(g, 1.0)
+    norm = float(jnp.sqrt(sum(jnp.sum(x * x)
+                              for x in jax.tree.leaves(clipped))))
+    assert np.isclose(norm, 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) < 1e-4
+    assert np.isclose(float(lr(jnp.asarray(10))), 1e-3, rtol=1e-5)
+    assert float(lr(jnp.asarray(100))) < 2e-4
+
+
+@pytest.mark.parametrize("mode", ["bf16", "int8"])
+def test_compression_error_feedback(mode):
+    """Residual stays bounded and compressed training still converges."""
+    comp = Compressor(mode)
+    params = {"w": jnp.zeros((8, 1)), "b": jnp.zeros((1,))}
+    step = TrainStep(loss_fn=_loss, optimizer=AdamW(lr=3e-2),
+                     compressor=comp)
+    state = step.init_state(params)
+    batch = _toy()
+    jstep = jax.jit(step)
+    for _ in range(150):
+        params, state, loss = jstep(params, state, batch)
+    assert float(loss) < 1e-3
+    res_norm = max(float(jnp.max(jnp.abs(r)))
+                   for r in jax.tree.leaves(state["residual"]))
+    assert res_norm < 1.0  # error feedback keeps residual bounded
+
+
+def test_compression_int8_quantization_error():
+    comp = Compressor("int8")
+    g = {"w": jnp.linspace(-1, 1, 100)}
+    res = comp.init(g)
+    q, res = comp.compress(g, res)
+    err = float(jnp.max(jnp.abs(q["w"] - g["w"])))
+    assert err <= 1.0 / 127.0 + 1e-6
+
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 3))}}
+        for s in (10, 20, 30, 40):
+            CK.save(d, s, tree, keep_last=2)
+        assert CK.latest_step(d) == 40
+        kept = sorted(os.listdir(d))
+        assert len([k for k in kept if k.startswith("step_")]) == 2
+        restored = CK.restore(d, 40, tree)
+        np.testing.assert_allclose(np.asarray(restored["a"]),
+                                   np.arange(10.0))
+
+
+def test_checkpoint_async_and_manager():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CK.CheckpointManager(d, every=5, keep_last=2)
+        tree = {"w": jnp.ones((4,))}
+        for s in range(1, 16):
+            mgr.maybe_save(s, tree)
+        mgr.wait()
+        assert CK.latest_step(d) == 15
+        step, restored = mgr.restore_latest(tree)
+        assert step == 15
+
+
+def test_checkpoint_atomicity_no_tmp_left():
+    with tempfile.TemporaryDirectory() as d:
+        CK.save(d, 1, {"w": jnp.ones((2,))})
+        assert not any(f.endswith(".tmp") for f in os.listdir(d))
+
+
+def test_elastic_survivor_mesh():
+    shape = elastic.survivor_mesh_shape(
+        (2, 16, 16), failed_hosts=8, chips_per_host=4,
+        axes=("pod", "data", "model"))
+    assert shape[2] == 16                    # model extent preserved
+    assert np.prod(shape) >= 2 * 16 * 16 - 32
+    plan = elastic.plan_downsize((2, 16, 16), shape)
+    assert plan.throughput_fraction <= 1.0
+
+
+def test_elastic_refuses_impossible():
+    with pytest.raises(ValueError):
+        elastic.survivor_mesh_shape((1, 1, 16), failed_hosts=100,
+                                    chips_per_host=4,
+                                    axes=("pod", "data", "model"))
+
+
+def test_hedge_threshold_scales_with_p():
+    t8 = elastic.hedge_threshold(0.03, 8)
+    t512 = elastic.hedge_threshold(0.03, 512)
+    assert t512 > t8 > 0
+
+
+def test_planner_roofline_to_serving_plan():
+    terms = planner.terms_from_analysis(
+        hlo_flops=1e15, hlo_bytes=5e12, collective_bytes=2e12, n_chips=256)
+    assert terms.bound in ("compute", "memory", "collective")
+    model = planner.ServingModel(
+        name="test", terms=terms, n_chips=256, batch_per_step=128)
+    plan = planner.plan_serving(model, target_rate_per_s=2000.0,
+                                slo_seconds=0.5)
+    assert plan.cells >= 1
+    assert plan.response_upper_ms <= 500.0 + 1e-6
+    assert 0 <= plan.utilization < 1.0

@@ -1,0 +1,118 @@
+"""Max-plus DES validation: theory cross-checks + paper Fig 9-11 behavior."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import capacity, queueing, simulator
+from repro.core.queueing import ServerParams
+
+MM1 = ServerParams(p=1, s_broker=1e-9, s_hit=1.0, s_miss=1.0, s_disk=0.0,
+                   hit=1.0)
+
+
+def test_mm1_mean_response_matches_theory():
+    for rho in (0.3, 0.6):
+        res = simulator.simulate_fork_join(
+            jax.random.PRNGKey(0), rho, 120_000, MM1, mode="exponential")
+        expect = 1.0 / (1.0 - rho)
+        assert abs(float(res.mean_response) - expect) / expect < 0.06, rho
+
+
+def test_fcfs_recurrence_definition():
+    """Completion times match the literal FCFS recurrence."""
+    rng = np.random.default_rng(0)
+    a = np.sort(rng.random(200) * 10)
+    s = rng.random(200) * 0.5
+    c = simulator.fcfs_completion_times(jnp.asarray(a), jnp.asarray(s))
+    expect = np.zeros(200)
+    prev = 0.0
+    for i in range(200):
+        prev = max(a[i], prev) + s[i]
+        expect[i] = prev
+    np.testing.assert_allclose(np.asarray(c), expect, rtol=1e-5)
+
+
+def test_fork_join_within_paper_bounds():
+    """Fig 10: measured response lies within Eq 7's bounds, near the upper
+    bound at heavy load (paper: ~20% below at p=8, lam=28)."""
+    pr = dataclasses.replace(capacity.TABLE5_PARAMS, p=8)
+    res = simulator.simulate_fork_join(
+        jax.random.PRNGKey(1), 28.0, 150_000, pr, mode="exponential")
+    lo, hi = queueing.response_time_bounds(28.0, pr)
+    m = float(res.mean_response)
+    assert float(lo) < m < float(hi) * 1.02
+    assert m > 0.6 * float(hi)  # closer to upper at heavy load
+
+
+def test_balanced_mode_matches_lower_bound():
+    """The Chowdhury & Pass assumption (no imbalance) sits at the lower
+    bound — the paper's argument for why prior models underestimate."""
+    pr = dataclasses.replace(capacity.TABLE5_PARAMS, p=8)
+    res = simulator.simulate_fork_join(
+        jax.random.PRNGKey(2), 20.0, 100_000, pr, mode="balanced")
+    lo, hi = queueing.response_time_bounds(20.0, pr)
+    assert abs(float(res.mean_response) - float(lo)) < 0.25 * (
+        float(hi) - float(lo))
+
+
+def test_cache_mode_between_bounds():
+    pr = dataclasses.replace(capacity.TABLE5_PARAMS, p=8)
+    res = simulator.simulate_fork_join(
+        jax.random.PRNGKey(3), 20.0, 100_000, pr, mode="cache")
+    lo, hi = queueing.response_time_bounds(20.0, pr)
+    assert float(lo) * 0.95 < float(res.mean_response) < float(hi) * 1.05
+
+
+def test_response_grows_with_p():
+    """Fig 11: response time grows with the number of index servers."""
+    means = []
+    for p in (2, 4, 8, 16):
+        pr = dataclasses.replace(capacity.TABLE5_PARAMS, p=p)
+        res = simulator.simulate_fork_join(
+            jax.random.PRNGKey(4), 15.0, 60_000, pr, mode="exponential")
+        means.append(float(res.mean_response))
+    assert means == sorted(means)
+
+
+def test_mmc_reduces_to_mm1():
+    arr = jnp.cumsum(jax.random.exponential(jax.random.PRNGKey(5),
+                                            (50_000,)) / 0.5)
+    svc = jax.random.exponential(jax.random.PRNGKey(6), (50_000,))
+    r1 = simulator.simulate_mmc(arr, svc, c=1)
+    assert abs(float(jnp.mean(r1[5000:])) - 2.0) < 0.2
+
+
+def test_mmc_multiserver_beats_single():
+    """Future-work extension: 2 threads at same per-thread speed cut
+    waiting drastically."""
+    lam, mu = 1.5, 1.0  # rho = 0.75 on 2 servers; unstable on 1
+    arr = jnp.cumsum(jax.random.exponential(jax.random.PRNGKey(7),
+                                            (50_000,)) / lam)
+    svc = jax.random.exponential(jax.random.PRNGKey(8), (50_000,)) / mu
+    r2 = simulator.simulate_mmc(arr, svc, c=2)
+    # Erlang-C M/M/2 at rho=0.75: W = ~1.93 (response = wait + service)
+    mean = float(jnp.mean(r2[5000:]))
+    assert 1.5 < mean < 2.4
+
+
+def test_pallas_impl_matches_xla():
+    pr = dataclasses.replace(capacity.TABLE5_PARAMS, p=4)
+    r1 = simulator.simulate_fork_join(jax.random.PRNGKey(9), 20.0, 20_000,
+                                      pr, impl="xla")
+    r2 = simulator.simulate_fork_join(jax.random.PRNGKey(9), 20.0, 20_000,
+                                      pr, impl="pallas")
+    np.testing.assert_allclose(float(r1.mean_response),
+                               float(r2.mean_response), rtol=1e-4)
+
+
+def test_thousand_server_scale():
+    """The paper's stated future work: simulate thousands of servers."""
+    pr = dataclasses.replace(capacity.TABLE5_PARAMS, p=1024)
+    res = simulator.simulate_fork_join(
+        jax.random.PRNGKey(10), 10.0, 20_000, pr, mode="exponential")
+    lo, hi = queueing.response_time_bounds(10.0, pr)
+    assert float(lo) < float(res.mean_response) < float(hi) * 1.05

@@ -1,0 +1,53 @@
+"""End-to-end system test: the paper's full methodology on a small world.
+
+Build corpus -> partition -> measure one server -> parameterize the model
+-> validate against the DES -> produce a capacity plan.  This is the
+entire paper pipeline in one test.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import capacity, queueing, simulator
+from repro.engine import corpus as corpus_lib
+from repro.engine import index as index_lib
+from repro.engine import server
+from repro.workloadgen import querygen
+
+
+def test_full_methodology_end_to_end():
+    # 1. workload + collection (Sec 4)
+    ccfg = corpus_lib.CorpusConfig(n_docs=3000, vocab_size=2000,
+                                   mean_doc_len=40, seed=0)
+    corp = corpus_lib.generate_corpus(ccfg)
+    idx = index_lib.build_index(corp)
+    wl = querygen.WorkloadConfig("t", n_unique_queries=800,
+                                 vocab_size=2000, seed=0)
+    uni = querygen.build_universe(wl)
+    _, qterms = querygen.sample_query_stream(uni, 512)
+
+    # 2. measure one index server (Sec 5.3 methodology)
+    srv = server.IndexServer(idx, k_local=10)
+    params = server.measure_service_params(
+        srv, np.tile(qterms, (2, 1)), cache_bytes=idx.index_bytes() // 5,
+        p=8, s_broker=0.2e-3, batch=64)
+
+    # 3. model predicts; DES "measures" (replacing the paper's cluster)
+    s = float(queueing.service_time_server(params))
+    lam = 0.6 / s
+    lo, hi = queueing.response_time_bounds(lam, params)
+    res = simulator.simulate_fork_join(
+        jax.random.PRNGKey(0), lam, 60_000, params, mode="exponential")
+    m = float(res.mean_response)
+    assert float(lo) * 0.9 < m < float(hi) * 1.1
+
+    # 4. capacity plan (Sec 6): target 10x the single-cluster rate; the
+    # relaxed SLO (1.2x) lets each replica run slightly hotter than lam,
+    # so 8-10 replicas are expected.
+    plan = capacity.plan_capacity(params, target_rate=10 * lam,
+                                  slo_seconds=float(hi) * 1.2)
+    assert 5 <= plan.n_replicas <= 10
+    assert plan.response_upper_ms <= float(hi) * 1.2 * 1e3 + 1e-3

@@ -1,0 +1,104 @@
+"""Workload characterization: distribution fits, Zipf, folding (Sec 4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import workload as W
+from repro.workloadgen import loadgen, querygen
+
+
+def _exp_samples(n=20000, mu=0.035, seed=0):
+    return jax.random.exponential(jax.random.PRNGKey(seed), (n,)) * mu
+
+
+def test_exponential_mle_recovers_mean():
+    x = _exp_samples(mu=0.035)
+    fit = W.fit_exponential(x)
+    assert np.isclose(float(fit.params["mu"]), 0.035, rtol=0.05)
+
+
+def test_gamma_mle_recovers_shape():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.gamma(key, 3.0, (20000,)) * 2.0
+    fit = W.fit_gamma(x)
+    assert np.isclose(float(fit.params["k"]), 3.0, rtol=0.1)
+    assert np.isclose(float(fit.params["theta"]), 2.0, rtol=0.1)
+
+
+def test_weibull_mle_recovers_shape():
+    key = jax.random.PRNGKey(2)
+    u = jax.random.uniform(key, (20000,))
+    x = 1.5 * (-jnp.log(u)) ** (1 / 2.0)          # Weibull(k=2, lam=1.5)
+    fit = W.fit_weibull(x)
+    assert np.isclose(float(fit.params["k"]), 2.0, rtol=0.1)
+    assert np.isclose(float(fit.params["lam"]), 1.5, rtol=0.1)
+
+
+def test_lognormal_and_pareto_fits():
+    key = jax.random.PRNGKey(3)
+    x = jnp.exp(jax.random.normal(key, (20000,)) * 0.5 - 2.0)
+    fit = W.fit_lognormal(x)
+    assert np.isclose(float(fit.params["mu"]), -2.0, atol=0.05)
+    xp = 0.01 * (1 - jax.random.uniform(key, (20000,))) ** (-1 / 2.5)
+    fitp = W.fit_pareto(xp)
+    assert np.isclose(float(fitp.params["alpha"]), 2.5, rtol=0.1)
+
+
+def test_ks_selects_exponential_for_poisson_gaps():
+    """The paper's central claim (Fig 6): exponential fits interarrivals;
+    lognormal and pareto fail."""
+    x = _exp_samples()
+    winner, stats = W.best_fit(x, criterion="ks")
+    assert winner in ("exponential", "gamma", "weibull")  # paper: all close
+    assert float(stats["exponential"]) < float(stats["lognormal"])
+    assert float(stats["exponential"]) < float(stats["pareto"])
+
+
+def test_ssq_criterion_agrees():
+    x = _exp_samples(seed=9)
+    _, stats = W.best_fit(x, criterion="ssq")
+    assert float(stats["exponential"]) < float(stats["pareto"])
+
+
+def test_zipf_alpha_recovery():
+    """Fig 2: recover alpha from a sampled popularity distribution."""
+    for alpha in (0.82, 0.98):
+        ids = W.sample_zipf(jax.random.PRNGKey(4), 5000, alpha, (200_000,))
+        freqs = W.rank_frequencies(ids, 5000)
+        est = float(W.fit_zipf_alpha(freqs))
+        assert abs(est - alpha) < 0.08, (alpha, est)
+
+
+def test_folding_boost_factor():
+    """Table 3: folding 243 days by a 1-week window boosts ~34x."""
+    t = np.sort(np.random.default_rng(0).random(5000) * 243 * 86400)
+    folded, boost = W.fold_timestamps(jnp.asarray(t), 7 * 86400.0)
+    assert int(boost) == 35  # ceil(243/7)
+    assert folded.shape == t.shape
+    assert bool(jnp.all(jnp.diff(folded) >= 0))
+    assert float(folded[-1]) <= 7 * 86400.0
+
+
+def test_loadgen_diurnal_profile():
+    t = loadgen.diurnal_arrivals(1.0, days=7, seed=0)
+    hours = (t % 86400.0) // 3600
+    counts = np.bincount(hours.astype(int), minlength=24)
+    # peak-hour traffic well above trough (paper Fig 4)
+    assert counts.max() > 2.0 * max(counts.min(), 1)
+
+
+def test_querygen_matches_table2():
+    cfg = querygen.WorkloadConfig("t", n_unique_queries=3000,
+                                  vocab_size=2000, seed=0)
+    uni = querygen.build_universe(cfg)
+    qids, terms = querygen.sample_query_stream(uni, 30000)
+    lens = (terms >= 0).sum(1)
+    p1 = (lens == 1).mean()
+    p2 = (lens == 2).mean()
+    # stream proportions reflect the configured universe within tolerance
+    # (popularity-weighted sampling skews slightly)
+    assert abs(p1 - 0.32) < 0.1
+    assert abs(p2 - 0.41) < 0.1
+    assert np.median(lens) == 2  # paper: median query length 2
