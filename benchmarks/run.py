@@ -10,7 +10,8 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import kernels_bench, paper_tables, partitioning_bench
+from benchmarks import (kernels_bench, paper_tables, partitioning_bench,
+                        sweep_bench)
 
 BENCHES = [
     paper_tables.bench_table2_query_lengths,
@@ -31,6 +32,8 @@ BENCHES = [
     kernels_bench.bench_embedding_bag,
     kernels_bench.bench_cin_fuse,
     kernels_bench.bench_simulator_scale,
+    sweep_bench.bench_sweep_grid,
+    sweep_bench.bench_sweep_simulated,
     partitioning_bench.bench_partitioning,
 ]
 

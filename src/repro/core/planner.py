@@ -23,14 +23,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
-from repro.core import capacity, queueing
+from repro.core import capacity, queueing, sweep
 
 __all__ = ["HardwareSpec", "TPU_V5E", "RooflineTerms", "ServingModel",
-           "serving_params", "plan_serving"]
+           "serving_params", "plan_serving", "plan_over_grid"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,3 +187,22 @@ def plan_serving(
         utilization=float(util),
         bound=model.terms.bound,
     )
+
+
+def plan_over_grid(
+    grid: sweep.SweepGrid,
+    slo_seconds: float,
+    *,
+    cost_fn: Optional[Callable] = None,
+) -> tuple[sweep.SweepResult, sweep.Frontier]:
+    """Section-6 what-if analysis over a whole configuration grid at once.
+
+    Evaluates the analytical (Eq 7 upper bound) response surface for every
+    (lambda, p, cpu, disk, hit) combination as one XLA program and extracts
+    the constraint-satisfying frontier: per arrival rate, the cheapest
+    configuration with R_upper <= SLO.  Returns the dense surface too so
+    callers can plot Figs 9-12 style curves from the same evaluation.
+    """
+    result = sweep.sweep_analytical(grid)
+    frontier = sweep.extract_frontier(result, slo_seconds, cost_fn=cost_fn)
+    return result, frontier

@@ -49,8 +49,10 @@ __all__ = [
     "fcfs_completion_times",
     "SimResult",
     "simulate_fork_join",
+    "simulate_fork_join_batch",
     "simulate_mmc",
     "sample_service_times",
+    "sample_service_times_batch",
 ]
 
 
@@ -197,6 +199,102 @@ def _simulate_fork_join(
         cluster_residence=masked(cluster_residence),
         broker_residence=masked(broker_residence),
     )
+
+
+def sample_service_times_batch(
+    key: Array, n_scenarios: int, n_queries: int, p: int,
+    params: ServerParams, mode: str,
+) -> Array:
+    """(n_scenarios, p, n_queries) service times; params fields are (S,).
+
+    The batched counterpart of :func:`sample_service_times` used by the
+    what-if sweep engine: every scenario gets independent randomness but
+    scenario-specific means/hit ratios, in one sampling pass.
+    """
+    shape = (n_scenarios, p, n_queries)
+    s_mean = service_time_server(params)[:, None, None]
+    if mode == "exponential":
+        return jax.random.exponential(key, shape) * s_mean
+    if mode == "balanced":
+        one = jax.random.exponential(key, (n_scenarios, 1, n_queries))
+        return jnp.broadcast_to(one * s_mean, shape)
+    if mode == "cache":
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        hit = jnp.asarray(params.hit)[:, None, None]
+        is_hit = jax.random.bernoulli(k1, jnp.broadcast_to(hit, shape))
+        t_hit = (jax.random.exponential(k2, shape)
+                 * jnp.asarray(params.s_hit)[:, None, None])
+        t_miss = (jax.random.exponential(k3, shape)
+                  * jnp.asarray(params.s_miss)[:, None, None]
+                  + jax.random.exponential(k4, shape)
+                  * jnp.asarray(params.s_disk)[:, None, None])
+        return jnp.where(is_hit, t_hit, t_miss)
+    raise ValueError(f"unknown service mode: {mode}")
+
+
+def simulate_fork_join_batch(
+    key: Array,
+    lam: Array,
+    params: ServerParams,
+    n_queries: int,
+    *,
+    p: int,
+    mode: str = "exponential",
+    impl: str = "xla",
+    warmup_fraction: float = 0.1,
+) -> Array:
+    """Mean response time of S fork-join scenarios in one XLA program.
+
+    ``lam`` and every ``params`` field are (S,) vectors describing S
+    independent scenarios that all share the SAME static server count
+    ``p`` (grids over p dispatch one batch per distinct p — see
+    `repro.core.sweep`).  With ``impl="pallas"`` the (S, p, n) and (S, n)
+    FCFS recurrences flatten onto the row axis of `maxplus_scan`, so all
+    S * (p + 1) sample paths run as a single Pallas grid.
+
+    Memory scales as S * p * n_queries floats — size grids accordingly.
+    """
+    return _simulate_fork_join_batch(key, lam, params, n_queries, p, mode,
+                                     impl, warmup_fraction)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_queries", "p", "mode", "impl",
+                              "warmup_fraction"))
+def _simulate_fork_join_batch(
+    key: Array,
+    lam: Array,
+    params: ServerParams,
+    n_queries: int,
+    p: int,
+    mode: str,
+    impl: str,
+    warmup_fraction: float,
+) -> Array:
+    n_scen = lam.shape[0]
+    k_arr, k_brk, k_srv = jax.random.split(key, 3)
+
+    gaps = jax.random.exponential(
+        k_arr, (n_scen, n_queries)) / lam[:, None]
+    arrivals = jnp.cumsum(gaps, axis=-1)
+
+    s_broker = (jax.random.exponential(k_brk, (n_scen, n_queries))
+                * jnp.asarray(params.s_broker)[:, None])
+    broker_done = fcfs_completion_times(arrivals, s_broker, impl=impl)
+
+    services = sample_service_times_batch(
+        k_srv, n_scen, n_queries, p, params, mode)
+    fork_times = jnp.broadcast_to(
+        broker_done[:, None, :], (n_scen, p, n_queries))
+    completions = fcfs_completion_times(fork_times, services, impl=impl)
+
+    join = jnp.max(completions, axis=1)
+    response = join - arrivals
+
+    n_warm = int(n_queries * warmup_fraction)
+    mask = (jnp.arange(n_queries) >= n_warm)[None, :]
+    return (jnp.sum(jnp.where(mask, response, 0.0), axis=-1)
+            / jnp.maximum(jnp.sum(mask, axis=-1), 1))
 
 
 @functools.partial(jax.jit, static_argnames=("c",))

@@ -1,0 +1,291 @@
+"""Vectorized what-if sweep engine (paper Sec 6 at grid scale).
+
+The paper answers "will configuration X keep response time under the
+constraint?" one scenario at a time.  This module evaluates a dense
+Cartesian grid
+
+    lambda x p x cpu-speedup x disk-speedup x cache-hit-ratio
+
+as a SINGLE XLA program, two ways:
+
+  * analytical — the Eq 7 bounds from `repro.core.queueing`, which already
+    broadcast, evaluated over the broadcasted grid.  Tens of thousands of
+    scenarios cost one fused elementwise kernel.
+  * simulation — batched Lindley recursions from
+    `simulator.simulate_fork_join_batch`.  All scenarios sharing a server
+    count p flatten onto the row axis of the `maxplus_scan` Pallas kernel,
+    so thousands of sample paths share one TPU scan; the grid's p axis
+    dispatches one such batch per distinct p (p is a shape parameter).
+
+On top sits constraint-satisfying frontier extraction: "for each arrival
+rate, the cheapest configuration with R <= SLO" (exposed to planners via
+`repro.core.planner.plan_over_grid`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import capacity, queueing, simulator
+from repro.core.queueing import ServerParams
+
+Array = jax.Array
+ArrayLike = Union[Array, Sequence[float], float]
+
+__all__ = [
+    "SweepGrid",
+    "SweepResult",
+    "Frontier",
+    "sweep_analytical",
+    "sweep_simulated",
+    "default_config_cost",
+    "extract_frontier",
+]
+
+def _axis(x: ArrayLike) -> Array:
+    return jnp.atleast_1d(jnp.asarray(x, jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepGrid:
+    """A dense what-if grid over the paper's Section-6 knobs.
+
+    Axis order is fixed: (lam, p, cpu, disk, hit).  ``base`` supplies the
+    measured per-server times that the cpu/disk speedups divide (paper
+    convention: CPU k-times faster divides every CPU time by k); its
+    ``p``/``hit`` fields are ignored in favor of the grid axes.  The
+    broker is CPU-bound and grows with p per the paper's linear fit,
+    unless ``broker_from_p=False`` pins it to ``base.s_broker``.
+    """
+
+    lam: Array
+    p: Array
+    cpu: Array
+    disk: Array
+    hit: Array
+    base: ServerParams
+    broker_from_p: bool = True
+
+    @classmethod
+    def build(cls, *, lam: ArrayLike, p: ArrayLike = 100.0,
+              cpu: ArrayLike = 1.0, disk: ArrayLike = 1.0,
+              hit: ArrayLike = None, memory: int = 1,
+              base: Optional[ServerParams] = None,
+              broker_from_p: bool = True) -> "SweepGrid":
+        """Grid from explicit axes; defaults come from Table 6 ``memory``."""
+        if base is None:
+            s_hit, s_miss, s_disk, h = capacity.MEMORY_TABLE[memory]
+            base = ServerParams(p=100, s_broker=capacity.broker_service_time(100),
+                                s_hit=s_hit, s_miss=s_miss, s_disk=s_disk,
+                                hit=h)
+        if hit is None:
+            hit = base.hit
+        return cls(lam=_axis(lam), p=_axis(p), cpu=_axis(cpu),
+                   disk=_axis(disk), hit=_axis(hit), base=base,
+                   broker_from_p=broker_from_p)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return (self.lam.shape[0], self.p.shape[0], self.cpu.shape[0],
+                self.disk.shape[0], self.hit.shape[0])
+
+    @property
+    def n_scenarios(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+    def broadcast(self) -> tuple[Array, ServerParams]:
+        """(lam, params) with every field shaped to broadcast over `shape`."""
+        lam = self.lam.reshape(-1, 1, 1, 1, 1)
+        p = self.p.reshape(1, -1, 1, 1, 1)
+        cpu = self.cpu.reshape(1, 1, -1, 1, 1)
+        disk = self.disk.reshape(1, 1, 1, -1, 1)
+        hit = self.hit.reshape(1, 1, 1, 1, -1)
+        if self.broker_from_p:
+            s_broker = capacity.broker_service_time(p) / cpu
+        else:
+            s_broker = jnp.asarray(self.base.s_broker, jnp.float32) / cpu
+        params = ServerParams(
+            p=p,
+            s_broker=s_broker,
+            s_hit=jnp.asarray(self.base.s_hit, jnp.float32) / cpu,
+            s_miss=jnp.asarray(self.base.s_miss, jnp.float32) / cpu,
+            s_disk=jnp.asarray(self.base.s_disk, jnp.float32) / disk,
+            hit=hit,
+        )
+        return lam, params
+
+    def broadcast_full(self) -> tuple[Array, ServerParams]:
+        """Like `broadcast`, but every array materialized to `shape`."""
+        lam, params = self.broadcast()
+        shape = self.shape
+        full = {
+            f.name: jnp.broadcast_to(
+                jnp.asarray(getattr(params, f.name), jnp.float32), shape)
+            for f in dataclasses.fields(ServerParams)
+        }
+        return jnp.broadcast_to(lam, shape), ServerParams(**full)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Dense response surfaces, all shaped `grid.shape` = (L,P,C,D,H)."""
+
+    grid: SweepGrid
+    response_lower: Array   # Eq 7 lower bound (s); +inf where saturated
+    response_upper: Array   # Eq 7 upper bound (s); the planning metric
+    utilization: Array      # index-server utilization lambda * S
+
+    @property
+    def response(self) -> Array:
+        """The conservative (paper-default) planning surface."""
+        return self.response_upper
+
+    @property
+    def feasible_fraction(self) -> Array:
+        return jnp.mean(jnp.isfinite(self.response_upper))
+
+
+@jax.jit
+def _bounds_surface(lam: Array, params: ServerParams):
+    lo, hi = queueing.response_time_bounds(lam, params)
+    util = queueing.utilization(lam, queueing.service_time_server(params))
+    return lo, hi, util
+
+
+def sweep_analytical(grid: SweepGrid) -> SweepResult:
+    """Evaluate Eq 7 bounds over the whole grid as one jitted call."""
+    lam, params = grid.broadcast()
+    shape = grid.shape
+    lo, hi, util = _bounds_surface(lam, params)
+    return SweepResult(
+        grid=grid,
+        response_lower=jnp.broadcast_to(lo, shape),
+        response_upper=jnp.broadcast_to(hi, shape),
+        utilization=jnp.broadcast_to(util, shape),
+    )
+
+
+def sweep_simulated(
+    grid: SweepGrid,
+    key: Array,
+    *,
+    n_queries: int = 20_000,
+    mode: str = "exponential",
+    impl: str = "xla",
+    warmup_fraction: float = 0.1,
+) -> Array:
+    """Simulated mean response over the grid, shaped `grid.shape`.
+
+    One `simulate_fork_join_batch` dispatch per distinct p (a static
+    shape); within a dispatch all L*C*D*H scenarios run as one program.
+    Memory is n_p_scenarios * p * n_queries floats per dispatch.
+    """
+    shape = grid.shape
+    lam_full, params_full = grid.broadcast_full()
+    fields = {f.name: getattr(params_full, f.name)
+              for f in dataclasses.fields(ServerParams)}
+
+    slabs = []
+    keys = jax.random.split(key, grid.p.shape[0])
+    for i, k in enumerate(keys):
+        p = int(round(float(grid.p[i])))
+        if abs(p - float(grid.p[i])) > 1e-3:
+            raise ValueError(
+                f"simulation needs integer server counts; got p={grid.p[i]}"
+                " (the analytical path accepts fractional p)")
+        flat = lambda x: x[:, i].reshape(-1)  # noqa: E731 — (L,C,D,H) slab
+        params_i = ServerParams(**{n: flat(v) for n, v in fields.items()})
+        mean = simulator.simulate_fork_join_batch(
+            k, flat(lam_full), params_i, n_queries, p=p, mode=mode,
+            impl=impl, warmup_fraction=warmup_fraction)
+        slabs.append(mean.reshape(shape[0], shape[2], shape[3], shape[4]))
+    return jnp.stack(slabs, axis=1)
+
+
+def default_config_cost(p: Array, cpu: Array, disk: Array,
+                        hit: Array) -> Array:
+    """Illustrative hardware cost: servers are the unit.
+
+    Each server costs 1 baseline, plus 0.5 per unit of extra CPU speed,
+    0.25 per unit of extra disk speed, and up to 1.0 for the memory that
+    buys a high disk-cache hit ratio.  Replace via the ``cost_fn``
+    argument of :func:`extract_frontier` for a real procurement model.
+    """
+    per_server = (1.0 + 0.5 * (cpu - 1.0) + 0.25 * (disk - 1.0)
+                  + 1.0 * hit)
+    return p * per_server
+
+
+@dataclasses.dataclass(frozen=True)
+class Frontier:
+    """Per-lambda cheapest feasible configuration (all arrays (L,))."""
+
+    lam: Array
+    feasible: Array    # bool: any config meets the SLO at this rate
+    cost: Array        # cost of the chosen config; +inf if infeasible
+    p: Array
+    cpu: Array
+    disk: Array
+    hit: Array
+    response: Array    # upper-bound response of the chosen config (s)
+
+    def describe(self, i: int) -> str:
+        if not bool(self.feasible[i]):
+            return (f"lam={float(self.lam[i]):g} qps: INFEASIBLE "
+                    f"anywhere on the grid")
+        return (f"lam={float(self.lam[i]):g} qps: p={float(self.p[i]):g} "
+                f"cpu x{float(self.cpu[i]):g} disk x{float(self.disk[i]):g} "
+                f"hit={float(self.hit[i]):.2f} -> "
+                f"R<={float(self.response[i]) * 1e3:.0f} ms "
+                f"(cost {float(self.cost[i]):.1f})")
+
+
+def extract_frontier(
+    result: SweepResult,
+    slo_seconds: float,
+    *,
+    cost_fn: Optional[Callable[[Array, Array, Array, Array], Array]] = None,
+) -> Frontier:
+    """Cheapest config with R_upper <= SLO, independently per lambda.
+
+    Fully vectorized: the (P,C,D,H) config-cost tensor is masked by the
+    feasibility surface and argmin-reduced per arrival rate.
+    """
+    grid = result.grid
+    cost_fn = cost_fn or default_config_cost
+    costs = cost_fn(
+        grid.p.reshape(-1, 1, 1, 1),
+        grid.cpu.reshape(1, -1, 1, 1),
+        grid.disk.reshape(1, 1, -1, 1),
+        grid.hit.reshape(1, 1, 1, -1),
+    )
+    costs = jnp.broadcast_to(costs, grid.shape[1:])
+
+    feasible = result.response_upper <= slo_seconds       # (L,P,C,D,H)
+    masked = jnp.where(feasible, costs[None], jnp.inf)
+    flat = masked.reshape(grid.shape[0], -1)
+    best = jnp.argmin(flat, axis=1)
+    best_cost = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
+
+    ip, ic, id_, ih = jnp.unravel_index(best, grid.shape[1:])
+    chosen_resp = jnp.take_along_axis(
+        result.response_upper.reshape(grid.shape[0], -1),
+        best[:, None], axis=1)[:, 0]
+    any_feasible = jnp.isfinite(best_cost)
+    return Frontier(
+        lam=grid.lam,
+        feasible=any_feasible,
+        cost=best_cost,
+        p=grid.p[ip],
+        cpu=grid.cpu[ic],
+        disk=grid.disk[id_],
+        hit=grid.hit[ih],
+        response=chosen_resp,
+    )

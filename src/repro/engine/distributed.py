@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.engine.broker import merge_topk
 from repro.engine.partition import Partitioned
 from repro.engine.scoring import score_queries
@@ -99,7 +100,7 @@ def make_search_fn(mesh: Mesh, stacked: StackedShards, *, k: int = 10,
         g_all = jax.lax.all_gather(g, axis)
         return merge_topk(s_all, g_all, k=k)
 
-    shard = jax.shard_map(
+    shard = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P()),
         out_specs=(P(), P()),

@@ -20,7 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
 
 DEFAULT_BLOCK_B = 256
 
@@ -61,7 +62,7 @@ def cin_layer_pallas(
         ],
         out_specs=pl.BlockSpec((block_b, o, 1), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((b, o, d), xk.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xk, x0, w)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 DEFAULT_BLOCK_K = 512
 
 _NEG_INF = float("-inf")
@@ -100,7 +102,7 @@ def decode_attention_pallas(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((bkv, g, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(length.reshape(1), q, k, v)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _bag_kernel(ids_ref, cnt_ref, table_ref, o_ref, acc_scr, *, bag: int):
     m = pl.program_id(1)
@@ -69,7 +71,7 @@ def embedding_bag_pallas(
             scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((bf, d), table.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(ids, counts, table)

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 DEFAULT_BLOCK_LEN = 512
 DEFAULT_ROW_TILE = 8
 
@@ -106,7 +108,7 @@ def maxplus_scan_pallas(
             pltpu.VMEM((row_tile, 1), a.dtype),
             pltpu.VMEM((row_tile, 1), b.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

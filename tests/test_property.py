@@ -5,7 +5,12 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see pyproject "
+    "[project.optional-dependencies].test)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import queueing, workload
 from repro.core.queueing import ServerParams

@@ -32,6 +32,7 @@ def test_distributed_search_8_shards():
     """Document-partitioned shard_map search == single-index search."""
     out = _run_in_child("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.engine import corpus as C, index as I, partition as P
         from repro.engine import server as S, distributed as D
         from repro.workloadgen import querygen as QG
@@ -49,8 +50,7 @@ def test_distributed_search_8_shards():
 
         part = P.partition_documents(corp, 8)
         stacked = D.stack_shards(part)
-        mesh = jax.make_mesh((8,), ('servers',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ('servers',))
         search = D.make_search_fn(mesh, stacked, k=5)
         s_dist, d_dist = search(q)
         np.testing.assert_allclose(np.asarray(s_dist), np.asarray(s_ref),
@@ -66,6 +66,7 @@ def test_lm_train_step_shards_on_mesh():
     out = _run_in_child("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
         from repro.configs.base import LMConfig, MoESpec
         from repro.launch.sharding import sharding_rules
         from repro.models import transformer as T
@@ -80,8 +81,7 @@ def test_lm_train_step_shards_on_mesh():
         labels = jnp.roll(tokens, -1, 1)
         ref = float(T.train_step_loss(params, cfg, tokens, labels))
 
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ('data', 'model'))
         rules = {'batch': ('data',), 'seq': None, 'seq_q': None,
                  'embed': None, 'heads': 'model', 'kv_heads': None,
                  'ffn': None, 'experts': 'model', 'vocab': 'model',
@@ -101,17 +101,16 @@ def test_elastic_restore_across_mesh_shapes():
     out = _run_in_child("""
         import tempfile, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
         from repro.ckpt import checkpoint as CK
 
-        mesh1 = jax.make_mesh((4, 2), ('data', 'model'),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh1 = compat.make_mesh((4, 2), ('data', 'model'))
         tree = {'w': jnp.arange(64.0).reshape(8, 8)}
         sh1 = {'w': NamedSharding(mesh1, P('data', 'model'))}
         placed = jax.tree.map(jax.device_put, tree, sh1)
         with tempfile.TemporaryDirectory() as d:
             CK.save(d, 5, placed)
-            mesh2 = jax.make_mesh((2, 2), ('data', 'model'),
-                                  axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh2 = compat.make_mesh((2, 2), ('data', 'model'))
             sh2 = {'w': NamedSharding(mesh2, P('data', 'model'))}
             restored = CK.restore(d, 5, tree, shardings=sh2)
             np.testing.assert_allclose(np.asarray(restored['w']),
@@ -128,6 +127,7 @@ def test_dryrun_single_cell_small_devices():
     out = _run_in_child("""
         import dataclasses, jax, jax.numpy as jnp
         from jax.sharding import Mesh
+        from repro import compat
         from repro.configs.base import ArchSpec, LMConfig, ShapeSpec
         from repro.launch.sharding import sharding_rules
         from repro.launch import specs as SP
@@ -140,8 +140,7 @@ def test_dryrun_single_cell_small_devices():
                         smoke_config=cfg,
                         shapes=(ShapeSpec('train', 'train',
                                 dict(seq_len=128, global_batch=8)),))
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ('data', 'model'))
         # patch data_axes/model divisibility: rules come from lm_rules
         build = SP.build_lm_cell(spec, spec.shapes[0], mesh, False)
         with mesh, sharding_rules(build.rules):

@@ -1,0 +1,167 @@
+"""What-if sweep engine: grid semantics, sim agreement, frontier."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import capacity, planner, queueing, sweep
+from repro.core.queueing import ServerParams
+
+
+def _small_grid():
+    return sweep.SweepGrid.build(
+        lam=jnp.asarray([4.0, 16.0, 32.0]),
+        p=jnp.asarray([50.0, 100.0]),
+        cpu=jnp.asarray([1.0, 4.0]),
+        disk=jnp.asarray([1.0, 4.0]),
+        hit=jnp.asarray([0.02, 0.18]),
+    )
+
+
+def test_grid_matches_scalar_evaluation():
+    """Every grid cell equals the one-scenario-at-a-time computation."""
+    grid = _small_grid()
+    res = sweep.sweep_analytical(grid)
+    assert res.response_upper.shape == grid.shape
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        il, ip, ic, id_, ih = (int(rng.integers(0, d)) for d in grid.shape)
+        cpu, disk = float(grid.cpu[ic]), float(grid.disk[id_])
+        p = float(grid.p[ip])
+        params = ServerParams(
+            p=p,
+            s_broker=capacity.broker_service_time(p) / cpu,
+            s_hit=grid.base.s_hit / cpu,
+            s_miss=grid.base.s_miss / cpu,
+            s_disk=grid.base.s_disk / disk,
+            hit=float(grid.hit[ih]),
+        )
+        lo, hi = queueing.response_time_bounds(float(grid.lam[il]), params)
+        np.testing.assert_allclose(
+            float(res.response_upper[il, ip, ic, id_, ih]), float(hi),
+            rtol=1e-5)
+        np.testing.assert_allclose(
+            float(res.response_lower[il, ip, ic, id_, ih]), float(lo),
+            rtol=1e-5)
+
+
+def test_response_monotone_in_lambda():
+    """Along the lam axis the upper bound is nondecreasing (inf-saturated)."""
+    grid = sweep.SweepGrid.build(
+        lam=jnp.linspace(1.0, 60.0, 12), p=jnp.asarray([50.0, 100.0]),
+        cpu=jnp.asarray([1.0, 2.0]), disk=jnp.asarray([1.0, 2.0]),
+        hit=jnp.asarray([0.02, 0.18]))
+    hi = np.asarray(sweep.sweep_analytical(grid).response_upper)
+    with np.errstate(invalid="ignore"):  # inf - inf in saturated cells
+        diffs = np.diff(hi, axis=0)
+    # inf - inf = nan where both saturated; treat as nondecreasing
+    assert np.all((diffs >= -1e-6) | np.isnan(diffs))
+
+
+def test_analytical_vs_simulation_agreement():
+    """Simulated means land inside Eq 7 bounds across a small grid."""
+    grid = sweep.SweepGrid.build(
+        lam=jnp.asarray([10.0, 20.0]), p=jnp.asarray([4.0, 8.0]),
+        base=capacity.TABLE5_PARAMS, hit=jnp.asarray([0.17]),
+        broker_from_p=False)
+    sim = np.asarray(sweep.sweep_simulated(
+        grid, jax.random.PRNGKey(0), n_queries=60_000))
+    res = sweep.sweep_analytical(grid)
+    lo = np.asarray(res.response_lower)
+    hi = np.asarray(res.response_upper)
+    assert sim.shape == grid.shape
+    assert np.all(sim > lo * 0.95), (sim, lo)
+    assert np.all(sim < hi * 1.05), (sim, hi)
+
+
+def test_batch_simulator_matches_single_scenario():
+    """(S=1) batched Lindley == the scalar simulate_fork_join estimate."""
+    from repro.core import simulator
+    pr = dataclasses.replace(capacity.TABLE5_PARAMS, p=8)
+    single = simulator.simulate_fork_join(
+        jax.random.PRNGKey(1), 20.0, 60_000, pr, mode="exponential")
+    vec = ServerParams(**{
+        f.name: jnp.asarray([getattr(pr, f.name)], jnp.float32)
+        for f in dataclasses.fields(ServerParams)})
+    batch = simulator.simulate_fork_join_batch(
+        jax.random.PRNGKey(2), jnp.asarray([20.0]), vec, 60_000, p=8)
+    assert abs(float(batch[0]) - float(single.mean_response)) < 0.1 * float(
+        single.mean_response)
+
+
+def test_batch_simulator_pallas_matches_xla():
+    """The shared-Pallas-scan path computes the identical recurrence."""
+    from repro.core import simulator
+    pr = capacity.TABLE5_PARAMS
+    vec = ServerParams(**{
+        f.name: jnp.asarray([getattr(pr, f.name)] * 2, jnp.float32)
+        for f in dataclasses.fields(ServerParams)})
+    lam = jnp.asarray([15.0, 25.0])
+    r_xla = simulator.simulate_fork_join_batch(
+        jax.random.PRNGKey(3), lam, vec, 8_000, p=4, impl="xla")
+    r_pl = simulator.simulate_fork_join_batch(
+        jax.random.PRNGKey(3), lam, vec, 8_000, p=4, impl="pallas")
+    np.testing.assert_allclose(np.asarray(r_xla), np.asarray(r_pl),
+                               rtol=1e-4)
+
+
+def test_frontier_picks_minimal_cost_feasible():
+    """Vectorized frontier == numpy brute force over the same surface."""
+    grid = _small_grid()
+    slo = 0.300
+    res, fr = planner.plan_over_grid(grid, slo)
+    hi = np.asarray(res.response_upper)
+    p = np.asarray(grid.p)
+    cpu = np.asarray(grid.cpu)
+    disk = np.asarray(grid.disk)
+    hit = np.asarray(grid.hit)
+    for il in range(grid.shape[0]):
+        best_cost, best_cfg = np.inf, None
+        for ip in range(len(p)):
+            for ic in range(len(cpu)):
+                for id_ in range(len(disk)):
+                    for ih in range(len(hit)):
+                        if hi[il, ip, ic, id_, ih] <= slo:
+                            c = float(sweep.default_config_cost(
+                                p[ip], cpu[ic], disk[id_], hit[ih]))
+                            if c < best_cost:
+                                best_cost = c
+                                best_cfg = (p[ip], cpu[ic], disk[id_],
+                                            hit[ih])
+        if best_cfg is None:
+            assert not bool(fr.feasible[il])
+        else:
+            assert bool(fr.feasible[il])
+            np.testing.assert_allclose(float(fr.cost[il]), best_cost,
+                                       rtol=1e-6)
+            got = (float(fr.p[il]), float(fr.cpu[il]), float(fr.disk[il]),
+                   float(fr.hit[il]))
+            np.testing.assert_allclose(got, best_cfg, rtol=1e-6)
+        # the chosen config's response must itself satisfy the SLO
+        if bool(fr.feasible[il]):
+            assert float(fr.response[il]) <= slo
+
+
+def test_frontier_custom_cost_fn():
+    """A server-count-only cost picks the smallest feasible p."""
+    grid = _small_grid()
+    res = sweep.sweep_analytical(grid)
+    fr = sweep.extract_frontier(
+        res, 0.300, cost_fn=lambda p, cpu, disk, hit: p + 0 * cpu * disk * hit)
+    hi = np.asarray(res.response_upper)
+    for il in range(grid.shape[0]):
+        if bool(fr.feasible[il]):
+            feasible_p = np.asarray(grid.p)[
+                np.where((hi[il] <= 0.300).any(axis=(1, 2, 3)))[0]]
+            assert float(fr.p[il]) == feasible_p.min()
+
+
+def test_grid_build_from_memory_table():
+    g = sweep.SweepGrid.build(lam=[10.0], memory=4)
+    s_hit, s_miss, s_disk, hit = capacity.MEMORY_TABLE[4]
+    assert float(g.base.s_hit) == s_hit
+    assert float(g.hit[0]) == np.float32(hit)
+    assert g.shape == (1, 1, 1, 1, 1)
+    assert g.n_scenarios == 1
