@@ -102,7 +102,7 @@ def bench_simulator_scale(rows):
     t0 = time.perf_counter()
     res = simulator.simulate_fork_join(
         jax.random.PRNGKey(5), 20.0, 50_000, pr, mode="exponential")
-    jax.block_until_ready(res.response)
+    jax.block_until_ready(res.mean_response)
     dt = time.perf_counter() - t0
     rows.append(("simulator_256x50k", dt * 1e6,
                  f"{256 * 50_000 / dt / 1e6:.1f}M server-events/s"))

@@ -74,9 +74,9 @@ def bench_fig6_interarrival_fits(rows):
 def bench_fig7_service_time_fits(rows):
     """Fig 7: per-server service times ~ Exponential (mixture workload)."""
     key = jax.random.PRNGKey(2)
-    params = capacity.TABLE5_PARAMS
-    svc = simulator.sample_service_times(key, 85_604, 1, params,
-                                         "cache")[0]
+    params = simulator._vec_params(capacity.TABLE5_PARAMS)
+    svc = simulator.sample_service_times_batch(key, 1, 85_604, 1, params,
+                                               "cache")[0, 0]
     winner, stats = workload.best_fit(svc, "ks")
     rows.append(("fig7_service_fit", 0.0,
                  f"winner={winner} D_exp={float(stats['exponential']):.4f}"

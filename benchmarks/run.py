@@ -11,7 +11,7 @@ import sys
 import traceback
 
 from benchmarks import (kernels_bench, paper_tables, partitioning_bench,
-                        sweep_bench)
+                        streaming_bench, sweep_bench)
 
 BENCHES = [
     paper_tables.bench_table2_query_lengths,
@@ -34,6 +34,7 @@ BENCHES = [
     kernels_bench.bench_simulator_scale,
     sweep_bench.bench_sweep_grid,
     sweep_bench.bench_sweep_simulated,
+    streaming_bench.bench_streaming_sweep,
     partitioning_bench.bench_partitioning,
 ]
 

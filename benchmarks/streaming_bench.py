@@ -1,0 +1,85 @@
+"""Streaming-sweep benchmark: throughput + peak-memory proxy, persisted.
+
+Registers the perf trajectory of the streaming chunked engine: simulated
+queries/second on a sweep-shaped batch, and the peak-memory proxy of the
+carried state (S x p x chunk floats) against what the old materializing
+path would have allocated (~6 arrays of S x p x n_queries floats inside
+one XLA program).  Results go to ``BENCH_streaming.json`` in the working
+directory so successive PRs can diff them.
+
+The headline run streams n_queries an order of magnitude past the old
+engine's comfortable ceiling — the ISSUE's acceptance scenario.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+BENCH_JSON = pathlib.Path("BENCH_streaming.json")
+
+# ~6 materialized S x p x n arrays (gaps/arrivals, broker, services,
+# fork times, completions, response) in the old monolithic engine
+_OLD_PATH_ARRAYS = 6
+_F32 = 4
+
+
+def bench_streaming_sweep(rows):
+    from repro.core import capacity, sweep
+
+    grid = sweep.SweepGrid.build(
+        lam=jnp.asarray([10.0, 18.0, 25.0]),
+        p=jnp.asarray([8.0]),
+        cpu=jnp.asarray([1.0, 2.0]),
+        disk=jnp.asarray([1.0, 2.0]),
+        base=capacity.TABLE5_PARAMS,
+        hit=jnp.asarray([0.17]),
+        broker_from_p=False,
+    )
+    n_scen, p, chunk = grid.n_scenarios, 8, 4096
+    n_q = 600_000   # ~10x past the old path's comfortable grid ceiling
+
+    def run():
+        res = sweep.sweep_simulated(grid, jax.random.PRNGKey(0),
+                                    n_queries=n_q, chunk_size=chunk)
+        jax.block_until_ready(res.mean)
+        return res
+
+    res = run()                       # compile + run
+    t0 = time.perf_counter()
+    res = run()
+    dt = time.perf_counter() - t0
+
+    queries_per_s = n_scen * n_q / dt
+    events_per_s = n_scen * (p + 1) * n_q / dt
+    peak_stream = n_scen * p * chunk * _F32
+    peak_materialized = _OLD_PATH_ARRAYS * n_scen * p * n_q * _F32
+
+    record = {
+        "bench": "streaming_sweep",
+        "n_scenarios": n_scen,
+        "p": p,
+        "n_queries": n_q,
+        "chunk_size": chunk,
+        "wall_seconds": dt,
+        "queries_per_s": queries_per_s,
+        "events_per_s": events_per_s,
+        "peak_mem_streaming_bytes": peak_stream,
+        "peak_mem_materializing_bytes": peak_materialized,
+        "memory_reduction_x": peak_materialized / peak_stream,
+        "mean_response_check": [float(x) for x in
+                                jnp.ravel(res.mean)[:3]],
+    }
+    BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+
+    rows.append(("streaming_sweep", dt * 1e6,
+                 f"{n_scen} scen x {n_q} queries streamed; "
+                 f"{queries_per_s / 1e6:.2f}M queries/s; peak state "
+                 f"{peak_stream / 2**20:.1f} MiB vs "
+                 f"{peak_materialized / 2**30:.1f} GiB materialized "
+                 f"({peak_materialized / peak_stream:.0f}x); "
+                 f"-> {BENCH_JSON}"))

@@ -1,0 +1,71 @@
+"""Plan for the daily peak, not the daily average.
+
+The paper's Section 4.2 shows query traffic is Poisson only *within* a
+stable window — across a day the rate swings by ~4x.  The streaming
+simulation core makes that load class first-class: an `ArrivalProcess`
+profile modulates every scenario's arrival rate chunk by chunk, and the
+streaming histogram gives p95/p99 surfaces next to the means.
+
+This example answers the new planning question directly: for the Table 5
+workload, what is the cheapest server count whose **p95 survives the
+diurnal peak**, versus the cheaper answer you get by (mis)planning
+against the **mean under stationary load** at the same average rate?
+
+Run:  PYTHONPATH=src python examples/diurnal_sweep.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import capacity, planner, sweep
+from repro.workloadgen import loadgen
+
+MS = 1e3
+SLO = 0.8          # seconds
+N_QUERIES = 40_000
+
+lam = jnp.asarray([14.0, 20.0])            # time-AVERAGED rates (qps)
+grid = sweep.SweepGrid.build(
+    lam=lam,
+    p=jnp.asarray([4.0, 8.0]),
+    cpu=jnp.asarray([1.0, 2.0, 4.0]),
+    base=capacity.TABLE5_PARAMS,
+    hit=jnp.asarray([0.17]),
+    broker_from_p=False,
+)
+cost = sweep.default_config_cost
+
+key = jax.random.PRNGKey(0)
+
+print("== Frontier 1: stationary load, mean response <= SLO ==")
+_, fr_mean = planner.plan_over_grid(
+    grid, SLO, simulate=True, key=key, n_queries=N_QUERIES, cost_fn=cost)
+for i in range(lam.shape[0]):
+    print("  ", fr_mean.describe(i))
+
+print("\n== Frontier 2: diurnal load (4x peak/trough), p95 <= SLO ==")
+profile = loadgen.diurnal_rates(1.0)       # weekly hourly curve, relative
+# compress the week so the simulated horizon covers multiple full cycles
+horizon_s = N_QUERIES / float(lam[0])
+bin_s = horizon_s / profile.shape[0] / 4
+res95, fr_p95 = planner.plan_over_grid(
+    grid, SLO, simulate=True, key=key, n_queries=N_QUERIES, cost_fn=cost,
+    quantile=0.95, profile=profile, profile_bin_seconds=bin_s)
+for i in range(lam.shape[0]):
+    print("  ", fr_p95.describe(i))
+
+print("\n== The gap ==")
+for i in range(lam.shape[0]):
+    c_mean, c_p95 = float(fr_mean.cost[i]), float(fr_p95.cost[i])
+    print(f"  lam={float(lam[i]):g} qps: mean-planning costs "
+          f"{c_mean:g}; surviving the daily peak at p95 costs {c_p95:g}"
+          + ("  <- UNDER-PROVISIONED by mean-planning"
+             if c_p95 > c_mean else ""))
+
+print("\np95 surface along cpu speedup (lam = {:.0f} qps, p=4, diurnal):"
+      .format(float(lam[1])))
+p95 = res95.quantile(0.95)
+for j in range(grid.cpu.shape[0]):
+    v = float(p95[1, 0, j, 0, 0]) * MS
+    print(f"  cpu x{float(grid.cpu[j]):g}: p95 = {v:7.1f} ms "
+          + ("(meets SLO)" if v <= SLO * MS else ""))

@@ -1,0 +1,137 @@
+"""Arrival-process abstraction shared by workload generation and the DES.
+
+The paper's Section 4.2 characterizes query traffic as Poisson *within a
+stable window* whose rate follows diurnal/weekly structure across windows.
+This module encodes exactly that: an :class:`ArrivalProcess` is a
+piecewise-constant rate function (qps per time bin, tiling periodically)
+plus, optionally, a replayed trace of concrete timestamps.
+
+It is a registered pytree, so the streaming simulator
+(`repro.core.simulator`) can close over it inside ``jax.lax.scan``: each
+query chunk reads the rate at its start time and draws that chunk's
+exponential gaps at that rate — the paper's "homogeneous within a window"
+assumption made operational.  `repro.workloadgen.loadgen` builds the same
+profiles for open-loop load generation, so the generator and the simulator
+can never drift apart on what "the daily peak" means.
+
+Three constructors cover the ISSUE's regimes:
+
+  * :meth:`ArrivalProcess.stationary` — constant-rate Poisson (one bin);
+  * :meth:`ArrivalProcess.piecewise` — explicit rate-per-bin profiles
+    (diurnal/weekly curves, folded traces, step loads);
+  * :meth:`ArrivalProcess.from_trace` — replay measured timestamps.
+
+Leading dimensions of ``rates`` are scenario dimensions: a ``(S, B)``
+rates array drives S independent scenarios through one shared profile
+shape, which is how `repro.core.sweep` scales a normalized diurnal curve
+by every grid point's mean arrival rate at once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+ArrayLike = Union[Array, Sequence[float], float]
+
+__all__ = ["ArrivalProcess"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    """Piecewise-constant-rate Poisson arrivals, optionally trace-driven.
+
+    rates: (..., n_bins) arrival rate (qps) per time bin; leading dims are
+        scenario dims.  The profile tiles with period n_bins*bin_seconds.
+    bin_seconds: scalar bin width in seconds.
+    trace_gaps: optional (n,) interarrival gaps of a replayed trace.  When
+        present the simulator consumes these instead of drawing gaps;
+        ``rates`` then only provides the trace's mean rate (used e.g. to
+        scale histogram bins).
+    """
+
+    rates: Array
+    bin_seconds: Array
+    trace_gaps: Optional[Array] = None
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def stationary(cls, rate: ArrayLike) -> "ArrivalProcess":
+        """Homogeneous Poisson at ``rate`` qps; any leading scenario shape."""
+        r = jnp.asarray(rate)
+        return cls(rates=r[..., None], bin_seconds=jnp.asarray(1.0))
+
+    @classmethod
+    def piecewise(cls, rates: ArrayLike, bin_seconds: ArrayLike
+                  ) -> "ArrivalProcess":
+        """Rate ``rates[..., i]`` on [i*bin, (i+1)*bin), tiling periodically."""
+        return cls(rates=jnp.asarray(rates),
+                   bin_seconds=jnp.asarray(bin_seconds))
+
+    @classmethod
+    def from_trace(cls, timestamps: ArrayLike) -> "ArrivalProcess":
+        """Replay a measured (sorted, 1-D) arrival-timestamp trace.
+
+        Gaps are differenced host-side in float64 BEFORE any float32
+        conversion: near the end of a week-long window a float32
+        timestamp only resolves 1/16 s, which would quantize sub-100 ms
+        gaps to zero.  The gap values themselves are small and survive
+        float32 fine.
+        """
+        t = np.asarray(timestamps, dtype=np.float64)
+        gaps = jnp.asarray(np.diff(t, prepend=t[:1]))
+        span = max(float(t[-1] - t[0]), 1e-9)
+        mean_rate = (t.shape[0] - 1) / span
+        return cls(rates=jnp.asarray(mean_rate)[None],
+                   bin_seconds=jnp.asarray(1.0), trace_gaps=gaps)
+
+    # -- derived quantities ------------------------------------------------
+
+    @property
+    def n_bins(self) -> int:
+        return self.rates.shape[-1]
+
+    @property
+    def period_seconds(self) -> Array:
+        return self.n_bins * self.bin_seconds
+
+    @property
+    def mean_rate(self) -> Array:
+        """Per-scenario time-averaged rate, shape ``rates.shape[:-1]``."""
+        return jnp.mean(self.rates, axis=-1)
+
+    @property
+    def peak_rate(self) -> Array:
+        return jnp.max(self.rates, axis=-1)
+
+    def rate_at(self, t: ArrayLike) -> Array:
+        """Rate at absolute time ``t`` (scalar or per-scenario vector)."""
+        t = jnp.asarray(t)
+        idx = jnp.floor((t % self.period_seconds)
+                        / self.bin_seconds).astype(jnp.int32)
+        idx = jnp.clip(idx, 0, self.n_bins - 1)
+        if self.rates.ndim == 1:
+            return jnp.take(self.rates, idx)
+        return jnp.take_along_axis(self.rates, idx[..., None], axis=-1)[..., 0]
+
+    def scaled_by(self, scale: ArrayLike) -> "ArrivalProcess":
+        """Scenario-scaled copy: rates ``scale[..., None] * rates``.
+
+        Used by the sweep engine to drive every grid point's mean rate
+        through one shared (typically mean-normalized) profile.
+        """
+        s = jnp.asarray(scale)
+        return dataclasses.replace(self, rates=s[..., None] * self.rates)
+
+    def normalized(self) -> "ArrivalProcess":
+        """Copy with rates scaled to a time-averaged mean of 1 qps."""
+        return dataclasses.replace(
+            self, rates=self.rates / jnp.maximum(self.mean_rate[..., None],
+                                                 1e-30))

@@ -25,6 +25,7 @@ import dataclasses
 import math
 from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import capacity, queueing, sweep
@@ -194,15 +195,51 @@ def plan_over_grid(
     slo_seconds: float,
     *,
     cost_fn: Optional[Callable] = None,
-) -> tuple[sweep.SweepResult, sweep.Frontier]:
+    simulate: bool = False,
+    key=None,
+    quantile: Optional[float] = None,
+    n_queries: Optional[int] = None,
+    profile=None,
+    profile_bin_seconds: float = 3600.0,
+    **sim_kwargs,
+):
     """Section-6 what-if analysis over a whole configuration grid at once.
 
-    Evaluates the analytical (Eq 7 upper bound) response surface for every
-    (lambda, p, cpu, disk, hit) combination as one XLA program and extracts
-    the constraint-satisfying frontier: per arrival rate, the cheapest
-    configuration with R_upper <= SLO.  Returns the dense surface too so
-    callers can plot Figs 9-12 style curves from the same evaluation.
+    Default: evaluates the analytical (Eq 7 upper bound) response surface
+    for every (lambda, p, cpu, disk, hit) combination as one XLA program
+    and extracts the constraint-satisfying frontier: per arrival rate, the
+    cheapest configuration with R_upper <= SLO.  Returns the dense surface
+    too so callers can plot Figs 9-12 style curves from the same
+    evaluation.
+
+    New knobs opened by the streaming simulation core:
+
+      * ``simulate=True`` — replace the analytic surface with the
+        streaming-simulated one (`sweep.sweep_simulated`); ``n_queries``
+        and any extra ``sim_kwargs`` (mode, impl, chunk_size, hist_bins)
+        pass through, and memory stays bounded by the chunk size no matter
+        how long the simulated horizon is.
+      * ``quantile=0.95`` — plan against tail latency instead of the
+        mean/upper surface (works for both analytic and simulated paths).
+      * ``profile=`` a relative-rate curve (e.g. ``loadgen.diurnal_rates``)
+        with ``profile_bin_seconds`` — makes every simulated scenario's
+        load time-varying, so "the cheapest config whose p95 survives the
+        daily peak" is ``simulate=True, quantile=0.95, profile=...``.
     """
-    result = sweep.sweep_analytical(grid)
-    frontier = sweep.extract_frontier(result, slo_seconds, cost_fn=cost_fn)
+    if simulate:
+        key = jax.random.PRNGKey(0) if key is None else key
+        result = sweep.sweep_simulated(
+            grid, key, n_queries=20_000 if n_queries is None else n_queries,
+            profile=profile, profile_bin_seconds=profile_bin_seconds,
+            **sim_kwargs)
+    else:
+        if (profile is not None or key is not None
+                or n_queries is not None or sim_kwargs):
+            raise ValueError(
+                "profile/key/n_queries/simulation kwargs only take effect "
+                "with simulate=True; the analytic path would silently "
+                "ignore them")
+        result = sweep.sweep_analytical(grid)
+    frontier = sweep.extract_frontier(result, slo_seconds, cost_fn=cost_fn,
+                                      quantile=quantile)
     return result, frontier

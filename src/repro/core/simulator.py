@@ -1,4 +1,4 @@
-"""Massively parallel discrete-event simulator for fork-join search clusters.
+"""Streaming max-plus discrete-event simulator for fork-join search clusters.
 
 The paper validates its model on an 8-node physical cluster and leaves
 "simulation-based analysis ... for larger clusters with thousands of index
@@ -14,10 +14,24 @@ and the affine maps c -> max(a, c + b) compose associatively:
 
     (a1,b1) then (a2,b2)  =  (max(a2, a1 + b2), b1 + b2)
 
-so an entire M/M/1 sample path is one `jax.lax.associative_scan` (O(log n)
-depth), a p-server fork-join cluster is a batch dimension, and millions of
-queries x thousands of servers simulate in one XLA program.  A Pallas TPU
-kernel for the blockwise scan lives in `repro.kernels.maxplus_scan`.
+so a whole sample path is one associative scan — and, because the maps
+compose, FCFS state *streams*: the engine scans fixed-size query chunks
+with ``jax.lax.scan``, carrying only the per-(scenario, server) last
+completion times plus running statistics (count, sum, sum of squares and
+a fixed-bin log histogram of response times for quantiles).  Peak memory
+is S x p x chunk floats regardless of the total query count, so grids
+10-100x larger than the old materializing engine fit, and simulated
+horizons of millions of queries stream through unchanged.  Within a chunk
+the scan runs either as `jax.lax.associative_scan` or as the Pallas TPU
+kernel (`repro.kernels.maxplus_scan`), seeded from the carry via its
+``maxplus_scan_seeded`` entry point.
+
+Arrivals come from an :class:`repro.core.arrivals.ArrivalProcess`:
+stationary Poisson, piecewise-rate diurnal/weekly profiles (each chunk
+draws gaps at the rate read off at its start time — the paper's
+Section 4.2 "homogeneous within a window" structure), or a replayed
+trace.  Scalar rates are promoted to stationary processes, so existing
+call sites keep working.
 
 Simulated system (paper Fig 8): broker FCFS queue -> fork to p index-server
 FCFS queues -> join (max over servers) -> response = join - arrival.
@@ -29,17 +43,26 @@ Service-time generators cover three regimes:
     Exp(s_hit) vs Exp(s_miss)+Exp(s_disk): the mechanistic story of Sec 3.4.
   * "balanced"    — identical service time for all servers per query: the
     Chowdhury & Pass assumption the paper argues against.
+
+RNG plan: all randomness for chunk c comes from ``fold_in(key, c)`` via
+:func:`chunk_random_draws` — one canonical plan used by the streaming
+engine and by any monolithic reference reconstruction, so the two are
+comparable sample-path-for-sample-path.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+import math
+import warnings
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import queueing
+from repro.core.arrivals import ArrivalProcess
 from repro.core.queueing import ServerParams, service_time_server
 
 Array = jax.Array
@@ -47,13 +70,22 @@ Array = jax.Array
 __all__ = [
     "maxplus_combine",
     "fcfs_completion_times",
+    "ArrivalProcess",
     "SimResult",
     "simulate_fork_join",
     "simulate_fork_join_batch",
     "simulate_mmc",
-    "sample_service_times",
     "sample_service_times_batch",
+    "chunk_random_draws",
+    "DEFAULT_CHUNK",
+    "DEFAULT_HIST_BINS",
 ]
+
+DEFAULT_CHUNK = 4096
+DEFAULT_HIST_BINS = 256
+# log-histogram span, in decades around the per-scenario analytic scale
+_HIST_DECADES_BELOW = 3.0
+_HIST_DECADES_TOTAL = 6.0
 
 
 def maxplus_combine(x, y):
@@ -64,141 +96,109 @@ def maxplus_combine(x, y):
 
 
 def fcfs_completion_times(arrivals: Array, services: Array,
-                          impl: str = "xla") -> Array:
+                          impl: str = "xla",
+                          carry: Optional[Array] = None) -> Array:
     """Completion times of an FCFS single-server queue.
 
     arrivals: (..., n) nondecreasing along the last axis.
     services: (..., n) positive.
     impl: "xla" (associative_scan) or "pallas" (TPU kernel; interpret=True
     on CPU) — both compute the identical recurrence.
+    carry: optional (...,) completion time of the work *before* this
+    block; seeding composes it on top of the scan, which is how the
+    streaming engine chains chunks.
     """
     a = arrivals + services
     b = services
     if impl == "pallas":
         from repro.kernels.maxplus_scan import ops as mp_ops
-        out_a, _ = mp_ops.maxplus_scan(a, b)
+        if carry is None:
+            out_a, _ = mp_ops.maxplus_scan(a, b)
+        else:
+            out_a, _ = mp_ops.maxplus_scan_seeded(a, b, carry)
         return out_a
-    out_a, _ = jax.lax.associative_scan(maxplus_combine, (a, b), axis=-1)
+    out_a, out_b = jax.lax.associative_scan(maxplus_combine, (a, b), axis=-1)
+    if carry is not None:
+        out_a = jnp.maximum(out_a, jnp.asarray(carry)[..., None] + out_b)
     return out_a
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SimResult:
-    """Per-query response times plus the summary stats the paper reports."""
+    """Streaming summary statistics of a fork-join simulation.
 
-    response: Array          # (n_queries,) end-to-end response time
-    server_residence: Array  # (n_queries,) residence at ONE tagged server
-    cluster_residence: Array  # (n_queries,) fork-join (max over servers)
-    broker_residence: Array  # (n_queries,)
+    Every field carries the run's scenario shape in front (scalar for a
+    single-scenario run, ``(S,)`` for batches, the full grid shape after a
+    sweep).  Warmup queries are *discarded* from every accumulator — no
+    mean-substitution masking, so quantiles are unbiased.
+
+    Quantiles come from a fixed-bin logarithmic response-time histogram:
+    ``hist[..., k]`` counts responses in
+    ``[exp(log_lo + k*step), exp(log_lo + (k+1)*step))``; under/overflow
+    is clamped into the edge bins.
+    """
+
+    count: Array           # post-warmup samples per scenario
+    sum_response: Array
+    sumsq_response: Array
+    sum_broker: Array      # broker residence sum
+    sum_cluster: Array     # fork-join (max over servers) residence sum
+    sum_server: Array      # residence at ONE tagged server
+    hist: Array            # (..., n_bins) response-time histogram counts
+    hist_log_lo: Array     # (...,) ln(lowest bin edge, seconds)
+    hist_log_step: Array   # (...,) ln(bin edge ratio)
+
+    @property
+    def _n(self) -> Array:
+        return jnp.maximum(self.count, 1.0)
 
     @property
     def mean_response(self) -> Array:
-        return jnp.mean(self.response)
+        return self.sum_response / self._n
 
     @property
-    def mean_server_residence(self) -> Array:
-        return jnp.mean(self.server_residence)
+    def var_response(self) -> Array:
+        m = self.mean_response
+        return jnp.maximum(self.sumsq_response / self._n - m * m, 0.0)
+
+    @property
+    def std_response(self) -> Array:
+        return jnp.sqrt(self.var_response)
+
+    @property
+    def mean_broker_residence(self) -> Array:
+        return self.sum_broker / self._n
 
     @property
     def mean_cluster_residence(self) -> Array:
-        return jnp.mean(self.cluster_residence)
+        return self.sum_cluster / self._n
+
+    @property
+    def mean_server_residence(self) -> Array:
+        return self.sum_server / self._n
 
     def quantile(self, q: float) -> Array:
-        return jnp.quantile(self.response, q)
+        """q-quantile of the response time from the streaming histogram.
 
-
-def sample_service_times(
-    key: Array, n_queries: int, p: int, params: ServerParams, mode: str
-) -> Array:
-    """(p, n_queries) per-server service times under the chosen regime."""
-    s_mean = service_time_server(params)
-    if mode == "exponential":
-        return jax.random.exponential(key, (p, n_queries)) * s_mean
-    if mode == "balanced":
-        one = jax.random.exponential(key, (1, n_queries)) * s_mean
-        return jnp.broadcast_to(one, (p, n_queries))
-    if mode == "cache":
-        k1, k2, k3, k4 = jax.random.split(key, 4)
-        is_hit = jax.random.bernoulli(k1, params.hit, (p, n_queries))
-        t_hit = jax.random.exponential(k2, (p, n_queries)) * params.s_hit
-        t_miss = (jax.random.exponential(k3, (p, n_queries)) * params.s_miss
-                  + jax.random.exponential(k4, (p, n_queries)) * params.s_disk)
-        return jnp.where(is_hit, t_hit, t_miss)
-    raise ValueError(f"unknown service mode: {mode}")
-
-
-def simulate_fork_join(
-    key: Array,
-    lam: float,
-    n_queries: int,
-    params: ServerParams,
-    *,
-    p: Optional[int] = None,
-    mode: str = "exponential",
-    impl: str = "xla",
-    warmup_fraction: float = 0.1,
-) -> SimResult:
-    """Simulate the full broker + p-server fork-join network (Fig 8).
-
-    The broker is visited once per query with service S_broker (the paper
-    lumps broadcast+merge); its completions are the fork times.  Each index
-    server runs an independent FCFS queue over the forked stream.  The join
-    waits for the slowest server.  Warmup queries are masked out of the
-    returned samples by replacing them with the post-warmup mean (keeps
-    shapes static for jit).
-    """
-    p = int(params.p) if p is None else p  # static before tracing
-    return _simulate_fork_join(key, lam, n_queries, params, p, mode, impl,
-                               warmup_fraction)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("n_queries", "p", "mode", "impl",
-                              "warmup_fraction"))
-def _simulate_fork_join(
-    key: Array,
-    lam: float,
-    n_queries: int,
-    params: ServerParams,
-    p: int,
-    mode: str,
-    impl: str,
-    warmup_fraction: float,
-) -> SimResult:
-    k_arr, k_brk, k_srv = jax.random.split(key, 3)
-
-    gaps = jax.random.exponential(k_arr, (n_queries,)) / lam
-    arrivals = jnp.cumsum(gaps)
-
-    s_broker = (jax.random.exponential(k_brk, (n_queries,))
-                * jnp.asarray(params.s_broker))
-    broker_done = fcfs_completion_times(arrivals, s_broker, impl=impl)
-    broker_residence = broker_done - arrivals
-
-    services = sample_service_times(k_srv, n_queries, p, params, mode)
-    fork_times = jnp.broadcast_to(broker_done, (p, n_queries))
-    completions = fcfs_completion_times(fork_times, services, impl=impl)
-
-    join = jnp.max(completions, axis=0)
-    response = join - arrivals
-    cluster_residence = join - broker_done
-    server_residence = completions[0] - broker_done
-
-    n_warm = int(n_queries * warmup_fraction)
-    mask = jnp.arange(n_queries) >= n_warm
-
-    def masked(x):
-        mean = jnp.sum(jnp.where(mask, x, 0.0)) / jnp.maximum(
-            jnp.sum(mask), 1)
-        return jnp.where(mask, x, mean)
-
-    return SimResult(
-        response=masked(response),
-        server_residence=masked(server_residence),
-        cluster_residence=masked(cluster_residence),
-        broker_residence=masked(broker_residence),
-    )
+        Resolution is one log bin (~2.7% at the default 256 bins over 6
+        decades); interpolation inside the bin is log-linear.
+        """
+        n_bins = self.hist.shape[-1]
+        cum = jnp.cumsum(self.hist, axis=-1)
+        target = jnp.asarray(q) * self.count
+        k = jnp.sum(cum < target[..., None], axis=-1)
+        k = jnp.clip(k, 0, n_bins - 1)
+        cum_before = jnp.where(
+            k > 0,
+            jnp.take_along_axis(cum, jnp.maximum(k - 1, 0)[..., None],
+                                axis=-1)[..., 0],
+            0.0)
+        in_bin = jnp.take_along_axis(self.hist, k[..., None],
+                                     axis=-1)[..., 0]
+        frac = jnp.clip((target - cum_before) / jnp.maximum(in_bin, 1.0),
+                        0.0, 1.0)
+        return jnp.exp(self.hist_log_lo + (k + frac) * self.hist_log_step)
 
 
 def sample_service_times_batch(
@@ -207,9 +207,8 @@ def sample_service_times_batch(
 ) -> Array:
     """(n_scenarios, p, n_queries) service times; params fields are (S,).
 
-    The batched counterpart of :func:`sample_service_times` used by the
-    what-if sweep engine: every scenario gets independent randomness but
-    scenario-specific means/hit ratios, in one sampling pass.
+    The one service-time sampler: every scenario gets independent
+    randomness but scenario-specific means/hit ratios, in one pass.
     """
     shape = (n_scenarios, p, n_queries)
     s_mean = service_time_server(params)[:, None, None]
@@ -232,9 +231,259 @@ def sample_service_times_batch(
     raise ValueError(f"unknown service mode: {mode}")
 
 
+def chunk_random_draws(key: Array, chunk_idx, n_scen: int, chunk: int,
+                       p: int, params: ServerParams, mode: str,
+                       *, with_gaps: bool = True):
+    """The canonical per-chunk RNG plan: ``fold_in(key, chunk_idx)``.
+
+    Returns (unit-rate gap draws (S, chunk), unit-mean broker draws
+    (S, chunk), service times (S, p, chunk)).  The streaming engine and
+    any monolithic reference reconstruction MUST both use this function,
+    so their sample paths agree draw-for-draw.  ``with_gaps=False`` skips
+    the gap draw (trace replay supplies its own gaps); the broker/service
+    subkeys are independent splits, so the other draws are unchanged.
+    """
+    kc = jax.random.fold_in(key, chunk_idx)
+    k_arr, k_brk, k_srv = jax.random.split(kc, 3)
+    u_gaps = (jax.random.exponential(k_arr, (n_scen, chunk))
+              if with_gaps else None)
+    u_broker = jax.random.exponential(k_brk, (n_scen, chunk))
+    services = sample_service_times_batch(k_srv, n_scen, chunk, p, params,
+                                          mode)
+    return u_gaps, u_broker, services
+
+
+def _vec_params(params: ServerParams) -> ServerParams:
+    """Every field at least rank-1 (leading scenario axis)."""
+    return ServerParams(**{
+        f.name: jnp.atleast_1d(jnp.asarray(getattr(params, f.name)))
+        for f in dataclasses.fields(ServerParams)})
+
+
+def _as_batch_process(arrival: Union[ArrivalProcess, Array, float]
+                      ) -> ArrivalProcess:
+    """Promote a scalar/vector rate or 1-D process to (S, n_bins) rates."""
+    if isinstance(arrival, ArrivalProcess):
+        if arrival.rates.ndim == 1:
+            return dataclasses.replace(arrival, rates=arrival.rates[None, :])
+        if arrival.rates.ndim != 2:
+            raise ValueError("ArrivalProcess rates must be (n_bins,) or "
+                             f"(S, n_bins); got {arrival.rates.shape}")
+        return arrival
+    lam = jnp.atleast_1d(jnp.asarray(arrival))
+    return ArrivalProcess.stationary(lam)
+
+
+def _check_trace(proc: ArrivalProcess, n_queries: int) -> None:
+    if proc.trace_gaps is not None and proc.trace_gaps.shape[0] < n_queries:
+        raise ValueError(
+            f"trace has {proc.trace_gaps.shape[0]} arrivals but "
+            f"n_queries={n_queries}; shorten the horizon or fold/extend "
+            "the trace")
+
+
+_MIN_PROFILE_CHUNK = 64
+
+
+def _clamp_chunk_for_profile(proc: ArrivalProcess, chunk: int) -> int:
+    """Keep a chunk's expected duration near one profile bin.
+
+    The engine reads the arrival rate once per chunk (at its start time);
+    if a chunk spans many profile bins, the diurnal curve is undersampled
+    and time-varying results bias low.  For multi-bin profiles, cap the
+    chunk at the expected number of queries in the *slowest* bin so every
+    bin gets visited — floored at ``_MIN_PROFILE_CHUNK`` so a near-empty
+    trough bin cannot degenerate the scan into per-query steps.  A
+    ``UserWarning`` reports the clamp (it trades scan iterations for
+    profile fidelity; pass a coarser profile or a smaller ``chunk_size``
+    to silence it).  Stationary and trace-driven processes are exempt
+    (the rate never changes / gaps are exact); traced rates are left
+    untouched (call the jitted core directly to opt out).
+    """
+    if proc.trace_gaps is not None or proc.n_bins == 1:
+        return chunk
+    try:
+        pos = proc.rates[proc.rates > 0]
+        min_rate = float(jnp.min(pos)) if pos.size else 0.0
+        bin_s = float(proc.bin_seconds)
+    except jax.errors.ConcretizationTypeError:
+        return chunk
+    if min_rate <= 0.0:
+        return chunk
+    clamped = max(_MIN_PROFILE_CHUNK, int(min_rate * bin_s))
+    if clamped < chunk:
+        warnings.warn(
+            f"chunk_size clamped {chunk} -> {clamped} so each ~"
+            f"{bin_s:g}s profile bin is sampled (slowest bin expects "
+            f"~{min_rate * bin_s:.0f} queries); more scan iterations, "
+            "faithful diurnal shape", UserWarning, stacklevel=3)
+        return clamped
+    return chunk
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_queries", "p", "mode", "impl", "chunk",
+                              "warmup_fraction", "hist_bins"))
+def _simulate_stream(
+    key: Array,
+    proc: ArrivalProcess,
+    params: ServerParams,
+    n_queries: int,
+    p: int,
+    mode: str,
+    impl: str,
+    chunk: int,
+    warmup_fraction: float,
+    hist_bins: int,
+) -> SimResult:
+    """The one chunked engine behind every fork-join entry point."""
+    n_scen = proc.rates.shape[0]
+    n_chunks = -(-n_queries // chunk)
+    n_warm = int(n_queries * warmup_fraction)
+    dtype = jnp.result_type(float)
+
+    s_broker = jnp.broadcast_to(
+        jnp.asarray(params.s_broker, dtype), (n_scen,))
+
+    # Per-scenario histogram scale off the Eq 7 analytic ballpark so the
+    # fixed bin budget lands where each scenario's mass actually is.
+    ref_rate = jnp.broadcast_to(proc.mean_rate.astype(dtype), (n_scen,))
+    s_mean = jnp.broadcast_to(
+        jnp.asarray(service_time_server(params), dtype), (n_scen,))
+    _, hi = queueing.response_time_bounds(ref_rate, params)
+    hi = jnp.broadcast_to(jnp.asarray(hi, dtype), (n_scen,))
+    scale = jnp.where(jnp.isfinite(hi) & (hi > 0), hi, 100.0 * s_mean)
+    ln10 = math.log(10.0)
+    hist_log_lo = jnp.log(scale) - _HIST_DECADES_BELOW * ln10
+    hist_log_step = jnp.full((n_scen,),
+                             _HIST_DECADES_TOTAL * ln10 / hist_bins, dtype)
+
+    has_trace = proc.trace_gaps is not None
+    if has_trace:
+        gaps_full = jnp.asarray(proc.trace_gaps, dtype)[:n_queries]
+        pad = n_chunks * chunk - n_queries
+        gap_chunks = jnp.pad(gaps_full, (0, pad),
+                             constant_values=1.0).reshape(n_chunks, chunk)
+        xs = (jnp.arange(n_chunks), gap_chunks)
+    else:
+        xs = jnp.arange(n_chunks)
+
+    rows = jnp.arange(n_scen)[:, None]
+    col = jnp.arange(chunk)
+    period = jnp.asarray(proc.period_seconds, dtype)
+
+    # Max-plus maps are translation-invariant, so the carry is REBASED to
+    # each chunk's origin: completion state is stored relative to the last
+    # arrival, and only the (period-wrapped) absolute clock `t_origin` is
+    # kept for profile lookups.  Clock magnitudes therefore stay O(chunk
+    # duration) forever — float32 accuracy is independent of the simulated
+    # horizon, which is what lets millions of queries stream through.
+    def body(carry, x):
+        (t_origin, c_brk, c_srv, count, s_resp, ss_resp,
+         s_br, s_cl, s_sv, hist) = carry
+        if has_trace:
+            c_idx, trace_gaps_c = x
+        else:
+            c_idx = x
+        u_gaps, u_brk, services = chunk_random_draws(
+            key, c_idx, n_scen, chunk, p, params, mode,
+            with_gaps=not has_trace)
+        if has_trace:
+            gaps = jnp.broadcast_to(trace_gaps_c[None, :],
+                                    (n_scen, chunk)).astype(dtype)
+        else:
+            # the Sec 4.2 structure: homogeneous Poisson within the chunk,
+            # at the profile rate read off at the chunk's start time
+            rate = jnp.maximum(proc.rate_at(t_origin), 1e-30)
+            gaps = u_gaps / rate[:, None]
+        arrivals = jnp.cumsum(gaps, axis=-1)   # relative to chunk origin
+
+        s_broker_c = u_brk * s_broker[:, None]
+        broker_done = fcfs_completion_times(arrivals, s_broker_c,
+                                            impl=impl, carry=c_brk)
+        fork = jnp.broadcast_to(broker_done[:, None, :],
+                                (n_scen, p, chunk))
+        completions = fcfs_completion_times(fork, services, impl=impl,
+                                            carry=c_srv)
+        join = jnp.max(completions, axis=1)
+
+        response = join - arrivals
+        broker_res = broker_done - arrivals
+        cluster_res = join - broker_done
+        server_res = completions[:, 0, :] - broker_done
+
+        gidx = c_idx * chunk + col
+        mf = ((gidx >= n_warm) & (gidx < n_queries)).astype(dtype)[None, :]
+        count = count + jnp.broadcast_to(jnp.sum(mf, -1), (n_scen,))
+        s_resp = s_resp + jnp.sum(response * mf, -1)
+        ss_resp = ss_resp + jnp.sum(response * response * mf, -1)
+        s_br = s_br + jnp.sum(broker_res * mf, -1)
+        s_cl = s_cl + jnp.sum(cluster_res * mf, -1)
+        s_sv = s_sv + jnp.sum(server_res * mf, -1)
+
+        bins = jnp.clip(
+            jnp.floor((jnp.log(jnp.maximum(response, 1e-30))
+                       - hist_log_lo[:, None]) / hist_log_step[:, None]),
+            0, hist_bins - 1).astype(jnp.int32)
+        hist = hist.at[rows, bins].add(
+            jnp.broadcast_to(mf, (n_scen, chunk)))
+
+        shift = arrivals[:, -1]
+        new_carry = ((t_origin + shift) % period,
+                     broker_done[:, -1] - shift,
+                     completions[:, :, -1] - shift[:, None],
+                     count, s_resp, ss_resp, s_br, s_cl, s_sv, hist)
+        return new_carry, None
+
+    zeros = jnp.zeros((n_scen,), dtype)
+    init = (zeros, zeros, jnp.zeros((n_scen, p), dtype), zeros, zeros,
+            zeros, zeros, zeros, zeros,
+            jnp.zeros((n_scen, hist_bins), dtype))
+    (t_last, c_brk, c_srv, count, s_resp, ss_resp, s_br, s_cl, s_sv,
+     hist), _ = jax.lax.scan(body, init, xs)
+
+    return SimResult(
+        count=count, sum_response=s_resp, sumsq_response=ss_resp,
+        sum_broker=s_br, sum_cluster=s_cl, sum_server=s_sv,
+        hist=hist, hist_log_lo=hist_log_lo, hist_log_step=hist_log_step)
+
+
+def simulate_fork_join(
+    key: Array,
+    lam: Union[float, ArrivalProcess],
+    n_queries: int,
+    params: ServerParams,
+    *,
+    p: Optional[int] = None,
+    mode: str = "exponential",
+    impl: str = "xla",
+    warmup_fraction: float = 0.1,
+    chunk_size: int = DEFAULT_CHUNK,
+    hist_bins: int = DEFAULT_HIST_BINS,
+) -> SimResult:
+    """Simulate the full broker + p-server fork-join network (Fig 8).
+
+    The broker is visited once per query with service S_broker (the paper
+    lumps broadcast+merge); its completions are the fork times.  Each index
+    server runs an independent FCFS queue over the forked stream, and the
+    join waits for the slowest server.  ``lam`` is either a constant rate
+    in qps or any :class:`ArrivalProcess` (diurnal profile, trace replay).
+    Streams through ``chunk_size`` query chunks; warmup queries are
+    discarded from the returned streaming statistics.
+    """
+    p = int(params.p) if p is None else p  # static before tracing
+    proc = _as_batch_process(lam)
+    _check_trace(proc, n_queries)
+    chunk = _clamp_chunk_for_profile(
+        proc, max(1, min(chunk_size, n_queries)))
+    res = _simulate_stream(key, proc, _vec_params(params), n_queries, p,
+                           mode, impl, chunk, warmup_fraction, hist_bins)
+    return jax.tree_util.tree_map(lambda x: x[0], res)
+
+
 def simulate_fork_join_batch(
     key: Array,
-    lam: Array,
+    lam: Union[Array, ArrivalProcess],
     params: ServerParams,
     n_queries: int,
     *,
@@ -242,59 +491,28 @@ def simulate_fork_join_batch(
     mode: str = "exponential",
     impl: str = "xla",
     warmup_fraction: float = 0.1,
-) -> Array:
-    """Mean response time of S fork-join scenarios in one XLA program.
+    chunk_size: int = DEFAULT_CHUNK,
+    hist_bins: int = DEFAULT_HIST_BINS,
+) -> SimResult:
+    """S fork-join scenarios in one XLA program; all stats are (S,).
 
-    ``lam`` and every ``params`` field are (S,) vectors describing S
-    independent scenarios that all share the SAME static server count
-    ``p`` (grids over p dispatch one batch per distinct p — see
-    `repro.core.sweep`).  With ``impl="pallas"`` the (S, p, n) and (S, n)
-    FCFS recurrences flatten onto the row axis of `maxplus_scan`, so all
+    ``lam`` is an (S,) rate vector or an :class:`ArrivalProcess` with
+    (S, n_bins) rates; every ``params`` field is (S,).  All scenarios
+    share the SAME static server count ``p`` (grids over p dispatch one
+    batch per distinct p — see `repro.core.sweep`).  With
+    ``impl="pallas"`` the per-chunk (S, p, chunk) and (S, chunk) FCFS
+    recurrences flatten onto the row axis of `maxplus_scan`, so all
     S * (p + 1) sample paths run as a single Pallas grid.
 
-    Memory scales as S * p * n_queries floats — size grids accordingly.
+    Peak memory is S * p * chunk_size floats — independent of
+    ``n_queries``, which may stream into the millions.
     """
-    return _simulate_fork_join_batch(key, lam, params, n_queries, p, mode,
-                                     impl, warmup_fraction)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("n_queries", "p", "mode", "impl",
-                              "warmup_fraction"))
-def _simulate_fork_join_batch(
-    key: Array,
-    lam: Array,
-    params: ServerParams,
-    n_queries: int,
-    p: int,
-    mode: str,
-    impl: str,
-    warmup_fraction: float,
-) -> Array:
-    n_scen = lam.shape[0]
-    k_arr, k_brk, k_srv = jax.random.split(key, 3)
-
-    gaps = jax.random.exponential(
-        k_arr, (n_scen, n_queries)) / lam[:, None]
-    arrivals = jnp.cumsum(gaps, axis=-1)
-
-    s_broker = (jax.random.exponential(k_brk, (n_scen, n_queries))
-                * jnp.asarray(params.s_broker)[:, None])
-    broker_done = fcfs_completion_times(arrivals, s_broker, impl=impl)
-
-    services = sample_service_times_batch(
-        k_srv, n_scen, n_queries, p, params, mode)
-    fork_times = jnp.broadcast_to(
-        broker_done[:, None, :], (n_scen, p, n_queries))
-    completions = fcfs_completion_times(fork_times, services, impl=impl)
-
-    join = jnp.max(completions, axis=1)
-    response = join - arrivals
-
-    n_warm = int(n_queries * warmup_fraction)
-    mask = (jnp.arange(n_queries) >= n_warm)[None, :]
-    return (jnp.sum(jnp.where(mask, response, 0.0), axis=-1)
-            / jnp.maximum(jnp.sum(mask, axis=-1), 1))
+    proc = _as_batch_process(lam)
+    _check_trace(proc, n_queries)
+    chunk = _clamp_chunk_for_profile(
+        proc, max(1, min(chunk_size, n_queries)))
+    return _simulate_stream(key, proc, params, n_queries, p, mode, impl,
+                            chunk, warmup_fraction, hist_bins)
 
 
 @functools.partial(jax.jit, static_argnames=("c",))

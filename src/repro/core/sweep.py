@@ -11,15 +11,20 @@ as a SINGLE XLA program, two ways:
   * analytical — the Eq 7 bounds from `repro.core.queueing`, which already
     broadcast, evaluated over the broadcasted grid.  Tens of thousands of
     scenarios cost one fused elementwise kernel.
-  * simulation — batched Lindley recursions from
-    `simulator.simulate_fork_join_batch`.  All scenarios sharing a server
-    count p flatten onto the row axis of the `maxplus_scan` Pallas kernel,
-    so thousands of sample paths share one TPU scan; the grid's p axis
-    dispatches one such batch per distinct p (p is a shape parameter).
+  * simulation — the STREAMING chunked engine of `repro.core.simulator`:
+    per distinct p, all L*C*D*H scenarios' sample paths run as one
+    `lax.scan` over query chunks (optionally on the `maxplus_scan` Pallas
+    grid), carrying only per-(scenario, server) max-plus state plus
+    streaming statistics.  Peak memory is scenarios x p x chunk floats —
+    independent of n_queries — so grids 10-100x larger than the old
+    materializing path fit, quantile surfaces (p95/p99) come out next to
+    the means, and an `ArrivalProcess` profile makes every scenario's
+    load time-varying (diurnal/weekly peaks).
 
 On top sits constraint-satisfying frontier extraction: "for each arrival
-rate, the cheapest configuration with R <= SLO" (exposed to planners via
-`repro.core.planner.plan_over_grid`).
+rate, the cheapest configuration with R <= SLO", where R can be the
+analytic upper bound, the simulated mean, or a simulated quantile such as
+p95 (exposed to planners via `repro.core.planner.plan_over_grid`).
 """
 
 from __future__ import annotations
@@ -31,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import capacity, queueing, simulator
+from repro.core.arrivals import ArrivalProcess
 from repro.core.queueing import ServerParams
 
 Array = jax.Array
@@ -39,6 +45,7 @@ ArrayLike = Union[Array, Sequence[float], float]
 __all__ = [
     "SweepGrid",
     "SweepResult",
+    "SimSweepResult",
     "Frontier",
     "sweep_analytical",
     "sweep_simulated",
@@ -151,6 +158,16 @@ class SweepResult:
     def feasible_fraction(self) -> Array:
         return jnp.mean(jnp.isfinite(self.response_upper))
 
+    def quantile(self, q: float) -> Array:
+        """Analytic q-percentile upper estimate over the grid (Sec 7).
+
+        Mirrors :meth:`SimSweepResult.quantile` so frontier extraction can
+        target tail latency against either surface.
+        """
+        lam, params = self.grid.broadcast()
+        surf = queueing.response_time_quantile_upper(lam, params, q)
+        return jnp.broadcast_to(surf, self.grid.shape)
+
 
 @jax.jit
 def _bounds_surface(lam: Array, params: ServerParams):
@@ -172,6 +189,37 @@ def sweep_analytical(grid: SweepGrid) -> SweepResult:
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class SimSweepResult:
+    """Streaming-simulated surfaces: mean, spread AND quantiles.
+
+    ``stats`` is a :class:`repro.core.simulator.SimResult` whose fields
+    all carry the full grid shape (L,P,C,D,H) in front (the histogram has
+    one trailing bin axis), so every summary the streaming engine
+    accumulates is available as a dense surface.
+    """
+
+    grid: SweepGrid
+    stats: simulator.SimResult
+
+    @property
+    def mean(self) -> Array:
+        return self.stats.mean_response
+
+    @property
+    def response(self) -> Array:
+        """The default planning surface for frontier extraction."""
+        return self.mean
+
+    @property
+    def std(self) -> Array:
+        return self.stats.std_response
+
+    def quantile(self, q: float) -> Array:
+        """q-quantile response surface, shaped `grid.shape`."""
+        return self.stats.quantile(q)
+
+
 def sweep_simulated(
     grid: SweepGrid,
     key: Array,
@@ -180,17 +228,32 @@ def sweep_simulated(
     mode: str = "exponential",
     impl: str = "xla",
     warmup_fraction: float = 0.1,
-) -> Array:
-    """Simulated mean response over the grid, shaped `grid.shape`.
+    chunk_size: int = simulator.DEFAULT_CHUNK,
+    hist_bins: int = simulator.DEFAULT_HIST_BINS,
+    profile: Optional[Array] = None,
+    profile_bin_seconds: float = 3600.0,
+) -> SimSweepResult:
+    """Streaming-simulated response surfaces over the grid.
 
-    One `simulate_fork_join_batch` dispatch per distinct p (a static
-    shape); within a dispatch all L*C*D*H scenarios run as one program.
-    Memory is n_p_scenarios * p * n_queries floats per dispatch.
+    One streaming dispatch per distinct p (a static shape); within a
+    dispatch all L*C*D*H scenarios run as one `lax.scan` over query
+    chunks.  Peak memory is n_p_scenarios * p * chunk_size floats — the
+    total query count only adds scan iterations, so `n_queries` can be
+    10-100x what the old materializing path could hold.
+
+    ``profile`` makes the load non-stationary: a (n_bins,) relative-rate
+    curve (e.g. `repro.workloadgen.loadgen.diurnal_rates`) that tiles with
+    period ``n_bins * profile_bin_seconds``.  It is normalized to mean 1,
+    so the grid's lam axis stays the *time-averaged* rate and the peak
+    rate is ``lam * max(profile)/mean(profile)``.
     """
     shape = grid.shape
     lam_full, params_full = grid.broadcast_full()
     fields = {f.name: getattr(params_full, f.name)
               for f in dataclasses.fields(ServerParams)}
+    if profile is not None:
+        base_proc = ArrivalProcess.piecewise(
+            jnp.asarray(profile), profile_bin_seconds).normalized()
 
     slabs = []
     keys = jax.random.split(key, grid.p.shape[0])
@@ -202,11 +265,21 @@ def sweep_simulated(
                 " (the analytical path accepts fractional p)")
         flat = lambda x: x[:, i].reshape(-1)  # noqa: E731 — (L,C,D,H) slab
         params_i = ServerParams(**{n: flat(v) for n, v in fields.items()})
-        mean = simulator.simulate_fork_join_batch(
-            k, flat(lam_full), params_i, n_queries, p=p, mode=mode,
-            impl=impl, warmup_fraction=warmup_fraction)
-        slabs.append(mean.reshape(shape[0], shape[2], shape[3], shape[4]))
-    return jnp.stack(slabs, axis=1)
+        lam_i = flat(lam_full)
+        if profile is None:
+            arrival = ArrivalProcess.stationary(lam_i)
+        else:
+            arrival = base_proc.scaled_by(lam_i)
+        res = simulator.simulate_fork_join_batch(
+            k, arrival, params_i, n_queries, p=p, mode=mode, impl=impl,
+            warmup_fraction=warmup_fraction, chunk_size=chunk_size,
+            hist_bins=hist_bins)
+        slab_shape = (shape[0], shape[2], shape[3], shape[4])
+        slabs.append(jax.tree_util.tree_map(
+            lambda x: x.reshape(slab_shape + x.shape[1:]), res))
+    stats = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs, axis=1), *slabs)
+    return SimSweepResult(grid=grid, stats=stats)
 
 
 def default_config_cost(p: Array, cpu: Array, disk: Array,
@@ -234,7 +307,7 @@ class Frontier:
     cpu: Array
     disk: Array
     hit: Array
-    response: Array    # upper-bound response of the chosen config (s)
+    response: Array    # targeted-surface response of the chosen config (s)
 
     def describe(self, i: int) -> str:
         if not bool(self.feasible[i]):
@@ -248,17 +321,28 @@ class Frontier:
 
 
 def extract_frontier(
-    result: SweepResult,
+    result: Union[SweepResult, SimSweepResult],
     slo_seconds: float,
     *,
     cost_fn: Optional[Callable[[Array, Array, Array, Array], Array]] = None,
+    surface: Optional[Array] = None,
+    quantile: Optional[float] = None,
 ) -> Frontier:
-    """Cheapest config with R_upper <= SLO, independently per lambda.
+    """Cheapest config whose response surface meets the SLO, per lambda.
+
+    The targeted surface defaults to ``result.response`` (the Eq 7 upper
+    bound for analytical sweeps, the simulated mean for streaming sweeps).
+    Pass ``quantile=0.95`` to plan against tail latency instead — "the
+    cheapest configuration whose p95 survives the load" — or hand any
+    precomputed ``surface`` shaped `grid.shape`.
 
     Fully vectorized: the (P,C,D,H) config-cost tensor is masked by the
     feasibility surface and argmin-reduced per arrival rate.
     """
     grid = result.grid
+    if surface is None:
+        surface = (result.quantile(quantile) if quantile is not None
+                   else result.response)
     cost_fn = cost_fn or default_config_cost
     costs = cost_fn(
         grid.p.reshape(-1, 1, 1, 1),
@@ -268,7 +352,7 @@ def extract_frontier(
     )
     costs = jnp.broadcast_to(costs, grid.shape[1:])
 
-    feasible = result.response_upper <= slo_seconds       # (L,P,C,D,H)
+    feasible = surface <= slo_seconds                     # (L,P,C,D,H)
     masked = jnp.where(feasible, costs[None], jnp.inf)
     flat = masked.reshape(grid.shape[0], -1)
     best = jnp.argmin(flat, axis=1)
@@ -276,7 +360,7 @@ def extract_frontier(
 
     ip, ic, id_, ih = jnp.unravel_index(best, grid.shape[1:])
     chosen_resp = jnp.take_along_axis(
-        result.response_upper.reshape(grid.shape[0], -1),
+        surface.reshape(grid.shape[0], -1),
         best[:, None], axis=1)[:, 0]
     any_feasible = jnp.isfinite(best_cost)
     return Frontier(

@@ -55,3 +55,36 @@ def maxplus_scan(
     out_a = out_a[:rows, :n].reshape(orig_shape)
     out_b = out_b[:rows, :n].reshape(orig_shape)
     return out_a, out_b
+
+
+def maxplus_scan_seeded(
+    a: jax.Array,
+    b: jax.Array,
+    carry_a: jax.Array,
+    carry_b: jax.Array | None = None,
+    *,
+    block_len: int = DEFAULT_BLOCK_LEN,
+    row_tile: int = DEFAULT_ROW_TILE,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Inclusive (max, +) scan seeded by the carry of everything earlier.
+
+    The streaming simulator's chunk entry point: ``(carry_a, carry_b)`` is
+    the composed affine map of all previous chunks (for FCFS chaining,
+    ``carry_a`` is the last completion time and ``carry_b`` defaults to 0,
+    the identity offset).  Because affine max-plus maps compose
+    associatively, seeding is one post-composition on top of the unseeded
+    scan — the Pallas grid itself is unchanged:
+
+        out_a' = max(out_a, carry_a + out_b),   out_b' = carry_b + out_b
+
+    ``carry_a``/``carry_b`` broadcast against ``a.shape[:-1]``.
+    """
+    out_a, out_b = maxplus_scan(a, b, block_len=block_len,
+                                row_tile=row_tile, interpret=interpret)
+    carry_a = jnp.asarray(carry_a)
+    if carry_b is None:
+        carry_b = jnp.zeros_like(carry_a)
+    out_a = jnp.maximum(out_a, carry_a[..., None] + out_b)
+    out_b = jnp.asarray(carry_b)[..., None] + out_b
+    return out_a, out_b

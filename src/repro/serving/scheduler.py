@@ -65,7 +65,16 @@ class ContinuousBatcher:
         self.queue.append(req)
 
     def run_until(self, t_end: float, now: float = 0.0) -> float:
-        """Serve queued requests until t_end; returns the clock."""
+        """Serve queued requests until t_end; returns the clock.
+
+        Batches only form strictly before ``t_end`` and only over requests
+        that have already arrived; idle-skipping to a next arrival at or
+        beyond ``t_end`` clamps the clock to ``t_end`` instead of jumping
+        past the horizon (and thereby serving future requests).  The
+        returned clock exceeds ``t_end`` only when the last batch — which
+        started before the horizon — finishes after it, so chained calls
+        (``now=previous return``) never double-book the server.
+        """
         t = now
         while self.queue and t < t_end:
             batch: List[Request] = []
@@ -75,7 +84,11 @@ class ContinuousBatcher:
                     break
                 batch.append(self.queue.popleft())
             if not batch:
-                t = self.queue[0].arrival
+                nxt = self.queue[0].arrival
+                if nxt >= t_end:
+                    t = t_end  # next arrival beyond the horizon: stay idle
+                    break
+                t = nxt
                 continue
             hedges = 0
             if self.hedge:

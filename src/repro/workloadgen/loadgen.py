@@ -5,23 +5,95 @@ window arrivals are homogeneous Poisson (exponential gaps, Sec 4.2); across
 a day/week the rate follows a diurnal profile; the *folding* procedure
 merges corresponding windows to boost the rate (Table 3: TodoBR Monday
 0.69 qps -> 23.58 qps folded, a ~34x boost = 243 days / 7-day window).
+
+Built on the same :class:`repro.core.arrivals.ArrivalProcess` the streaming
+simulator consumes: :func:`diurnal_rates` produces the weekly hourly
+profile once (in JAX), :func:`diurnal_process` wraps it for the simulator
+(`simulate_fork_join(key, diurnal_process(...), ...)`), and
+:func:`diurnal_arrivals` samples concrete timestamps from the *same* binned
+profile by thinning — generator and simulator can no longer disagree about
+what "the daily peak" is.  Host-side timestamp positions stay numpy
+float64 (float32 would quantize long windows; see `poisson_arrivals`).
 """
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["poisson_arrivals", "diurnal_arrivals", "fold", "WEEK_SECONDS"]
+from repro.core.arrivals import ArrivalProcess
+
+__all__ = [
+    "poisson_arrivals",
+    "diurnal_rates",
+    "diurnal_process",
+    "diurnal_arrivals",
+    "replay_process",
+    "fold",
+    "WEEK_SECONDS",
+]
 
 WEEK_SECONDS = 7 * 24 * 3600.0
+_WEEK_HOURS = 7 * 24
 
 
 def poisson_arrivals(rate: float, duration: float, *, seed: int = 0
                      ) -> np.ndarray:
-    """Homogeneous Poisson arrival timestamps on [0, duration)."""
+    """Homogeneous Poisson arrival timestamps on [0, duration).
+
+    Timestamps are drawn host-side in float64: a float32 uniform only has
+    2^-24 resolution, which would quantize a 243-day fold window to
+    ~1.25 s steps and generate masses of zero gaps.
+    """
     rng = np.random.default_rng(seed)
     n = rng.poisson(rate * duration)
     return np.sort(rng.random(n) * duration)
+
+
+def diurnal_rates(
+    base_rate: float = 1.0,
+    *,
+    peak_hour: float = 15.0,
+    peak_to_trough: float = 4.0,
+    weekend_factor: float = 0.7,
+) -> jax.Array:
+    """(168,) weekly hourly-binned rate profile, in qps.
+
+    rate(hour) = base * daily * weekly; daily is a raised cosine peaking at
+    ``peak_hour`` with the given peak/trough ratio (evaluated at bin
+    centers); weekends are scaled by ``weekend_factor`` (TodoBR profile;
+    Radix used >1).
+    """
+    hours = jnp.arange(_WEEK_HOURS, dtype=jnp.result_type(float))
+    hour_of_day = hours % 24.0 + 0.5
+    dow = hours // 24.0
+    r = peak_to_trough
+    amp = (r - 1.0) / (r + 1.0)
+    daily = 1.0 + amp * jnp.cos((hour_of_day - peak_hour) / 24.0
+                                * 2.0 * jnp.pi)
+    weekly = jnp.where(dow >= 5, weekend_factor, 1.0)
+    return base_rate * daily * weekly
+
+
+def diurnal_process(
+    base_rate: float,
+    *,
+    peak_hour: float = 15.0,
+    peak_to_trough: float = 4.0,
+    weekend_factor: float = 0.7,
+    bin_seconds: float = 3600.0,
+) -> ArrivalProcess:
+    """The weekly diurnal profile as a simulator-ready arrival process.
+
+    ``bin_seconds`` rescales time: 3600 is the real week; smaller values
+    compress it, which lets a modest simulated horizon cover full
+    diurnal/weekly cycles (handy for sweep-scale what-ifs).
+    """
+    rates = diurnal_rates(base_rate, peak_hour=peak_hour,
+                          peak_to_trough=peak_to_trough,
+                          weekend_factor=weekend_factor)
+    return ArrivalProcess.piecewise(rates, bin_seconds)
 
 
 def diurnal_arrivals(
@@ -35,28 +107,26 @@ def diurnal_arrivals(
 ) -> np.ndarray:
     """Inhomogeneous Poisson arrivals with daily + weekly structure.
 
-    rate(t) = base * daily(t) * weekly(t); daily is a raised cosine peaking
-    at ``peak_hour`` with the given peak/trough ratio; weekends are scaled
-    by ``weekend_factor`` (TodoBR profile; Radix used >1).  Sampled by
-    thinning.
+    Sampled by thinning against the binned :func:`diurnal_rates` profile —
+    exactly the rate function the streaming simulator sees.  Timestamps
+    are float64 (see :func:`poisson_arrivals`); only the thinning
+    probabilities go through the JAX profile.
     """
-    rng = np.random.default_rng(seed)
+    proc = diurnal_process(base_rate, peak_hour=peak_hour,
+                           peak_to_trough=peak_to_trough,
+                           weekend_factor=weekend_factor)
     duration = days * 86400.0
-    r = peak_to_trough
-    amp = (r - 1.0) / (r + 1.0)
-
-    def rate_fn(t):
-        hour = (t % 86400.0) / 3600.0
-        daily = 1.0 + amp * np.cos((hour - peak_hour) / 24.0 * 2 * np.pi)
-        dow = (t // 86400.0) % 7
-        weekly = np.where(dow >= 5, weekend_factor, 1.0)
-        return base_rate * daily * weekly
-
-    lam_max = base_rate * (1.0 + amp) * max(1.0, weekend_factor)
+    lam_max = float(proc.peak_rate)
+    rng = np.random.default_rng(seed)
     n = rng.poisson(lam_max * duration)
     t = np.sort(rng.random(n) * duration)
-    keep = rng.random(n) < rate_fn(t) / lam_max
+    keep = rng.random(n) < np.asarray(proc.rate_at(jnp.asarray(t))) / lam_max
     return t[keep]
+
+
+def replay_process(timestamps: np.ndarray) -> ArrivalProcess:
+    """A measured (or folded) timestamp trace as an arrival process."""
+    return ArrivalProcess.from_trace(jnp.asarray(timestamps))
 
 
 def fold(timestamps: np.ndarray, window: float = WEEK_SECONDS

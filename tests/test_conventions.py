@@ -1,0 +1,34 @@
+"""Repo-convention guards, enforced as tests so CI catches drift.
+
+ROADMAP convention (PR 1): every JAX symbol that has been renamed or
+gated across versions goes through ``src/repro/compat.py``.  Nothing else
+under ``src/`` may touch the shimmed names directly — otherwise the next
+JAX upgrade is a five-file hunt instead of a one-file edit.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+# The symbols compat.py wraps; see its module docstring.
+_SHIMMED = re.compile(
+    r"TPUCompilerParams|jax\.sharding\.AxisType|jax\.shard_map")
+
+
+def test_shimmed_jax_symbols_only_in_compat():
+    offenders = []
+    for path in sorted(SRC.rglob("*.py")):
+        if path.name == "compat.py":
+            continue
+        for lineno, line in enumerate(
+                path.read_text().splitlines(), start=1):
+            if _SHIMMED.search(line):
+                offenders.append(f"{path.relative_to(SRC)}:{lineno}: "
+                                 f"{line.strip()}")
+    assert not offenders, (
+        "shimmed JAX symbols used outside repro/compat.py — route them "
+        "through the compat shims instead (ROADMAP convention):\n"
+        + "\n".join(offenders))

@@ -12,12 +12,52 @@ hypothesis = pytest.importorskip(
     "[project.optional-dependencies].test)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import queueing, workload
+from repro.core import queueing, simulator, workload
 from repro.core.queueing import ServerParams
 from repro.kernels.maxplus_scan import ref as mp_ref
 from repro.models import transformer as T
 
 _settings = settings(max_examples=25, deadline=None)
+
+
+@given(
+    vals=st.lists(st.floats(-50.0, 50.0), min_size=6, max_size=6),
+)
+@_settings
+def test_maxplus_combine_is_associative(vals):
+    """(x∘y)∘z == x∘(y∘z): the algebraic fact the whole streaming/chunked
+    engine rests on (any chunking composes to the same map)."""
+    a1, b1, a2, b2, a3, b3 = (jnp.float32(v) for v in vals)
+    x, y, z = (a1, b1), (a2, b2), (a3, b3)
+    left = simulator.maxplus_combine(simulator.maxplus_combine(x, y), z)
+    right = simulator.maxplus_combine(x, simulator.maxplus_combine(y, z))
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right),
+                               rtol=1e-6, atol=1e-5)
+
+
+@given(
+    n=st.integers(3, 300),
+    chunk=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+@_settings
+def test_chunked_streaming_matches_monolithic_scan(n, chunk, seed):
+    """Carry-seeded chunked FCFS == one monolithic scan, for random chunk
+    sizes (the determinism contract behind the streaming engine)."""
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.random(n).astype(np.float32) * 0.5)
+    svc = rng.random(n).astype(np.float32) * 0.3
+    whole = np.asarray(simulator.fcfs_completion_times(
+        jnp.asarray(arr), jnp.asarray(svc)))
+    out, carry = [], None
+    for lo in range(0, n, chunk):
+        piece = simulator.fcfs_completion_times(
+            jnp.asarray(arr[lo:lo + chunk]), jnp.asarray(svc[lo:lo + chunk]),
+            carry=carry)
+        out.append(np.asarray(piece))
+        carry = piece[-1]
+    np.testing.assert_allclose(np.concatenate(out), whole, rtol=2e-6,
+                               atol=1e-5)
 
 
 @given(

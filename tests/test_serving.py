@@ -41,6 +41,44 @@ def test_hedging_fires_under_overload_and_helps():
     assert np.mean(hedged.latencies()) <= np.mean(plain.latencies())
 
 
+def test_run_until_clamps_clock_and_ignores_future_arrivals():
+    """Regression: idle-skipping to an arrival beyond t_end used to jump
+    the clock past the horizon; the arrival must wait for the next call."""
+    sched = ContinuousBatcher(max_batch=4, step_time_fn=lambda b: 0.01)
+    sched.submit(Request(req_id=0, arrival=5.0))
+    t = sched.run_until(2.0)
+    assert t == 2.0                  # clamped to the horizon, not 5.0
+    assert not sched.done            # nothing served before it arrived
+    assert len(sched.queue) == 1
+    t = sched.run_until(10.0, now=t)
+    assert len(sched.done) == 1
+    assert sched.done[0].start >= 5.0
+
+
+def test_run_until_gates_batches_on_horizon():
+    """A request arriving inside the window is served; one beyond t_end is
+    not — even when both are queued together."""
+    sched = ContinuousBatcher(max_batch=4, step_time_fn=lambda b: 0.01,
+                              hedge=False)
+    sched.submit(Request(req_id=0, arrival=1.0))
+    sched.submit(Request(req_id=1, arrival=50.0))
+    t = sched.run_until(10.0)
+    assert t == 10.0                 # clamped, not jumped to 50.0
+    assert [r.req_id for r in sched.done] == [0]
+    assert len(sched.queue) == 1
+
+
+def test_run_until_reports_batch_overrun():
+    """A batch that starts before t_end but finishes after it must push
+    the returned clock past the horizon, so chained calls cannot start a
+    new batch while the server is still busy."""
+    sched = ContinuousBatcher(max_batch=1, step_time_fn=lambda b: 5.0,
+                              hedge=False)
+    sched.submit(Request(req_id=0, arrival=0.0))
+    t = sched.run_until(1.0)
+    assert t == 5.0
+
+
 def test_lm_server_generates():
     cfg = LMConfig(name="srv", n_layers=2, d_model=32, n_heads=4,
                    n_kv_heads=2, d_ff=64, vocab_size=128, d_head=8,

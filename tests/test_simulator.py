@@ -1,4 +1,5 @@
-"""Max-plus DES validation: theory cross-checks + paper Fig 9-11 behavior."""
+"""Max-plus DES validation: theory cross-checks + paper Fig 9-11 behavior,
+plus the streaming engine's chunking/warmup/arrival-process contracts."""
 
 import dataclasses
 
@@ -8,10 +9,119 @@ import numpy as np
 import pytest
 
 from repro.core import capacity, queueing, simulator
+from repro.core.arrivals import ArrivalProcess
 from repro.core.queueing import ServerParams
 
 MM1 = ServerParams(p=1, s_broker=1e-9, s_hit=1.0, s_miss=1.0, s_disk=0.0,
                    hit=1.0)
+
+
+@pytest.fixture
+def x64():
+    """Temporarily enable float64 so association-order noise vanishes."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", old)
+
+
+def _monolithic_reference(key, lam, params, n_queries, p, mode, chunk,
+                          warmup_fraction=0.1):
+    """Rebuild the streaming engine's exact sample path, scanned whole.
+
+    Uses the SAME chunk-invariant RNG plan (`chunk_random_draws`) to
+    materialize every random draw, then runs the old-style monolithic
+    whole-sequence scans and returns the post-warmup per-query responses.
+    """
+    vp = simulator._vec_params(params)
+    n_chunks = -(-n_queries // chunk)
+    ug, ub, sv = [], [], []
+    for c in range(n_chunks):
+        g, b, s = simulator.chunk_random_draws(key, c, 1, chunk, p, vp,
+                                               mode)
+        ug.append(g)
+        ub.append(b)
+        sv.append(s)
+    ug = jnp.concatenate(ug, -1)[:, :n_queries]
+    ub = jnp.concatenate(ub, -1)[:, :n_queries]
+    sv = jnp.concatenate(sv, -1)[:, :, :n_queries]
+    arrivals = jnp.cumsum(ug / lam, -1)
+    broker_done = simulator.fcfs_completion_times(
+        arrivals, ub * params.s_broker)
+    completions = simulator.fcfs_completion_times(
+        jnp.broadcast_to(broker_done[:, None, :], sv.shape), sv)
+    response = (completions.max(axis=1) - arrivals)[0]
+    return response[int(n_queries * warmup_fraction):]
+
+
+def test_streaming_matches_monolithic_mean(x64):
+    """Acceptance: same key, same RNG plan — streaming mean within 1e-5
+    of the monolithic whole-sequence scan on the Table 5 cluster."""
+    pr = capacity.TABLE5_PARAMS
+    key = jax.random.PRNGKey(0)
+    n, chunk = 50_000, 4096
+    res = simulator.simulate_fork_join(key, 20.0, n, pr, chunk_size=chunk)
+    ref = _monolithic_reference(key, 20.0, pr, n, 8, "exponential", chunk)
+    np.testing.assert_allclose(float(res.mean_response),
+                               float(jnp.mean(ref)), rtol=1e-5)
+
+
+def test_streaming_p99_matches_unmasked_reference(x64):
+    """Warmup is truly discarded: the streaming-histogram p99 tracks an
+    unmasked reference run (the old mean-substitution masking injected
+    n_warm copies of the mean, dragging every quantile toward it)."""
+    pr = capacity.TABLE5_PARAMS
+    key = jax.random.PRNGKey(1)
+    n, chunk = 60_000, 4096
+    res = simulator.simulate_fork_join(key, 24.0, n, pr, chunk_size=chunk,
+                                       hist_bins=512)
+    ref = _monolithic_reference(key, 24.0, pr, n, 8, "exponential", chunk)
+    for q in (0.5, 0.95, 0.99):
+        np.testing.assert_allclose(float(res.quantile(q)),
+                                   float(jnp.quantile(ref, q)), rtol=0.05)
+    # count reflects true discard, not masking
+    assert float(res.count) == n - int(n * 0.1)
+
+
+def test_chunk_count_does_not_move_the_estimate():
+    """Carry-seeded chunking is exact: the same RNG plan scanned in 4096-
+    query chunks equals the reference scanned monolithically (f32 noise
+    only), for several chunk counts."""
+    pr = dataclasses.replace(capacity.TABLE5_PARAMS, p=4)
+    key = jax.random.PRNGKey(2)
+    chunk = 2048
+    for n in (2048, 6144, 10_000):
+        res = simulator.simulate_fork_join(key, 18.0, n, pr,
+                                           chunk_size=chunk)
+        ref = _monolithic_reference(key, 18.0, pr, n, 4, "exponential",
+                                    chunk)
+        np.testing.assert_allclose(float(res.mean_response),
+                                   float(jnp.mean(ref)), rtol=2e-4)
+
+
+def test_diurnal_process_raises_mean_over_stationary():
+    """Time-varying load at the same average rate costs latency (response
+    is convex in rho) — the scenario class the old engine could not
+    express."""
+    pr = capacity.TABLE5_PARAMS
+    proc = ArrivalProcess.piecewise(jnp.asarray([10.0, 30.0]), 60.0)
+    key = jax.random.PRNGKey(3)
+    diurnal = simulator.simulate_fork_join(key, proc, 80_000, pr)
+    flat = simulator.simulate_fork_join(key, 20.0, 80_000, pr)
+    assert float(diurnal.mean_response) > 1.2 * float(flat.mean_response)
+
+
+def test_trace_replay_matches_stationary_statistics():
+    """Replaying a Poisson trace reproduces the drawn-gaps statistics."""
+    pr = dataclasses.replace(capacity.TABLE5_PARAMS, p=4)
+    lam, n = 18.0, 60_000
+    gaps = np.random.default_rng(0).exponential(1.0 / lam, n)
+    trace = ArrivalProcess.from_trace(jnp.asarray(np.cumsum(gaps)))
+    res = simulator.simulate_fork_join(jax.random.PRNGKey(4), trace, n, pr)
+    lo, hi = queueing.response_time_bounds(lam, pr)
+    assert float(lo) * 0.95 < float(res.mean_response) < float(hi) * 1.05
 
 
 def test_mm1_mean_response_matches_theory():
@@ -84,6 +194,17 @@ def test_mmc_reduces_to_mm1():
     svc = jax.random.exponential(jax.random.PRNGKey(6), (50_000,))
     r1 = simulator.simulate_mmc(arr, svc, c=1)
     assert abs(float(jnp.mean(r1[5000:])) - 2.0) < 0.2
+
+
+def test_mmc_matches_erlang_c_mean():
+    """Kiefer-Wolfowitz DES vs the closed-form Erlang-C M/M/c response."""
+    lam, s, c = 2.1, 1.0, 3          # rho = 0.7 on 3 servers
+    analytic = float(queueing.mmc_residence_time(lam, s, c))
+    arr = jnp.cumsum(jax.random.exponential(jax.random.PRNGKey(11),
+                                            (150_000,)) / lam)
+    svc = jax.random.exponential(jax.random.PRNGKey(12), (150_000,)) * s
+    sim = float(jnp.mean(simulator.simulate_mmc(arr, svc, c=c)[15_000:]))
+    assert abs(sim - analytic) / analytic < 0.06, (sim, analytic)
 
 
 def test_mmc_multiserver_beats_single():

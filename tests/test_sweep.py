@@ -66,18 +66,23 @@ def test_analytical_vs_simulation_agreement():
         lam=jnp.asarray([10.0, 20.0]), p=jnp.asarray([4.0, 8.0]),
         base=capacity.TABLE5_PARAMS, hit=jnp.asarray([0.17]),
         broker_from_p=False)
-    sim = np.asarray(sweep.sweep_simulated(
-        grid, jax.random.PRNGKey(0), n_queries=60_000))
+    sim_res = sweep.sweep_simulated(
+        grid, jax.random.PRNGKey(0), n_queries=60_000)
+    sim = np.asarray(sim_res.mean)
     res = sweep.sweep_analytical(grid)
     lo = np.asarray(res.response_lower)
     hi = np.asarray(res.response_upper)
     assert sim.shape == grid.shape
     assert np.all(sim > lo * 0.95), (sim, lo)
     assert np.all(sim < hi * 1.05), (sim, hi)
+    # quantile surfaces ride along: p95 sits above the mean everywhere
+    p95 = np.asarray(sim_res.quantile(0.95))
+    assert p95.shape == grid.shape
+    assert np.all(p95 > sim)
 
 
 def test_batch_simulator_matches_single_scenario():
-    """(S=1) batched Lindley == the scalar simulate_fork_join estimate."""
+    """(S=1) batched streaming == the scalar simulate_fork_join estimate."""
     from repro.core import simulator
     pr = dataclasses.replace(capacity.TABLE5_PARAMS, p=8)
     single = simulator.simulate_fork_join(
@@ -87,8 +92,8 @@ def test_batch_simulator_matches_single_scenario():
         for f in dataclasses.fields(ServerParams)})
     batch = simulator.simulate_fork_join_batch(
         jax.random.PRNGKey(2), jnp.asarray([20.0]), vec, 60_000, p=8)
-    assert abs(float(batch[0]) - float(single.mean_response)) < 0.1 * float(
-        single.mean_response)
+    assert abs(float(batch.mean_response[0]) - float(single.mean_response)
+               ) < 0.1 * float(single.mean_response)
 
 
 def test_batch_simulator_pallas_matches_xla():
@@ -103,8 +108,61 @@ def test_batch_simulator_pallas_matches_xla():
         jax.random.PRNGKey(3), lam, vec, 8_000, p=4, impl="xla")
     r_pl = simulator.simulate_fork_join_batch(
         jax.random.PRNGKey(3), lam, vec, 8_000, p=4, impl="pallas")
-    np.testing.assert_allclose(np.asarray(r_xla), np.asarray(r_pl),
-                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(r_xla.mean_response),
+                               np.asarray(r_pl.mean_response), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(r_xla.quantile(0.95)),
+                               np.asarray(r_pl.quantile(0.95)), rtol=1e-3)
+
+
+def test_streaming_sweep_beyond_old_memory_ceiling():
+    """n_queries far past what the materializing path could hold.
+
+    The old engine materialized ~6 arrays of S x p x n_queries floats; at
+    S=8, p=8, n=200k that is ~1.2 GB of f32 intermediates inside one XLA
+    program.  The streaming engine's footprint is S x p x chunk — this
+    run holds ~1.5 MB of state regardless of n_queries.
+    """
+    grid = sweep.SweepGrid.build(
+        lam=jnp.asarray([12.0, 22.0]), p=jnp.asarray([8.0]),
+        cpu=jnp.asarray([1.0, 2.0]), disk=jnp.asarray([1.0, 2.0]),
+        base=capacity.TABLE5_PARAMS, hit=jnp.asarray([0.17]),
+        broker_from_p=False)
+    res = sweep.sweep_simulated(grid, jax.random.PRNGKey(0),
+                                n_queries=200_000, chunk_size=4096)
+    ana = sweep.sweep_analytical(grid)
+    assert np.all(np.asarray(res.mean) > np.asarray(ana.response_lower)
+                  * 0.95)
+    assert np.all(np.asarray(res.mean) < np.asarray(ana.response_upper)
+                  * 1.05)
+
+
+def test_diurnal_p95_frontier_differs_from_stationary_mean():
+    """Time-varying load + tail targeting shifts the planning answer.
+
+    The same grid, the same SLO: planning for the *mean under stationary
+    load* picks cheaper configs than planning for *p95 under the diurnal
+    peak* — the new knob the streaming core opens.
+    """
+    from repro.workloadgen import loadgen
+    grid = sweep.SweepGrid.build(
+        lam=jnp.asarray([14.0, 20.0]),
+        p=jnp.asarray([4.0, 8.0, 16.0]),
+        base=capacity.TABLE5_PARAMS, hit=jnp.asarray([0.17]),
+        broker_from_p=False)
+    slo = 0.8
+    key = jax.random.PRNGKey(7)
+    mean_res, mean_fr = planner.plan_over_grid(
+        grid, slo, simulate=True, key=key, n_queries=40_000)
+    profile = loadgen.diurnal_rates(1.0)
+    # compress the week so the 40k-query horizon covers full cycles
+    horizon = 40_000 / 14.0
+    p95_res, p95_fr = planner.plan_over_grid(
+        grid, slo, simulate=True, key=key, n_queries=40_000,
+        quantile=0.95, profile=profile,
+        profile_bin_seconds=horizon / profile.shape[0] / 4)
+    assert np.all(np.asarray(p95_fr.cost) >= np.asarray(mean_fr.cost))
+    assert np.any(np.asarray(p95_fr.cost) > np.asarray(mean_fr.cost)) or \
+        np.any(~np.asarray(p95_fr.feasible))
 
 
 def test_frontier_picks_minimal_cost_feasible():
