@@ -1,0 +1,63 @@
+"""Calibration throughput benchmark, persisted to BENCH_calibrate.json.
+
+Tracks the fitting pipeline's cost on a realistic multi-rate trace set:
+moment matching alone (the closed-form pass every batch pays) and the
+full calibrate() pipeline (moments + window stats + the candidate-grid
+seeded Gauss-Newton refinement).  The headline figure is trace queries
+fitted per second — calibration must stay cheap enough to re-run on
+every measurement window in production.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+
+BENCH_JSON = pathlib.Path("BENCH_calibrate.json")
+
+
+def bench_calibrate(rows):
+    from repro.calibrate import calibrate, fit_moments, simulate_trace
+    from repro.core import capacity
+
+    true = dataclasses.replace(capacity.TABLE5_PARAMS, p=4)
+    rates = [10.0, 22.0, 14.0, 18.0]
+    traces = [simulate_trace(jax.random.PRNGKey(i), lam, 25_000, true)
+              for i, lam in enumerate(rates)]
+    n_total = sum(tr.n_queries for tr in traces)
+
+    fit_moments(traces)                       # compile/warm
+    t0 = time.perf_counter()
+    moments = fit_moments(traces)
+    jax.block_until_ready(moments.s_disk)
+    dt_moments = time.perf_counter() - t0
+
+    cal = calibrate(traces, n_windows=16)     # compile/warm
+    t0 = time.perf_counter()
+    cal = calibrate(traces, n_windows=16)
+    jax.block_until_ready(cal.alpha)
+    dt_full = time.perf_counter() - t0
+
+    record = {
+        "bench": "calibrate",
+        "n_traces": len(traces),
+        "n_queries_total": n_total,
+        "p": int(true.p),
+        "moment_fit_seconds": dt_moments,
+        "full_calibrate_seconds": dt_full,
+        "queries_fitted_per_s": n_total / dt_full,
+        "traces_per_s": len(traces) / dt_full,
+        "alpha": float(cal.alpha),
+        "s_disk_rel_err": abs(float(cal.params.s_disk)
+                              - float(true.s_disk)) / float(true.s_disk),
+    }
+    BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+
+    rows.append(("calibrate_fit", dt_full * 1e6,
+                 f"{n_total} trace queries fitted in {dt_full * 1e3:.0f}ms"
+                 f" ({n_total / dt_full / 1e6:.2f}M queries/s; moments "
+                 f"alone {dt_moments * 1e3:.0f}ms); -> {BENCH_JSON}"))

@@ -10,8 +10,8 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (kernels_bench, paper_tables, partitioning_bench,
-                        streaming_bench, sweep_bench)
+from benchmarks import (calibrate_bench, kernels_bench, paper_tables,
+                        partitioning_bench, streaming_bench, sweep_bench)
 
 BENCHES = [
     paper_tables.bench_table2_query_lengths,
@@ -35,6 +35,7 @@ BENCHES = [
     sweep_bench.bench_sweep_grid,
     sweep_bench.bench_sweep_simulated,
     streaming_bench.bench_streaming_sweep,
+    calibrate_bench.bench_calibrate,
     partitioning_bench.bench_partitioning,
 ]
 

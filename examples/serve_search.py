@@ -76,11 +76,17 @@ def main():
         if arrivals[i] > now:
             time.sleep(min(arrivals[i] - now, 0.01))
             continue
-        # batching window: take every request that has arrived
+        # batching window: wait until `window` after the head arrival
+        # (no wait when the loop is already running behind — batches then
+        # fill from the backlog and it drains), then take every request
+        # that has ACTUALLY arrived.  Admitting future arrivals would log
+        # negative latencies and corrupt the measured-vs-model compare.
+        wait_end = arrivals[i] + args.batch_window_ms / 1e3
+        if now < wait_end:
+            time.sleep(wait_end - now)
+            now = time.perf_counter() - t0
         j = i
-        window_end = arrivals[i] + args.batch_window_ms / 1e3
-        while j < len(arrivals) and arrivals[j] <= window_end \
-                and j - i < batch:
+        while j < len(arrivals) and arrivals[j] <= now and j - i < batch:
             j += 1
         req_ids = qids[i:j]
         # result cache short-circuits repeats (Scenario 6)

@@ -1,0 +1,361 @@
+"""Fit Eq-1 parameters + the Sec-3.4 imbalance correction from traces.
+
+Two stages, mirroring the ISSUE:
+
+1. **Closed-form moment matching** (:func:`fit_moments`): the Eq-1
+   decomposition falls straight out of the trace's sufficient statistics.
+   ``hit`` is the hit-flag mean; ``s_hit`` the mean busy time over hit
+   entries; ``s_broker`` the mean broker busy time.  When the trace
+   records the disk split (ours do), ``s_disk``/``s_miss`` are exact
+   conditional means; without it they come from the first two moments of
+   the miss busy time — for Exp(a)+Exp(b), mean m and variance v give
+   (a - b)^2 = 2v - m^2, closed form up to the {a, b} labeling, resolved
+   by the larger-is-disk convention (true for paper Tables 5 and 6 except
+   the 4x-memory column — record the split when you can).
+
+2. **Gauss-Newton refinement** (:func:`refine`): a damped Gauss-Newton
+   on windowed predicted-vs-observed mean-response residuals fitting the
+   Sec-3.4 imbalance blend ``alpha`` between the Eq-7 bounds:
+
+       R_pred(lam) = R_broker + (1 + alpha (H_p - 1)) R_server.
+
+   ``alpha`` is what the paper's Sec 5.3 validation estimates by eye
+   ("measured response sits ~20% under the upper bound"); here it is a
+   fitted parameter.  The (candidate-params x trace-window) residual grid
+   is evaluated as ONE vmapped XLA program to seed the iteration, and the
+   `lax.scan` Gauss-Newton loop differentiates the residuals with
+   ``jax.jacfwd``.  An optional joint service scale (``fit_scale=True``,
+   ``theta = (log s_scale, logit alpha)``) is off by default: the moments
+   already pin the scale, and `refine`'s docstring explains the
+   identifiability trap a free scale opens.  The ``residual="maxplus"``
+   path instead replays the trace's arrivals through the differentiable
+   max-plus FCFS recurrence (`simulator.fcfs_completion_times`, the same
+   kernel the streaming engine uses) with busy times rescaled by
+   ``s_scale`` — gradients flow through the whole queueing sample path,
+   where the scale IS identified.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.calibrate import measure
+from repro.calibrate.measure import TraceRecord
+from repro.core import queueing
+from repro.core.queueing import ServerParams
+from repro.core.simulator import fcfs_completion_times
+
+Array = jax.Array
+
+__all__ = [
+    "CalibratedParams",
+    "fit_moments",
+    "fit_alpha",
+    "refine",
+    "calibrate",
+]
+
+_RHO_CAP = 0.995          # soft saturation guard inside the optimizer
+_GN_DAMPING = 1e-6
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CalibratedParams:
+    """A calibrated model: Eq-1 parameters + the imbalance blend.
+
+    ``params`` is a plain :class:`ServerParams` with the refinement scale
+    already folded in, so it drops straight into `capacity.plan_capacity`,
+    `sweep.SweepGrid.build(base=...)`, and `planner.plan_over_grid` — the
+    measure -> fit -> plan wiring is just ``cal.to_server_params()``.
+    """
+
+    params: ServerParams
+    alpha: Array            # Sec 3.4 imbalance blend in [0, 1]
+    s_scale: Array          # refinement scale applied to the service times
+    residual_rms: Array     # final weighted log-residual RMS of the fit
+
+    def to_server_params(self) -> ServerParams:
+        return self.params
+
+    def predict_mean_response(self, lam) -> Array:
+        """Calibrated mean response: R_lo + alpha (R_hi - R_lo) (Eq 7)."""
+        lo, hi = queueing.response_time_bounds(lam, self.params)
+        return lo + self.alpha * (hi - lo)
+
+    def predict_bounds(self, lam) -> tuple[Array, Array]:
+        return queueing.response_time_bounds(lam, self.params)
+
+
+def _scale_service(params: ServerParams, s_scale) -> ServerParams:
+    """Rescale the index-server service decomposition (broker untouched)."""
+    s = jnp.asarray(s_scale)
+    return dataclasses.replace(
+        params,
+        s_hit=jnp.asarray(params.s_hit) * s,
+        s_miss=jnp.asarray(params.s_miss) * s,
+        s_disk=jnp.asarray(params.s_disk) * s)
+
+
+def fit_moments(
+    traces: Union[TraceRecord, Sequence[TraceRecord]],
+) -> ServerParams:
+    """Closed-form Eq-1 decomposition from trace sufficient statistics.
+
+    Accepts a single record or any chunking of one into batches; the
+    estimate only depends on accumulated sums, so it is invariant to the
+    chunking (tested by hypothesis).
+    """
+    batches = measure.as_trace_list(traces)
+    p = batches[0].p
+    has_disk = all(tr.server_disk is not None for tr in batches)
+
+    n_entries = n_hit = 0.0
+    s_busy_hit = s_busy_miss = ss_busy_miss = 0.0
+    s_disk_miss = s_broker = 0.0
+    n_queries = 0.0
+    for tr in batches:
+        hit = tr.server_hit
+        miss = 1.0 - hit
+        n_entries += hit.size
+        n_hit += jnp.sum(hit)
+        s_busy_hit += jnp.sum(tr.server_busy * hit)
+        s_busy_miss += jnp.sum(tr.server_busy * miss)
+        ss_busy_miss += jnp.sum(tr.server_busy**2 * miss)
+        if has_disk:
+            s_disk_miss += jnp.sum(tr.server_disk * miss)
+        s_broker += jnp.sum(tr.broker_busy)
+        n_queries += tr.n_queries
+
+    n_miss = jnp.maximum(n_entries - n_hit, 1.0)
+    hit_ratio = n_hit / n_entries
+    s_hit = s_busy_hit / jnp.maximum(n_hit, 1.0)
+    m = s_busy_miss / n_miss                       # E[busy | miss]
+    if has_disk:
+        s_disk = s_disk_miss / n_miss
+        s_miss = m - s_disk
+    else:
+        v = jnp.maximum(ss_busy_miss / n_miss - m * m, 0.0)
+        d = jnp.sqrt(jnp.maximum(2.0 * v - m * m, 0.0))
+        s_disk = 0.5 * (m + d)                     # larger-is-disk
+        s_miss = 0.5 * (m - d)
+    return ServerParams(
+        p=p, s_broker=s_broker / n_queries, s_hit=s_hit,
+        s_miss=s_miss, s_disk=s_disk, hit=hit_ratio)
+
+
+def _soft_mean_response(lam, params: ServerParams, alpha) -> Array:
+    """The fitted-mean predictor with a saturation-safe M/M/1 core.
+
+    Identical to `CalibratedParams.predict_mean_response` below rho_cap;
+    the clip keeps residuals finite while the optimizer passes through
+    infeasible candidates (an Inf residual would NaN the Jacobian)."""
+    lam = jnp.asarray(lam)
+    s = queueing.service_time_server(params)
+
+    def r_mm1(s_):
+        rho = jnp.clip(lam * s_, 0.0, _RHO_CAP)
+        return s_ / (1.0 - rho)
+
+    hp = queueing.harmonic_number(params.p)
+    return r_mm1(jnp.asarray(params.s_broker)) + (
+        1.0 + alpha * (hp - 1.0)) * r_mm1(s)
+
+
+def fit_alpha(params: ServerParams, lam, r_observed) -> Array:
+    """Closed-form imbalance blend from (lam, mean response) points.
+
+    alpha solves R_obs = R_lo + alpha (R_hi - R_lo) per point; points are
+    averaged weighted by the bound gap (wide-gap points constrain alpha
+    best).  This is the whole fit available to response-only traces —
+    e.g. the streaming tap (`measure.trace_from_tap`)."""
+    lo, hi = queueing.response_time_bounds(lam, params)
+    gap = jnp.maximum(hi - lo, 1e-12)
+    ok = jnp.isfinite(lo) & jnp.isfinite(hi) & jnp.isfinite(
+        jnp.asarray(r_observed))
+    a = jnp.clip((jnp.asarray(r_observed) - lo) / gap, 0.0, 1.0)
+    a = jnp.where(ok, a, 0.0)   # NaN observations would survive a*0
+    w = jnp.where(ok, gap, 0.0)
+    return jnp.sum(a * w) / jnp.maximum(jnp.sum(w), 1e-30)
+
+
+def _window_residuals_analytic(theta, params, lam_w, r_obs_w, sqrt_w):
+    """theta = (logit alpha,) or (log s_scale, logit alpha)."""
+    s_scale = jnp.exp(theta[0]) if theta.shape[0] == 2 else 1.0
+    alpha = jax.nn.sigmoid(theta[-1])
+    pred = _soft_mean_response(lam_w, _scale_service(params, s_scale),
+                               alpha)
+    return sqrt_w * (jnp.log(pred) - jnp.log(r_obs_w))
+
+
+def _replay_window_means(trace: TraceRecord, s_scale, k: int, w: int
+                         ) -> Array:
+    """Mean response per window from a max-plus replay at scaled service.
+
+    Replays the OBSERVED arrivals and busy times — rescaled by
+    ``s_scale`` — through the same FCFS recurrence the simulator uses.
+    Differentiable end-to-end (the XLA associative scan), so `refine` can
+    Gauss-Newton through the queueing sample path itself.  (k, w) is the
+    batch's `measure.window_plan` entry."""
+    arr = trace.arrival
+    broker_done = fcfs_completion_times(arr, trace.broker_busy)
+    busy = trace.server_busy.T * s_scale          # (p, n)
+    fork = jnp.broadcast_to(broker_done[None, :], busy.shape)
+    response = jnp.max(fcfs_completion_times(fork, busy), axis=0) - arr
+    return jnp.mean(response[: k * w].reshape(k, w), 1)
+
+
+def refine(
+    params: ServerParams,
+    lam_w: Array,
+    r_obs_w: Array,
+    weights: Array,
+    *,
+    n_iters: int = 20,
+    residual: str = "analytic",
+    traces: Union[TraceRecord, Sequence[TraceRecord], None] = None,
+    n_candidates: int = 9,
+    fit_scale: bool = False,
+    n_windows: int = None,
+) -> tuple[Array, Array, Array]:
+    """Damped Gauss-Newton refinement; returns (s_scale, alpha, rms).
+
+    Seeds from the best point of a (candidate-params x window) residual
+    grid — candidate (s_scale, alpha) points against every window, one
+    vmapped XLA program — then runs ``n_iters`` Gauss-Newton steps via
+    `lax.scan` with `jax.jacfwd` Jacobians.  Residuals are log-space
+    (scale-free), weighted by sqrt(window count).
+
+    The analytic path fits ``alpha`` ONLY unless ``fit_scale=True``: the
+    moment-matched decomposition already pins the service scale from
+    direct busy-time measurement, and a free scale lets constant-alpha
+    misspecification (the true blend drifts with utilization) leak into
+    the directly-measured parameters — the classic identifiability trap
+    of fitting scale and shape to one response curve.
+
+    ``residual="maxplus"`` fits ``s_scale`` against the differentiable
+    max-plus replay of ``traces`` instead of the analytic curve.  There
+    the scale IS well-identified — the replay pins the queueing mechanism
+    exactly, so the only freedom left is the busy-time scale (e.g. timer
+    overhead in an engine harness) — and alpha then comes from
+    :func:`fit_alpha` against the replayed windows.
+    ``lam_w``/``r_obs_w``/``weights`` must come from
+    `measure.window_stats` on the same traces, and ``n_windows`` must be
+    the SAME value that call used (the realized window count can differ
+    from the request for uneven batches, so it cannot be recovered from
+    ``lam_w`` alone), so the replayed windows line up one-to-one.
+    """
+    sqrt_w = jnp.sqrt(weights / jnp.maximum(jnp.sum(weights), 1e-30))
+    if residual == "maxplus":
+        if traces is None:
+            raise ValueError("residual='maxplus' needs the traces")
+        batches = measure.as_trace_list(traces)
+        plan = measure.window_plan(
+            batches, lam_w.shape[0] if n_windows is None else n_windows)
+        realized = sum(k for k, _ in plan if k > 0)
+        if realized != lam_w.shape[0]:
+            raise ValueError(
+                f"window plan yields {realized} windows but lam_w has "
+                f"{lam_w.shape[0]}; pass refine(..., n_windows=) the same "
+                "value the window_stats call used")
+        # The replay starts each batch from an EMPTY queue, but the
+        # observed responses carry backlog in from the (trimmed) warmup,
+        # so each batch's first window systematically reads low in the
+        # replay.  Mask it out of the residuals (and the later alpha fit)
+        # rather than letting Gauss-Newton inflate s_scale to paper over
+        # the transient.
+        sqrt_w = sqrt_w * jnp.concatenate([
+            (jnp.arange(k) > 0).astype(sqrt_w.dtype)
+            for k, _ in plan if k > 0])
+
+        def resid(theta):
+            s = jnp.exp(theta[0])
+            pred = jnp.concatenate([
+                _replay_window_means(tr, s, k, w)
+                for tr, (k, w) in zip(batches, plan) if k > 0])
+            return sqrt_w * (jnp.log(jnp.maximum(pred, 1e-12))
+                             - jnp.log(r_obs_w))
+
+        theta0 = jnp.zeros((1,))
+    elif residual == "analytic":
+        def resid(theta):
+            return _window_residuals_analytic(theta, params, lam_w,
+                                              r_obs_w, sqrt_w)
+
+        # ONE program over (candidate x window): seed where the grid is
+        # least wrong.  alpha across (0, 1); log s_scale in +-20% when
+        # it is being fitted at all.
+        ca = jnp.linspace(-2.5, 2.5, n_candidates)   # logit space
+        if fit_scale:
+            cs = jnp.linspace(-0.2, 0.2, n_candidates)
+            cand = jnp.stack(jnp.meshgrid(cs, ca, indexing="ij"),
+                             -1).reshape(-1, 2)
+        else:
+            cand = ca[:, None]
+        grid_rms = jax.vmap(lambda t: jnp.sum(resid(t) ** 2))(cand)
+        theta0 = cand[jnp.argmin(grid_rms)]
+    else:
+        raise ValueError(f"unknown residual path: {residual}")
+
+    def gn_step(theta, _):
+        r = resid(theta)
+        j = jax.jacfwd(resid)(theta)
+        jtj = j.T @ j
+        g = j.T @ r
+        delta = jnp.linalg.solve(
+            jtj + _GN_DAMPING * jnp.eye(theta.shape[0]), g)
+        # trust region: a log-space step never exceeds 0.5
+        delta = jnp.clip(delta, -0.5, 0.5)
+        return theta - delta, None
+
+    theta, _ = jax.lax.scan(gn_step, theta0, None, length=n_iters)
+    rms = jnp.sqrt(jnp.sum(resid(theta) ** 2))
+    if residual == "maxplus":
+        s_scale = jnp.exp(theta[0])
+        pred = jnp.concatenate([
+            _replay_window_means(tr, s_scale, k, w)
+            for tr, (k, w) in zip(batches, plan) if k > 0])
+        keep = jnp.concatenate([jnp.arange(k) > 0
+                                for k, _ in plan if k > 0])
+        alpha = fit_alpha(_scale_service(params, s_scale),
+                          jnp.where(keep, lam_w, 0.0),
+                          jnp.where(keep, pred, jnp.nan))
+    else:
+        s_scale = jnp.exp(theta[0]) if fit_scale else jnp.asarray(1.0)
+        alpha = jax.nn.sigmoid(theta[-1])
+    return s_scale, alpha, rms
+
+
+def calibrate(
+    traces: Union[TraceRecord, Sequence[TraceRecord]],
+    *,
+    n_windows: int = 16,
+    do_refine: bool = True,
+    n_iters: int = 20,
+    residual: str = "analytic",
+    fit_scale: bool = False,
+) -> CalibratedParams:
+    """Moment-match then refine: the full fitting pipeline.
+
+    Returns :class:`CalibratedParams` whose ``params`` carry the refined
+    scale, ready for `capacity.plan_capacity` / `sweep.SweepGrid.build`.
+    """
+    base = fit_moments(traces)
+    lam_w, r_obs_w, counts = measure.window_stats(traces, n_windows)
+    if not do_refine:
+        alpha = fit_alpha(base, lam_w, r_obs_w)
+        pred = _soft_mean_response(lam_w, base, alpha)
+        rms = jnp.sqrt(jnp.mean((jnp.log(pred) - jnp.log(r_obs_w)) ** 2))
+        return CalibratedParams(params=base, alpha=alpha,
+                                s_scale=jnp.asarray(1.0),
+                                residual_rms=rms)
+    s_scale, alpha, rms = refine(
+        base, lam_w, r_obs_w, counts, n_iters=n_iters, residual=residual,
+        traces=traces, fit_scale=fit_scale, n_windows=n_windows)
+    return CalibratedParams(
+        params=_scale_service(base, s_scale), alpha=alpha,
+        s_scale=s_scale, residual_rms=rms)

@@ -1,0 +1,349 @@
+"""Measurement harness: every trace the calibration layer consumes.
+
+The paper's model earns its keep by being *tuned from measurements*
+(Secs. 4-6): Tables 5-6 come from instrumented runs, and accuracy is
+judged predicted-vs-measured.  This module is the instrumented run.  All
+trace ingestion goes through one record type:
+
+:class:`TraceRecord` — per-query arrival time, response time, broker busy
+time, per-(query, server) busy time and cache hit/miss split, all JAX
+arrays, registered as a pytree so fitting can jit/vmap over whole traces.
+
+Three trace sources feed it:
+
+  * :func:`simulate_trace` — a materializing fork-join sample path with
+    known ground-truth :class:`ServerParams` (the round-trip test bed and
+    the "run the toy engine under workloadgen load" stand-in).  Unlike the
+    streaming engine it records the full per-query record; calibration
+    traces are bounded (tens of thousands of queries), so materializing is
+    the right trade here.
+  * :func:`measure_engine_trace` — the instrumented toy search engine:
+    per-shard busy times from the timed compiled scorer
+    (`engine.server.measure_busy_trace`) + LRU cache replay, broker busy
+    time from the timed top-k merge (`engine.broker.timed_merge_topk`).
+    Response times come from replaying the measured busy times against the
+    arrival sequence through the max-plus FCFS recurrence — the paper's
+    methodology of measuring service at the servers and deriving response
+    from the queueing structure.
+  * :func:`trace_from_tap` — the streaming simulator's bounded reservoir
+    tap (`SimResult.tap_response` / `SimSweepResult.sample_response`):
+    response-only samples from systems too large to materialize.  These
+    carry no busy-time split, so they support alpha/validation fitting
+    (`fit.fit_alpha`) but not the Eq-1 moment decomposition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arrivals import ArrivalProcess
+from repro.core.queueing import ServerParams
+from repro.core.simulator import fcfs_completion_times
+
+Array = jax.Array
+
+__all__ = [
+    "TraceRecord",
+    "simulate_trace",
+    "measure_engine_trace",
+    "trace_from_tap",
+    "concat_traces",
+    "window_plan",
+    "window_stats",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TraceRecord:
+    """One batch of per-query measurements (the calibration currency).
+
+    arrival:     (n,) absolute arrival timestamps, nondecreasing.
+    response:    (n,) end-to-end response times (join - arrival).
+    broker_busy: (n,) broker service time actually spent per query.
+    server_busy: (n, p) busy time at each index server.
+    server_hit:  (n, p) 1.0 where the server answered fully from cache.
+    server_disk: (n, p) disk component of the busy time (0 on hits), or
+                 None when the instrumentation cannot split CPU from disk
+                 (fitting then falls back to moment matching).
+    """
+
+    arrival: Array
+    response: Array
+    broker_busy: Array
+    server_busy: Array
+    server_hit: Array
+    server_disk: Optional[Array] = None
+
+    @property
+    def n_queries(self) -> int:
+        return self.arrival.shape[0]
+
+    @property
+    def p(self) -> int:
+        return self.server_busy.shape[1]
+
+    @property
+    def observed_rate(self) -> Array:
+        """Mean arrival rate over the record's span (qps)."""
+        span = jnp.maximum(self.arrival[-1] - self.arrival[0], 1e-9)
+        return (self.n_queries - 1) / span
+
+    def split(self, n_batches: int) -> list["TraceRecord"]:
+        """Split into ``n_batches`` contiguous batches (last takes the
+        remainder) — fitting is invariant to this chunking."""
+        n = self.n_queries
+        size = max(1, n // n_batches)
+        edges = [i * size for i in range(n_batches)] + [n]
+        out = []
+        for lo, hi in zip(edges[:-1], edges[1:]):
+            if hi <= lo:
+                continue
+            out.append(jax.tree_util.tree_map(lambda x: x[lo:hi], self))
+        return out
+
+
+def concat_traces(traces: Sequence[TraceRecord]) -> TraceRecord:
+    """Concatenate trace batches along the query axis.
+
+    Only for batches that continue one clock (arrivals stay monotone) —
+    e.g. the chunks of a single measurement run.  Independent runs (each
+    restarting at t=0) must stay a *list*: every consumer here accepts
+    one, and windowing never straddles list entries, so mixed-rate trace
+    sets keep their per-run rate structure intact.
+    """
+    traces = list(traces)
+    if len(traces) == 1:
+        return traces[0]
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *traces)
+
+
+def as_trace_list(traces: Union[TraceRecord, Sequence[TraceRecord]]
+                  ) -> list[TraceRecord]:
+    return [traces] if isinstance(traces, TraceRecord) else list(traces)
+
+
+def window_plan(
+    traces: Union[TraceRecord, Sequence[TraceRecord]],
+    n_windows: int,
+) -> list[tuple[int, int]]:
+    """Per-batch (n_windows, window_size) so windows NEVER straddle
+    batches — independent runs restart the clock, and a straddling
+    window's interarrival span would be garbage.  Shared by
+    :func:`window_stats` and the max-plus replay residual path so both
+    see identical windows."""
+    batches = as_trace_list(traces)
+    per_batch = max(1, n_windows // len(batches))
+    plan = []
+    for tr in batches:
+        w = max(2, tr.n_queries // per_batch)
+        plan.append((tr.n_queries // w, w))
+    return plan
+
+
+def window_stats(
+    traces: Union[TraceRecord, Sequence[TraceRecord]],
+    n_windows: int,
+) -> tuple[Array, Array, Array]:
+    """Per-window (observed rate, mean response, query count).
+
+    Windows are equal-count contiguous slices *per trace batch* (see
+    :func:`window_plan`).  The observed rate is the within-window
+    interarrival-based estimate — the lambda the analytical model is
+    asked to reproduce.
+    """
+    lams, means, counts = [], [], []
+    batches = as_trace_list(traces)
+    for tr, (k, w) in zip(batches, window_plan(batches, n_windows)):
+        if k == 0:
+            continue
+        arr = tr.arrival[: k * w].reshape(k, w)
+        resp = tr.response[: k * w].reshape(k, w)
+        span = jnp.maximum(arr[:, -1] - arr[:, 0], 1e-9)
+        lams.append((w - 1) / span)
+        means.append(jnp.mean(resp, axis=1))
+        counts.append(jnp.full((k,), float(w)))
+    return (jnp.concatenate(lams), jnp.concatenate(means),
+            jnp.concatenate(counts))
+
+
+def _sample_arrivals(key: Array, proc: ArrivalProcess, n: int) -> Array:
+    """Arrival timestamps from a (single-scenario) arrival process.
+
+    Piecewise profiles draw each gap at the rate in force at the previous
+    arrival — per-query granularity, finer than the streaming engine's
+    rate-per-chunk read, which is what a calibration trace wants (flash
+    crowds shorter than a chunk still show up)."""
+    if proc.trace_gaps is not None:
+        return jnp.cumsum(proc.trace_gaps[:n])
+    if proc.rates.ndim != 1:
+        raise ValueError("simulate_trace is single-scenario; rates must "
+                         f"be 1-D, got {proc.rates.shape}")
+    u = jax.random.exponential(key, (n,), jnp.result_type(float))
+    if proc.n_bins == 1:
+        return jnp.cumsum(u / jnp.maximum(proc.rates[0], 1e-30))
+
+    def step(t, ui):
+        t2 = t + ui / jnp.maximum(proc.rate_at(t), 1e-30)
+        return t2, t2
+
+    _, arr = jax.lax.scan(step, jnp.asarray(0.0, u.dtype), u)
+    return arr
+
+
+def simulate_trace(
+    key: Array,
+    arrival: Union[ArrivalProcess, float],
+    n_queries: int,
+    params: ServerParams,
+    *,
+    impl: str = "xla",
+    warmup_fraction: float = 0.1,
+) -> TraceRecord:
+    """Ground-truth fork-join trace from known Eq-1 parameters.
+
+    The service mechanism is the paper's Sec 3.4 "cache" regime — per
+    (query, server) Bernoulli(hit) between Exp(s_hit) and
+    Exp(s_miss)+Exp(s_disk) — because that is the only regime whose trace
+    identifies the full Eq-1 decomposition.  The hit flag and the disk
+    component are recorded, so moment fitting can recover every parameter
+    (the round-trip test).  The first ``warmup_fraction`` of queries is
+    dropped from the record (queue fill-up transient).
+
+    ``impl="pallas"`` routes the two FCFS recurrences through the
+    `maxplus_scan` kernel, same as the streaming engine.
+    """
+    proc = (arrival if isinstance(arrival, ArrivalProcess)
+            else ArrivalProcess.stationary(float(arrival)))
+    p = int(params.p)
+    k_arr, k_brk, k_hit, k_h, k_m, k_d = jax.random.split(key, 6)
+    dtype = jnp.result_type(float)
+
+    arrivals = _sample_arrivals(k_arr, proc, n_queries).astype(dtype)
+    broker_busy = (jax.random.exponential(k_brk, (n_queries,), dtype)
+                   * jnp.asarray(params.s_broker, dtype))
+    shape = (n_queries, p)
+    is_hit = jax.random.bernoulli(
+        k_hit, jnp.asarray(params.hit, dtype), shape)
+    t_hit = (jax.random.exponential(k_h, shape, dtype)
+             * jnp.asarray(params.s_hit, dtype))
+    t_cpu_miss = (jax.random.exponential(k_m, shape, dtype)
+                  * jnp.asarray(params.s_miss, dtype))
+    t_disk = (jax.random.exponential(k_d, shape, dtype)
+              * jnp.asarray(params.s_disk, dtype))
+    server_disk = jnp.where(is_hit, 0.0, t_disk)
+    server_busy = jnp.where(is_hit, t_hit, t_cpu_miss) + server_disk
+
+    broker_done = fcfs_completion_times(arrivals, broker_busy, impl=impl)
+    fork = jnp.broadcast_to(broker_done[None, :], (p, n_queries))
+    completions = fcfs_completion_times(fork, server_busy.T, impl=impl)
+    response = jnp.max(completions, axis=0) - arrivals
+
+    rec = TraceRecord(
+        arrival=arrivals, response=response, broker_busy=broker_busy,
+        server_busy=server_busy, server_hit=is_hit.astype(dtype),
+        server_disk=server_disk)
+    n_warm = int(n_queries * warmup_fraction)
+    return jax.tree_util.tree_map(lambda x: x[n_warm:], rec)
+
+
+def measure_engine_trace(
+    shards,
+    query_terms: np.ndarray,
+    arrivals: np.ndarray,
+    *,
+    cache_bytes: int,
+    batch: int = 64,
+    warmup_batches: int = 2,
+    disk_bw: float = 50e6,
+    disk_seek: float = 8e-3,
+    k_merge: int = 10,
+    impl: str = "xla",
+) -> TraceRecord:
+    """Instrumented run of the toy engine -> a calibration trace.
+
+    shards:      list of `repro.engine.server.IndexServer` (one per index
+                 partition; the fork-join's p servers).
+    query_terms: (n, L) padded term ids (`workloadgen.querygen` stream).
+    arrivals:    (n,) arrival timestamps (`workloadgen.loadgen`).
+
+    Per shard, `engine.server.measure_busy_trace` times the compiled
+    scorer batch-by-batch and replays the LRU disk cache for the
+    hit/miss/disk split; `engine.broker.timed_merge_topk` times the join
+    merge.  Response times are the max-plus replay of those measured busy
+    times over the arrival sequence (measure service, derive response —
+    Sec 4.3's low-load instrumentation discipline).
+    """
+    from repro.engine import broker as broker_lib
+    from repro.engine import server as server_lib
+
+    n = min(query_terms.shape[0], len(arrivals))
+    n = (n // batch) * batch
+    if n == 0:
+        raise ValueError("need at least one full batch of queries")
+    query_terms = np.asarray(query_terms[:n])
+    arrivals = np.sort(np.asarray(arrivals[:n], dtype=np.float64))
+
+    busy, hit, disk = [], [], []
+    partial_s, partial_d = [], []
+    for srv in shards:
+        b, h, d, scores, docs = server_lib.measure_busy_trace(
+            srv, query_terms, cache_bytes, batch=batch,
+            warmup_batches=warmup_batches, disk_bw=disk_bw,
+            disk_seek=disk_seek)
+        busy.append(b)
+        hit.append(h)
+        disk.append(d)
+        partial_s.append(scores)
+        partial_d.append(docs)
+
+    # broker: timed top-k merge over the same batches
+    ps = np.stack(partial_s)          # (p, n, k_local)
+    pd = np.stack(partial_d)
+    broker_busy = np.zeros(n, dtype=np.float64)
+    broker_lib.timed_merge_topk(                     # compile + warm
+        jnp.asarray(ps[:, :batch]), jnp.asarray(pd[:, :batch]), k=k_merge)
+    for i in range(0, n, batch):
+        (_, _), dt = broker_lib.timed_merge_topk(
+            jnp.asarray(ps[:, i:i + batch]), jnp.asarray(pd[:, i:i + batch]),
+            k=k_merge)
+        broker_busy[i:i + batch] = dt / batch
+
+    dtype = jnp.result_type(float)
+    arr = jnp.asarray(arrivals, dtype)
+    brk = jnp.asarray(broker_busy, dtype)
+    sb = jnp.asarray(np.stack(busy, axis=1), dtype)      # (n, p)
+    broker_done = fcfs_completion_times(arr, brk, impl=impl)
+    fork = jnp.broadcast_to(broker_done[None, :], (len(shards), n))
+    completions = fcfs_completion_times(fork, sb.T, impl=impl)
+    response = jnp.max(completions, axis=0) - arr
+
+    return TraceRecord(
+        arrival=arr, response=response, broker_busy=brk, server_busy=sb,
+        server_hit=jnp.asarray(np.stack(hit, axis=1), dtype),
+        server_disk=jnp.asarray(np.stack(disk, axis=1), dtype))
+
+
+def trace_from_tap(
+    tap_response: Array,
+    lam: Union[Array, float],
+) -> tuple[Array, Array]:
+    """(lam, mean response) points from reservoir-tap samples.
+
+    ``tap_response`` is `SimResult.tap_response` (one scenario, (k,)) or
+    any leading-scenario-shaped stack of taps ((S, k), the sweep's
+    ``sample_response`` reshaped); ``lam`` the matching scenario rates.
+    NaN padding (scenarios with fewer post-warmup queries than the tap)
+    is ignored.  The result feeds `fit.fit_alpha` — response-only traces
+    cannot drive the Eq-1 moment decomposition.
+    """
+    tap = jnp.asarray(tap_response)
+    lam = jnp.broadcast_to(jnp.asarray(lam, tap.dtype), tap.shape[:-1])
+    mean = jnp.nanmean(tap, axis=-1)
+    return lam, mean

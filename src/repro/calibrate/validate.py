@@ -1,0 +1,198 @@
+"""Held-out validation of a calibrated model (the paper's Sec 5.3 figures).
+
+The paper judges its model by predicted-vs-measured response times on
+operating points the fit never saw.  :func:`validate` does exactly that
+with three columns per held-out window:
+
+  * **observed** — the trace's windowed mean response (the measurement);
+  * **calibrated** — the analytical model at the window's observed rate,
+    with the fitted Eq-1 parameters and imbalance blend;
+  * **simulated** — the streaming max-plus simulator run at the same rate
+    with the same calibrated parameters (the model's mechanistic twin).
+
+Error metrics (mean/p95 relative error, per-lambda error curves) mirror
+the validation figures; :func:`calibrate_and_validate` wires the
+time-split train/held-out protocol end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.calibrate import fit, measure
+from repro.calibrate.fit import CalibratedParams
+from repro.calibrate.measure import TraceRecord
+from repro.core import simulator
+from repro.core.queueing import ServerParams
+
+Array = jax.Array
+
+__all__ = ["ValidationReport", "validate", "calibrate_and_validate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ValidationReport:
+    """Held-out predicted-vs-measured-vs-simulated comparison.
+
+    All arrays are per held-out window, sorted by observed rate.
+    """
+
+    lam: Array            # observed window arrival rates (qps)
+    r_observed: Array     # windowed mean response from the trace (s)
+    r_calibrated: Array   # calibrated analytical prediction (s)
+    r_simulated: Array    # calibrated-simulator mean response (s)
+    calibrated: CalibratedParams
+
+    @property
+    def rel_err_observed(self) -> Array:
+        """|calibrated - observed| / observed, per window."""
+        return jnp.abs(self.r_calibrated - self.r_observed) / self.r_observed
+
+    @property
+    def rel_err_simulated(self) -> Array:
+        """|calibrated - simulated| / simulated, per window."""
+        return jnp.abs(self.r_calibrated - self.r_simulated) / self.r_simulated
+
+    @property
+    def mean_rel_err(self) -> float:
+        return float(jnp.mean(self.rel_err_observed))
+
+    @property
+    def p95_rel_err(self) -> float:
+        return float(jnp.quantile(self.rel_err_observed, 0.95))
+
+    @property
+    def mean_rel_err_vs_sim(self) -> float:
+        return float(jnp.mean(self.rel_err_simulated))
+
+    @property
+    def max_rel_err_vs_sim(self) -> float:
+        return float(jnp.max(self.rel_err_simulated))
+
+    def error_curve(self) -> tuple[np.ndarray, np.ndarray]:
+        """(lam, relative error vs observed) — the per-lambda error curve."""
+        return np.asarray(self.lam), np.asarray(self.rel_err_observed)
+
+    def summary(self) -> str:
+        lines = [
+            "== calibration validation "
+            f"({self.lam.shape[0]} held-out windows) ==",
+            f"{'lam (qps)':>10s} {'observed':>10s} {'calibrated':>11s} "
+            f"{'simulated':>10s} {'err(obs)':>9s} {'err(sim)':>9s}",
+        ]
+        eo = np.asarray(self.rel_err_observed)
+        es = np.asarray(self.rel_err_simulated)
+        for i in range(self.lam.shape[0]):
+            lines.append(
+                f"{float(self.lam[i]):10.2f} "
+                f"{float(self.r_observed[i]) * 1e3:8.1f}ms "
+                f"{float(self.r_calibrated[i]) * 1e3:9.1f}ms "
+                f"{float(self.r_simulated[i]) * 1e3:8.1f}ms "
+                f"{eo[i] * 100:8.1f}% {es[i] * 100:8.1f}%")
+        lines.append(
+            f"vs observed:  mean {self.mean_rel_err * 100:.1f}%  "
+            f"p95 {self.p95_rel_err * 100:.1f}%")
+        lines.append(
+            f"vs simulator: mean {self.mean_rel_err_vs_sim * 100:.1f}%  "
+            f"max {self.max_rel_err_vs_sim * 100:.1f}%")
+        return "\n".join(lines)
+
+
+def _vec_params(params: ServerParams, n: int) -> ServerParams:
+    return ServerParams(**{
+        f.name: jnp.full((n,), jnp.asarray(getattr(params, f.name),
+                                           jnp.float32))
+        for f in dataclasses.fields(ServerParams)})
+
+
+def validate(
+    traces: Union[TraceRecord, Sequence[TraceRecord]],
+    calibrated: CalibratedParams,
+    *,
+    n_windows: int = 8,
+    holdout_fraction: float = 1.0,
+    key: Optional[Array] = None,
+    simulator_queries: int = 40_000,
+    impl: str = "xla",
+) -> ValidationReport:
+    """Score a calibrated model on (held-out) trace windows.
+
+    ``holdout_fraction`` keeps the LAST fraction of windows (a time
+    split: validation data is strictly later than anything a preceding
+    `fit.calibrate` call saw); 1.0 scores every window of ``traces`` —
+    the mode :func:`calibrate_and_validate` uses after splitting the raw
+    trace itself.  The simulator column re-runs the streaming engine at
+    each held-out window's observed rate under the calibrated parameters
+    (mode="cache", one batched dispatch for all windows).
+    """
+    lam_w, r_obs_w, _ = measure.window_stats(traces, n_windows)
+    n_hold = max(1, int(round(lam_w.shape[0] * holdout_fraction)))
+    lam_h, r_obs_h = lam_w[-n_hold:], r_obs_w[-n_hold:]
+
+    r_cal = calibrated.predict_mean_response(lam_h)
+
+    params = calibrated.to_server_params()
+    key = jax.random.PRNGKey(0) if key is None else key
+    sim = simulator.simulate_fork_join_batch(
+        key, lam_h, _vec_params(params, n_hold), simulator_queries,
+        p=int(params.p), mode="cache", impl=impl)
+    r_sim = sim.mean_response
+
+    order = jnp.argsort(lam_h)
+    return ValidationReport(
+        lam=lam_h[order], r_observed=r_obs_h[order],
+        r_calibrated=r_cal[order], r_simulated=r_sim[order],
+        calibrated=calibrated)
+
+
+def calibrate_and_validate(
+    traces: Union[TraceRecord, Sequence[TraceRecord]],
+    *,
+    n_windows: int = 16,
+    holdout_fraction: float = 0.25,
+    key: Optional[Array] = None,
+    simulator_queries: int = 40_000,
+    **fit_kwargs,
+) -> tuple[CalibratedParams, ValidationReport]:
+    """Time-split protocol: fit on the head, validate on the tail.
+
+    The last ``holdout_fraction`` of the measurements never enters the
+    fit; the report's error metrics are honest held-out numbers.  The
+    split walks trace batches from the end (batches are independent runs
+    with their own clocks — see `measure.concat_traces`), cutting at most
+    one batch in two, so held-out windows keep clean interarrival spans.
+    """
+    batches = measure.as_trace_list(traces)
+    total = sum(tr.n_queries for tr in batches)
+    n_hold = max(2, int(total * holdout_fraction))
+    train: list[TraceRecord] = []
+    held: list[TraceRecord] = []
+    remaining = n_hold
+    for tr in reversed(batches):
+        if remaining <= 0:
+            train.insert(0, tr)
+        elif tr.n_queries <= remaining:
+            held.insert(0, tr)
+            remaining -= tr.n_queries
+        else:
+            cut = tr.n_queries - remaining
+            train.insert(0, jax.tree_util.tree_map(
+                lambda x: x[:cut], tr))
+            held.insert(0, jax.tree_util.tree_map(
+                lambda x: x[cut:], tr))
+            remaining = 0
+    if not train:
+        raise ValueError("holdout_fraction leaves no training data")
+    cal = fit.calibrate(
+        train, n_windows=max(4, n_windows - int(n_windows
+                                                * holdout_fraction)),
+        **fit_kwargs)
+    report = validate(
+        held, cal, n_windows=max(2, int(n_windows * holdout_fraction)),
+        holdout_fraction=1.0, key=key, simulator_queries=simulator_queries)
+    return cal, report

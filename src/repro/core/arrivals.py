@@ -14,11 +14,13 @@ assumption made operational.  `repro.workloadgen.loadgen` builds the same
 profiles for open-loop load generation, so the generator and the simulator
 can never drift apart on what "the daily peak" means.
 
-Three constructors cover the ISSUE's regimes:
+Four constructors cover the load regimes:
 
   * :meth:`ArrivalProcess.stationary` — constant-rate Poisson (one bin);
   * :meth:`ArrivalProcess.piecewise` — explicit rate-per-bin profiles
     (diurnal/weekly curves, folded traces, step loads);
+  * :meth:`ArrivalProcess.flash_crowd` — baseline rate + burst windows
+    (sudden-crowd stress loads, e.g. for calibration stability tests);
   * :meth:`ArrivalProcess.from_trace` — replay measured timestamps.
 
 Leading dimensions of ``rates`` are scenario dimensions: a ``(S, B)``
@@ -74,6 +76,45 @@ class ArrivalProcess:
         """Rate ``rates[..., i]`` on [i*bin, (i+1)*bin), tiling periodically."""
         return cls(rates=jnp.asarray(rates),
                    bin_seconds=jnp.asarray(bin_seconds))
+
+    @classmethod
+    def flash_crowd(
+        cls,
+        base_rate: ArrayLike,
+        *,
+        burst_starts: Union[Sequence[float], float],
+        burst_seconds: float,
+        burst_multiplier: float = 5.0,
+        period_seconds: float = 3600.0,
+        bin_seconds: float = 60.0,
+    ) -> "ArrivalProcess":
+        """Baseline load with flash-crowd burst windows (ROADMAP load shape).
+
+        Rates are ``base_rate`` everywhere except on
+        ``[start, start + burst_seconds)`` for each start in
+        ``burst_starts`` (seconds into the period), where they are
+        ``base_rate * burst_multiplier``.  The profile tiles with
+        ``period_seconds``, so a single burst per period models a
+        recurring spike and several starts model clustered crowds.
+        ``base_rate`` may carry leading scenario dims; the burst windows
+        are shared across scenarios (a sweep scales one crowd shape).
+        """
+        n_bins = max(1, int(round(period_seconds / bin_seconds)))
+        edges = np.arange(n_bins) * float(bin_seconds)
+        starts = np.atleast_1d(np.asarray(burst_starts, dtype=np.float64))
+        in_burst = np.zeros(n_bins, dtype=bool)
+        for s in starts % float(period_seconds):
+            # a bin is burst-rated when the (period-wrapped, half-open)
+            # burst window overlaps it AT ALL — either the bin's start
+            # lies inside the window, or the burst starts mid-bin.  The
+            # whole overlapped bin is elevated (conservative), so bursts
+            # shorter than a bin are never silently dropped.
+            rel = (edges - s) % float(period_seconds)
+            in_burst |= (rel < float(burst_seconds)) | (
+                rel > float(period_seconds) - float(bin_seconds))
+        mult = jnp.where(jnp.asarray(in_burst), burst_multiplier, 1.0)
+        rates = jnp.asarray(base_rate)[..., None] * mult
+        return cls(rates=rates, bin_seconds=jnp.asarray(float(bin_seconds)))
 
     @classmethod
     def from_trace(cls, timestamps: ArrayLike) -> "ArrivalProcess":

@@ -83,6 +83,10 @@ __all__ = [
 
 DEFAULT_CHUNK = 4096
 DEFAULT_HIST_BINS = 256
+# salt for the reservoir tap's RNG stream: folded on top of the per-chunk
+# key AFTER chunk_random_draws' fold, so enabling the tap never perturbs
+# the canonical gap/broker/service draws
+_TAP_SALT = 0x7EE5
 # log-histogram span, in decades around the per-scenario analytic scale
 _HIST_DECADES_BELOW = 3.0
 _HIST_DECADES_TOTAL = 6.0
@@ -137,6 +141,13 @@ class SimResult:
     ``hist[..., k]`` counts responses in
     ``[exp(log_lo + k*step), exp(log_lo + (k+1)*step))``; under/overflow
     is clamped into the edge bins.
+
+    ``tap_response`` is the ROADMAP's bounded tap: a uniform reservoir
+    sample (without replacement) of per-query post-warmup response times,
+    carried through the scan at fixed size instead of re-materializing the
+    sample path.  Slots not yet filled hold NaN; ``tap_size=0`` (the
+    default) disables the tap at zero cost.  `repro.calibrate.measure`
+    consumes it as the trace source for simulated systems.
     """
 
     count: Array           # post-warmup samples per scenario
@@ -148,6 +159,7 @@ class SimResult:
     hist: Array            # (..., n_bins) response-time histogram counts
     hist_log_lo: Array     # (...,) ln(lowest bin edge, seconds)
     hist_log_step: Array   # (...,) ln(bin edge ratio)
+    tap_response: Array    # (..., tap_size) reservoir sample of responses
 
     @property
     def _n(self) -> Array:
@@ -165,6 +177,10 @@ class SimResult:
     @property
     def std_response(self) -> Array:
         return jnp.sqrt(self.var_response)
+
+    @property
+    def tap_size(self) -> int:
+        return self.tap_response.shape[-1]
 
     @property
     def mean_broker_residence(self) -> Array:
@@ -323,7 +339,7 @@ def _clamp_chunk_for_profile(proc: ArrivalProcess, chunk: int) -> int:
 
 @functools.partial(
     jax.jit, static_argnames=("n_queries", "p", "mode", "impl", "chunk",
-                              "warmup_fraction", "hist_bins"))
+                              "warmup_fraction", "hist_bins", "tap_size"))
 def _simulate_stream(
     key: Array,
     proc: ArrivalProcess,
@@ -335,6 +351,7 @@ def _simulate_stream(
     chunk: int,
     warmup_fraction: float,
     hist_bins: int,
+    tap_size: int = 0,
 ) -> SimResult:
     """The one chunked engine behind every fork-join entry point."""
     n_scen = proc.rates.shape[0]
@@ -380,7 +397,7 @@ def _simulate_stream(
     # horizon, which is what lets millions of queries stream through.
     def body(carry, x):
         (t_origin, c_brk, c_srv, count, s_resp, ss_resp,
-         s_br, s_cl, s_sv, hist) = carry
+         s_br, s_cl, s_sv, hist, tap_pri, tap_val) = carry
         if has_trace:
             c_idx, trace_gaps_c = x
         else:
@@ -428,24 +445,44 @@ def _simulate_stream(
         hist = hist.at[rows, bins].add(
             jnp.broadcast_to(mf, (n_scen, chunk)))
 
+        if tap_size > 0:
+            # Reservoir via random priorities (A-Res with equal weights):
+            # every valid query gets an iid U(0,1) priority and the tap
+            # keeps the tap_size largest seen so far — a uniform sample
+            # without replacement, one top_k per chunk, O(tap) state.
+            k_tap = jax.random.fold_in(
+                jax.random.fold_in(key, c_idx), _TAP_SALT)
+            pri = jax.random.uniform(k_tap, (n_scen, chunk), dtype)
+            pri = jnp.where(mf > 0, pri, -jnp.inf)
+            cat_pri = jnp.concatenate([tap_pri, pri], axis=-1)
+            cat_val = jnp.concatenate(
+                [tap_val, jnp.broadcast_to(response, (n_scen, chunk))],
+                axis=-1)
+            tap_pri, idx = jax.lax.top_k(cat_pri, tap_size)
+            tap_val = jnp.take_along_axis(cat_val, idx, axis=-1)
+
         shift = arrivals[:, -1]
         new_carry = ((t_origin + shift) % period,
                      broker_done[:, -1] - shift,
                      completions[:, :, -1] - shift[:, None],
-                     count, s_resp, ss_resp, s_br, s_cl, s_sv, hist)
+                     count, s_resp, ss_resp, s_br, s_cl, s_sv, hist,
+                     tap_pri, tap_val)
         return new_carry, None
 
     zeros = jnp.zeros((n_scen,), dtype)
     init = (zeros, zeros, jnp.zeros((n_scen, p), dtype), zeros, zeros,
             zeros, zeros, zeros, zeros,
-            jnp.zeros((n_scen, hist_bins), dtype))
+            jnp.zeros((n_scen, hist_bins), dtype),
+            jnp.full((n_scen, tap_size), -jnp.inf, dtype),
+            jnp.full((n_scen, tap_size), jnp.nan, dtype))
     (t_last, c_brk, c_srv, count, s_resp, ss_resp, s_br, s_cl, s_sv,
-     hist), _ = jax.lax.scan(body, init, xs)
+     hist, tap_pri, tap_val), _ = jax.lax.scan(body, init, xs)
 
     return SimResult(
         count=count, sum_response=s_resp, sumsq_response=ss_resp,
         sum_broker=s_br, sum_cluster=s_cl, sum_server=s_sv,
-        hist=hist, hist_log_lo=hist_log_lo, hist_log_step=hist_log_step)
+        hist=hist, hist_log_lo=hist_log_lo, hist_log_step=hist_log_step,
+        tap_response=tap_val)
 
 
 def simulate_fork_join(
@@ -460,6 +497,7 @@ def simulate_fork_join(
     warmup_fraction: float = 0.1,
     chunk_size: int = DEFAULT_CHUNK,
     hist_bins: int = DEFAULT_HIST_BINS,
+    tap_size: int = 0,
 ) -> SimResult:
     """Simulate the full broker + p-server fork-join network (Fig 8).
 
@@ -469,7 +507,9 @@ def simulate_fork_join(
     join waits for the slowest server.  ``lam`` is either a constant rate
     in qps or any :class:`ArrivalProcess` (diurnal profile, trace replay).
     Streams through ``chunk_size`` query chunks; warmup queries are
-    discarded from the returned streaming statistics.
+    discarded from the returned streaming statistics.  ``tap_size > 0``
+    additionally carries a bounded reservoir sample of per-query response
+    times (see :class:`SimResult`).
     """
     p = int(params.p) if p is None else p  # static before tracing
     proc = _as_batch_process(lam)
@@ -477,7 +517,8 @@ def simulate_fork_join(
     chunk = _clamp_chunk_for_profile(
         proc, max(1, min(chunk_size, n_queries)))
     res = _simulate_stream(key, proc, _vec_params(params), n_queries, p,
-                           mode, impl, chunk, warmup_fraction, hist_bins)
+                           mode, impl, chunk, warmup_fraction, hist_bins,
+                           tap_size)
     return jax.tree_util.tree_map(lambda x: x[0], res)
 
 
@@ -493,6 +534,7 @@ def simulate_fork_join_batch(
     warmup_fraction: float = 0.1,
     chunk_size: int = DEFAULT_CHUNK,
     hist_bins: int = DEFAULT_HIST_BINS,
+    tap_size: int = 0,
 ) -> SimResult:
     """S fork-join scenarios in one XLA program; all stats are (S,).
 
@@ -512,7 +554,7 @@ def simulate_fork_join_batch(
     chunk = _clamp_chunk_for_profile(
         proc, max(1, min(chunk_size, n_queries)))
     return _simulate_stream(key, proc, params, n_queries, p, mode, impl,
-                            chunk, warmup_fraction, hist_bins)
+                            chunk, warmup_fraction, hist_bins, tap_size)
 
 
 @functools.partial(jax.jit, static_argnames=("c",))

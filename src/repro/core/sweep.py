@@ -219,6 +219,17 @@ class SimSweepResult:
         """q-quantile response surface, shaped `grid.shape`."""
         return self.stats.quantile(q)
 
+    @property
+    def sample_response(self) -> Array:
+        """(L,P,C,D,H, tap_size) reservoir sample of per-query responses.
+
+        NaN-padded when a scenario saw fewer post-warmup queries than the
+        tap size; empty trailing axis unless the sweep ran with
+        ``tap_size > 0``.  This is calibration's trace source for swept
+        simulated systems (`repro.calibrate.measure.traces_from_sweep`).
+        """
+        return self.stats.tap_response
+
 
 def sweep_simulated(
     grid: SweepGrid,
@@ -230,6 +241,7 @@ def sweep_simulated(
     warmup_fraction: float = 0.1,
     chunk_size: int = simulator.DEFAULT_CHUNK,
     hist_bins: int = simulator.DEFAULT_HIST_BINS,
+    tap_size: int = 0,
     profile: Optional[Array] = None,
     profile_bin_seconds: float = 3600.0,
 ) -> SimSweepResult:
@@ -246,6 +258,11 @@ def sweep_simulated(
     period ``n_bins * profile_bin_seconds``.  It is normalized to mean 1,
     so the grid's lam axis stays the *time-averaged* rate and the peak
     rate is ``lam * max(profile)/mean(profile)``.
+
+    ``tap_size > 0`` carries the simulator's bounded reservoir tap through
+    every scenario, surfacing a uniform sample of raw per-query response
+    times on :attr:`SimSweepResult.sample_response` (calibration's trace
+    source) without re-materializing sample paths.
     """
     shape = grid.shape
     lam_full, params_full = grid.broadcast_full()
@@ -273,7 +290,7 @@ def sweep_simulated(
         res = simulator.simulate_fork_join_batch(
             k, arrival, params_i, n_queries, p=p, mode=mode, impl=impl,
             warmup_fraction=warmup_fraction, chunk_size=chunk_size,
-            hist_bins=hist_bins)
+            hist_bins=hist_bins, tap_size=tap_size)
         slab_shape = (shape[0], shape[2], shape[3], shape[4])
         slabs.append(jax.tree_util.tree_map(
             lambda x: x.reshape(slab_shape + x.shape[1:]), res))

@@ -10,11 +10,12 @@ comparison, O(p*k log k) work, all in memory.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["merge_topk"]
+__all__ = ["merge_topk", "timed_merge_topk"]
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -31,3 +32,22 @@ def merge_topk(
     top_s, idx = jax.lax.top_k(flat_s, k)
     top_d = jnp.take_along_axis(flat_d, idx, axis=1)
     return top_s, top_d
+
+
+def timed_merge_topk(
+    partial_scores: jax.Array,
+    partial_docs: jax.Array,
+    *,
+    k: int,
+) -> tuple[tuple[jax.Array, jax.Array], float]:
+    """Instrumented merge: ((scores, docs), wall-clock seconds).
+
+    The calibration harness's broker probe — the measured time is the
+    paper's S_broker contribution for this batch (the broker "only
+    compares document ranks"; the merge IS that comparison).  Callers
+    should run one untimed batch first so compilation is excluded.
+    """
+    t0 = time.perf_counter()
+    out = merge_topk(partial_scores, partial_docs, k=k)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0

@@ -20,7 +20,7 @@ from repro.engine import cache as cache_lib
 from repro.engine.index import InvertedIndex
 from repro.engine.scoring import score_queries
 
-__all__ = ["IndexServer", "measure_service_params"]
+__all__ = ["IndexServer", "measure_service_params", "measure_busy_trace"]
 
 
 class IndexServer:
@@ -89,3 +89,48 @@ def measure_service_params(
         p=p, s_broker=s_broker,
         s_hit=s_cpu, s_miss=s_cpu, s_disk=s_disk,
         hit=stats.hit)
+
+
+def measure_busy_trace(
+    server: IndexServer,
+    query_terms: np.ndarray,          # (n, L) int, padded -1
+    cache_bytes: int,
+    *,
+    batch: int = 64,
+    warmup_batches: int = 2,
+    disk_bw: float = 50e6,
+    disk_seek: float = 8e-3,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Per-query instrumentation at ONE shard, for trace calibration.
+
+    Where :func:`measure_service_params` reduces the run to Eq-1 scalars,
+    this keeps the whole record: per-query busy time (timed compiled
+    scorer, per batch, plus the cache replay's per-query disk time), the
+    full-hit flag, the disk split, and the partial top-k results so the
+    broker merge can be timed downstream.  ``n`` must be a multiple of
+    ``batch``.  Returns (busy, hit, disk, scores, docs) with shapes
+    ((n,), (n,), (n,), (n, k_local), (n, k_local)).
+    """
+    n = query_terms.shape[0]
+    if n % batch:
+        raise ValueError(f"n={n} must be a multiple of batch={batch}")
+    _, hits, disk_time = cache_lib.measure_cache_behavior(
+        query_terms, server.index.list_bytes(), cache_bytes,
+        disk_bw=disk_bw, disk_seek=disk_seek, warmup=0)
+
+    qt = jnp.asarray(query_terms.reshape(-1, batch, query_terms.shape[1]))
+    for _ in range(max(warmup_batches, 1)):
+        server.timed_process(qt[0])   # compile + warm before any timing
+    cpu = np.zeros(n, dtype=np.float64)
+    scores = np.zeros((n, server.k_local), dtype=np.float32)
+    docs = np.zeros((n, server.k_local), dtype=np.int32)
+    for i in range(qt.shape[0]):
+        t0 = time.perf_counter()
+        s, d = server.process(qt[i])
+        jax.block_until_ready((s, d))
+        cpu[i * batch:(i + 1) * batch] = (time.perf_counter() - t0) / batch
+        scores[i * batch:(i + 1) * batch] = np.asarray(s)
+        docs[i * batch:(i + 1) * batch] = np.asarray(d)
+
+    disk = np.where(hits, 0.0, disk_time)
+    return cpu + disk, hits.astype(np.float64), disk, scores, docs
