@@ -1,0 +1,34 @@
+"""Shared benchmark plumbing: output routing and the CI quick mode.
+
+Two environment knobs keep one benchmark codebase serving both roles:
+
+* ``BENCH_OUTPUT_DIR`` — where ``BENCH_*.json`` records land (default:
+  the working directory).  CI's bench-regression job points this at a
+  scratch dir so the freshly measured records can be diffed against the
+  *committed* baselines without overwriting them.
+* ``BENCH_QUICK=1`` — shrink the simulated horizons (n_queries only;
+  scenario counts, server counts and chunk sizes stay fixed so
+  throughput and the peak-memory proxies remain comparable to the
+  committed full-size baselines — streaming throughput is per-chunk
+  work, amortized well before the quick horizon).
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+
+
+def bench_output_path(filename: str) -> pathlib.Path:
+    out_dir = pathlib.Path(os.environ.get("BENCH_OUTPUT_DIR", "."))
+    out_dir.mkdir(parents=True, exist_ok=True)
+    return out_dir / filename
+
+
+def quick() -> bool:
+    return os.environ.get("BENCH_QUICK", "") not in ("", "0")
+
+
+def scale_queries(full: int, quick_value: int) -> int:
+    """Pick the simulated horizon for the current mode."""
+    return quick_value if quick() else full

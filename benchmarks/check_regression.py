@@ -1,0 +1,103 @@
+"""Bench-regression gate: diff fresh BENCH_*.json records against the
+committed baselines.
+
+Usage:
+    BENCH_OUTPUT_DIR=/tmp/bench BENCH_QUICK=1 \
+        python -m benchmarks.run --only streaming,calibrate,replicated
+    python benchmarks/check_regression.py \
+        --baseline . --fresh /tmp/bench [--max-throughput-drop 0.30]
+
+Policy (the CI contract):
+  * throughput metrics may not drop more than ``--max-throughput-drop``
+    (default 30%, absorbing runner-to-runner noise);
+  * the analytic peak-memory proxies (``peak_mem_streaming_bytes`` —
+    S x r x p x chunk floats) may not grow AT ALL: they are
+    deterministic functions of the engine's carried state, so any growth
+    is a real structural regression;
+  * measured compiled footprints (``peak_mem_measured_bytes``) get a 10%
+    allowance for XLA-version layout noise.
+
+Exits 1 on any violation; always prints the comparison table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# metric name -> (kind, allowance); kind "higher" = bigger is better
+GATES = {
+    "queries_per_s": ("higher", None),
+    "queries_fitted_per_s": ("higher", None),
+    "peak_mem_streaming_bytes": ("exact-max", 0.0),
+    "peak_mem_measured_bytes": ("max", 0.10),
+}
+
+BASELINE_FILES = ("BENCH_streaming.json", "BENCH_calibrate.json",
+                  "BENCH_replicated.json")
+
+
+def compare(baseline: dict, fresh: dict, name: str,
+            max_drop: float) -> list[str]:
+    failures = []
+    for metric, (kind, allowance) in GATES.items():
+        if metric not in baseline or metric not in fresh:
+            continue
+        old, new = float(baseline[metric]), float(fresh[metric])
+        if kind == "higher":
+            rel = (new - old) / old if old else 0.0
+            verdict = rel >= -max_drop
+            note = f"{rel:+.1%} (floor {-max_drop:.0%})"
+        else:
+            allowed = old * (1.0 + (allowance or 0.0))
+            verdict = new <= allowed
+            note = f"{new - old:+,.0f} B (ceiling +{allowance or 0.0:.0%})"
+        status = "ok " if verdict else "FAIL"
+        print(f"  {status} {name}:{metric:28s} {old:>16,.1f} -> "
+              f"{new:>16,.1f}  {note}")
+        if not verdict:
+            failures.append(f"{name}:{metric}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=".",
+                    help="dir with committed BENCH_*.json baselines")
+    ap.add_argument("--fresh", required=True,
+                    help="dir with freshly measured BENCH_*.json")
+    ap.add_argument("--max-throughput-drop", type=float, default=0.30)
+    args = ap.parse_args()
+
+    base_dir = pathlib.Path(args.baseline)
+    fresh_dir = pathlib.Path(args.fresh)
+    failures: list[str] = []
+    seen = 0
+    for fname in BASELINE_FILES:
+        b, f = base_dir / fname, fresh_dir / fname
+        if not b.exists():
+            print(f"  -- {fname}: no committed baseline yet, skipping")
+            continue
+        if not f.exists():
+            print(f"  FAIL {fname}: baseline exists but the bench "
+                  "produced no fresh record")
+            failures.append(f"{fname}:missing")
+            continue
+        seen += 1
+        failures += compare(json.loads(b.read_text()),
+                            json.loads(f.read_text()),
+                            fname.removeprefix("BENCH_").removesuffix(".json"),
+                            args.max_throughput_drop)
+    if seen == 0:
+        print("no benchmark records compared — refusing to pass vacuously")
+        sys.exit(1)
+    if failures:
+        print(f"\nREGRESSION: {', '.join(failures)}")
+        sys.exit(1)
+    print(f"\nall gates green across {seen} benchmark record(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Replicated-cluster sweep benchmark: throughput + peak-memory law.
+
+Registers the perf trajectory of the two-level (dispatcher -> r replicas
+of broker + p servers) streaming engine and ASSERTS the ISSUE's memory
+acceptance criterion: peak state is S x r x p x chunk floats —
+
+* measured compiled temp memory grows (sub)linearly in r, with a per-r
+  slope of a small constant number of S x p x chunk f32 buffers;
+* measured temp memory is INDEPENDENT of n_queries (streaming: a 4x
+  longer horizon must not grow the program's footprint).
+
+Both are checked against XLA's own ``memory_analysis()`` of the lowered
+streaming program, not a hand-waved proxy.  Results go to
+``BENCH_replicated.json`` (see `benchmarks._util.bench_output_path`) so
+CI's bench-regression job can diff successive PRs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import _util
+
+_F32 = 4
+# slope allowance: the scan keeps a handful of S x p x chunk buffers
+# live per replica (fork broadcast, services, completions, scan
+# internals) — measured ~5.5 on jax 0.8 CPU; assert < 10 so a
+# re-materializing regression (O(n_queries) growth) cannot hide
+_MAX_BUFFERS_PER_R = 10.0
+
+
+def _compiled_temp_bytes(lam, params, n_queries, p, r, chunk):
+    from repro.core import simulator
+    proc = simulator._as_batch_process(lam)
+    compiled = simulator._simulate_stream.lower(
+        jax.random.PRNGKey(0), proc, params, jnp.asarray(0.0),
+        jnp.asarray(0.0), n_queries=n_queries, p=p, mode="exponential",
+        impl="xla", chunk=chunk, warmup_fraction=0.1, hist_bins=256,
+        tap_size=0, r=r, routing="round_robin",
+        has_cache=False).compile()
+    return int(compiled.memory_analysis().temp_size_in_bytes)
+
+
+def bench_replicated_sweep(rows):
+    from repro.core import capacity, sweep
+    from repro.core.queueing import ServerParams
+
+    grid = sweep.SweepGrid.build(
+        lam=jnp.asarray([30.0, 60.0, 90.0]),
+        p=jnp.asarray([8.0]),
+        base=capacity.TABLE5_PARAMS,
+        hit=jnp.asarray([0.17]),
+        broker_from_p=False,
+        r=jnp.asarray([4.0]),
+        result_cache=(0.2, 2e-3),
+    )
+    n_scen, p, r, chunk = 3, 8, 4, 4096
+    n_q = _util.scale_queries(400_000, 100_000)
+
+    def run(routing):
+        res = sweep.sweep_simulated(grid, jax.random.PRNGKey(0),
+                                    n_queries=n_q, chunk_size=chunk,
+                                    routing=routing)
+        jax.block_until_ready(res.mean)
+        return res
+
+    run("round_robin")                    # compile + warm
+    t0 = time.perf_counter()
+    res = run("round_robin")
+    dt = time.perf_counter() - t0
+    run("jsq")
+    t0 = time.perf_counter()
+    run("jsq")
+    dt_jsq = time.perf_counter() - t0
+
+    queries_per_s = n_scen * n_q / dt
+    events_per_s = n_scen * r * (p + 1) * n_q / dt
+    peak_state = n_scen * r * p * chunk * _F32
+
+    # --- the S x r x p x chunk memory law, measured off the compiled
+    # streaming program itself -------------------------------------------
+    vec = ServerParams(**{
+        f.name: jnp.asarray(
+            [getattr(capacity.TABLE5_PARAMS, f.name)] * n_scen,
+            jnp.float32)
+        for f in dataclasses.fields(ServerParams)})
+    lam = jnp.asarray([30.0, 60.0, 90.0])
+    probe_q = 50_000
+    temp_r1 = _compiled_temp_bytes(lam, vec, probe_q, p, 1, chunk)
+    temp_r4 = _compiled_temp_bytes(lam, vec, probe_q, p, r, chunk)
+    temp_r4_long = _compiled_temp_bytes(lam, vec, 4 * probe_q, p, r, chunk)
+
+    unit = n_scen * p * chunk * _F32          # one S x p x chunk buffer
+    slope_per_r = (temp_r4 - temp_r1) / (r - 1)
+    assert unit <= slope_per_r <= _MAX_BUFFERS_PER_R * unit, (
+        f"peak temp grows {slope_per_r / unit:.1f} S*p*chunk buffers per "
+        f"replica — outside [1, {_MAX_BUFFERS_PER_R}]; the S x r x p x "
+        "chunk streaming law is broken")
+    assert abs(temp_r4_long - temp_r4) <= 0.02 * temp_r4, (
+        f"peak temp moved with n_queries ({temp_r4} -> {temp_r4_long}); "
+        "the engine is no longer streaming")
+
+    record = {
+        "bench": "replicated_sweep",
+        "n_scenarios": n_scen,
+        "p": p,
+        "r": r,
+        "n_queries": n_q,
+        "chunk_size": chunk,
+        "routing": "round_robin",
+        "wall_seconds": dt,
+        "wall_seconds_jsq": dt_jsq,
+        "queries_per_s": queries_per_s,
+        "events_per_s": events_per_s,
+        "peak_mem_streaming_bytes": peak_state,
+        "peak_mem_measured_bytes": temp_r4,
+        "peak_mem_measured_r1_bytes": temp_r1,
+        "peak_mem_slope_buffers_per_r": slope_per_r / unit,
+        "mean_response_check": [float(x) for x in
+                                jnp.ravel(res.mean)[:3]],
+    }
+    out = _util.bench_output_path("BENCH_replicated.json")
+    out.write_text(json.dumps(record, indent=2) + "\n")
+
+    rows.append(("replicated_sweep", dt * 1e6,
+                 f"{n_scen} scen x {r} replicas x {n_q} queries; "
+                 f"{queries_per_s / 1e6:.2f}M queries/s (jsq "
+                 f"{n_scen * n_q / dt_jsq / 1e6:.2f}M); peak temp "
+                 f"{temp_r4 / 2**20:.1f} MiB, "
+                 f"{slope_per_r / unit:.1f} SxPxChunk buffers/replica, "
+                 f"n-invariant; -> {out}"))

@@ -1,7 +1,14 @@
 """Benchmark harness: one function per paper table/figure + kernel/DES
 micro-benches.  Prints ``name,us_per_call,derived`` CSV.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only PREFIX]
+Usage: PYTHONPATH=src python -m benchmarks.run [--only SUBSTR[,SUBSTR...]]
+
+``--only`` takes a comma-separated list of substrings; a benchmark runs
+if ANY of them occurs in its function name (so CI's regression job can
+ask for ``--only streaming,calibrate,replicated`` in one pass).
+Environment knobs for CI live in `benchmarks._util`: ``BENCH_QUICK=1``
+shrinks horizons, ``BENCH_OUTPUT_DIR`` redirects the BENCH_*.json
+records.
 """
 
 from __future__ import annotations
@@ -11,7 +18,8 @@ import sys
 import traceback
 
 from benchmarks import (calibrate_bench, kernels_bench, paper_tables,
-                        partitioning_bench, streaming_bench, sweep_bench)
+                        partitioning_bench, replicated_bench,
+                        streaming_bench, sweep_bench)
 
 BENCHES = [
     paper_tables.bench_table2_query_lengths,
@@ -35,6 +43,7 @@ BENCHES = [
     sweep_bench.bench_sweep_grid,
     sweep_bench.bench_sweep_simulated,
     streaming_bench.bench_streaming_sweep,
+    replicated_bench.bench_replicated_sweep,
     calibrate_bench.bench_calibrate,
     partitioning_bench.bench_partitioning,
 ]
@@ -42,13 +51,16 @@ BENCHES = [
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated name substrings to run")
     args = ap.parse_args()
+    wanted = ([s.strip() for s in args.only.split(",") if s.strip()]
+              if args.only else None)
 
     rows = []
     failures = 0
     for bench in BENCHES:
-        if args.only and args.only not in bench.__name__:
+        if wanted and not any(w in bench.__name__ for w in wanted):
             continue
         try:
             bench(rows)

@@ -14,13 +14,12 @@ engine's comfortable ceiling — the ISSUE's acceptance scenario.
 from __future__ import annotations
 
 import json
-import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 
-BENCH_JSON = pathlib.Path("BENCH_streaming.json")
+from benchmarks import _util
 
 # ~6 materialized S x p x n arrays (gaps/arrivals, broker, services,
 # fork times, completions, response) in the old monolithic engine
@@ -41,7 +40,9 @@ def bench_streaming_sweep(rows):
         broker_from_p=False,
     )
     n_scen, p, chunk = grid.n_scenarios, 8, 4096
-    n_q = 600_000   # ~10x past the old path's comfortable grid ceiling
+    # ~10x past the old path's comfortable grid ceiling (CI quick mode
+    # shortens the horizon only; per-chunk throughput stays comparable)
+    n_q = _util.scale_queries(600_000, 150_000)
 
     def run():
         res = sweep.sweep_simulated(grid, jax.random.PRNGKey(0),
@@ -74,7 +75,8 @@ def bench_streaming_sweep(rows):
         "mean_response_check": [float(x) for x in
                                 jnp.ravel(res.mean)[:3]],
     }
-    BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+    out = _util.bench_output_path("BENCH_streaming.json")
+    out.write_text(json.dumps(record, indent=2) + "\n")
 
     rows.append(("streaming_sweep", dt * 1e6,
                  f"{n_scen} scen x {n_q} queries streamed; "
@@ -82,4 +84,4 @@ def bench_streaming_sweep(rows):
                  f"{peak_stream / 2**20:.1f} MiB vs "
                  f"{peak_materialized / 2**30:.1f} GiB materialized "
                  f"({peak_materialized / peak_stream:.0f}x); "
-                 f"-> {BENCH_JSON}"))
+                 f"-> {out}"))

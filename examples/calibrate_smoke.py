@@ -1,0 +1,49 @@
+"""Calibration smoke check, shared by CI and the test suite.
+
+This used to live as a heredoc inside the ``calibrate-smoke`` CI job,
+which made it untestable and easy to drift from the library.  It is now
+an importable function: CI runs the module, ``tests/test_calibrate.py``
+imports and calls it, and both exercise exactly the same code.
+
+The check: simulate two tiny measurement traces from a hidden
+ground-truth cluster, run the measure -> fit -> validate pipeline with
+a minimal iteration budget, and assert the fitted imbalance blend is
+sane and the calibrated model tracks its own simulator.
+
+Run:  PYTHONPATH=src python examples/calibrate_smoke.py
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+def run_smoke(*, n_queries: int = 3_000, n_iters: int = 2,
+              simulator_queries: int = 5_000, verbose: bool = True):
+    """Tiny end-to-end calibration; returns the (cal, report) pair.
+
+    Raises AssertionError when the pipeline's accuracy contract breaks.
+    Sizes are smoke-sized on purpose (~seconds on CPU): the thorough
+    accuracy acceptance lives in tests/test_calibrate.py.
+    """
+    from repro.calibrate import calibrate_and_validate, simulate_trace
+    from repro.core import capacity
+
+    true = dataclasses.replace(capacity.TABLE5_PARAMS, p=2)
+    traces = [simulate_trace(jax.random.PRNGKey(i), lam, n_queries, true)
+              for i, lam in enumerate([10.0, 18.0])]
+    cal, report = calibrate_and_validate(
+        traces, n_windows=6, holdout_fraction=0.3, n_iters=n_iters,
+        simulator_queries=simulator_queries)
+    if verbose:
+        print(report.summary())
+    assert 0.0 < float(cal.alpha) < 1.0, float(cal.alpha)
+    assert report.mean_rel_err_vs_sim < 0.5, report.mean_rel_err_vs_sim
+    return cal, report
+
+
+if __name__ == "__main__":
+    run_smoke()
+    print("calibrate smoke: OK")

@@ -66,6 +66,6 @@ print("\np95 surface along cpu speedup (lam = {:.0f} qps, p=4, diurnal):"
       .format(float(lam[1])))
 p95 = res95.quantile(0.95)
 for j in range(grid.cpu.shape[0]):
-    v = float(p95[1, 0, j, 0, 0]) * MS
+    v = float(p95[1, 0, j, 0, 0, 0]) * MS   # trailing axis: r = 1 replica
     print(f"  cpu x{float(grid.cpu[j]):g}: p95 = {v:7.1f} ms "
           + ("(meets SLO)" if v <= SLO * MS else ""))

@@ -47,6 +47,13 @@ class ValidationReport:
     r_calibrated: Array   # calibrated analytical prediction (s)
     r_simulated: Array    # calibrated-simulator mean response (s)
     calibrated: CalibratedParams
+    # Replicated cross-check (``validate(..., replicas=r > 1)``): the
+    # calibrated cluster simulated as r dispatcher-routed copies at
+    # r x the window rate — per-replica load is unchanged, so deviations
+    # from ``r_simulated`` isolate routing/imbalance effects that the
+    # analytical even-split assumption cannot see.  None when r == 1.
+    r_sim_replicated: Optional[Array] = None
+    replicas: int = 1
 
     @property
     def rel_err_observed(self) -> Array:
@@ -57,6 +64,14 @@ class ValidationReport:
     def rel_err_simulated(self) -> Array:
         """|calibrated - simulated| / simulated, per window."""
         return jnp.abs(self.r_calibrated - self.r_simulated) / self.r_simulated
+
+    @property
+    def rel_err_replicated(self) -> Optional[Array]:
+        """|calibrated - replicated sim| / replicated sim, per window."""
+        if self.r_sim_replicated is None:
+            return None
+        return (jnp.abs(self.r_calibrated - self.r_sim_replicated)
+                / self.r_sim_replicated)
 
     @property
     def mean_rel_err(self) -> float:
@@ -79,27 +94,41 @@ class ValidationReport:
         return np.asarray(self.lam), np.asarray(self.rel_err_observed)
 
     def summary(self) -> str:
+        replicated = self.r_sim_replicated is not None
+        head = (f"{'lam (qps)':>10s} {'observed':>10s} {'calibrated':>11s} "
+                f"{'simulated':>10s} {'err(obs)':>9s} {'err(sim)':>9s}")
+        if replicated:
+            head += f" {f'sim(x{self.replicas})':>10s} {'err(rep)':>9s}"
         lines = [
             "== calibration validation "
             f"({self.lam.shape[0]} held-out windows) ==",
-            f"{'lam (qps)':>10s} {'observed':>10s} {'calibrated':>11s} "
-            f"{'simulated':>10s} {'err(obs)':>9s} {'err(sim)':>9s}",
+            head,
         ]
         eo = np.asarray(self.rel_err_observed)
         es = np.asarray(self.rel_err_simulated)
+        er = (np.asarray(self.rel_err_replicated) if replicated else None)
         for i in range(self.lam.shape[0]):
-            lines.append(
+            row = (
                 f"{float(self.lam[i]):10.2f} "
                 f"{float(self.r_observed[i]) * 1e3:8.1f}ms "
                 f"{float(self.r_calibrated[i]) * 1e3:9.1f}ms "
                 f"{float(self.r_simulated[i]) * 1e3:8.1f}ms "
                 f"{eo[i] * 100:8.1f}% {es[i] * 100:8.1f}%")
+            if replicated:
+                row += (f" {float(self.r_sim_replicated[i]) * 1e3:8.1f}ms"
+                        f" {er[i] * 100:8.1f}%")
+            lines.append(row)
         lines.append(
             f"vs observed:  mean {self.mean_rel_err * 100:.1f}%  "
             f"p95 {self.p95_rel_err * 100:.1f}%")
         lines.append(
             f"vs simulator: mean {self.mean_rel_err_vs_sim * 100:.1f}%  "
             f"max {self.max_rel_err_vs_sim * 100:.1f}%")
+        if replicated:
+            lines.append(
+                f"vs x{self.replicas}-replicated simulator: mean "
+                f"{float(jnp.mean(self.rel_err_replicated)) * 100:.1f}%  "
+                f"max {float(jnp.max(self.rel_err_replicated)) * 100:.1f}%")
         return "\n".join(lines)
 
 
@@ -119,6 +148,9 @@ def validate(
     key: Optional[Array] = None,
     simulator_queries: int = 40_000,
     impl: str = "xla",
+    replicas: int = 1,
+    routing: str = "round_robin",
+    result_cache=None,
 ) -> ValidationReport:
     """Score a calibrated model on (held-out) trace windows.
 
@@ -129,6 +161,14 @@ def validate(
     trace itself.  The simulator column re-runs the streaming engine at
     each held-out window's observed rate under the calibrated parameters
     (mode="cache", one batched dispatch for all windows).
+
+    ``replicas > 1`` adds the simulated-replicated column: the same
+    calibrated cluster deployed as ``replicas`` dispatcher-routed copies
+    (optionally with a broker-level ``result_cache``) at ``replicas`` x
+    each window's observed rate.  Per-replica load matches the measured
+    system, so this column scores the scale-out story the single-cluster
+    trace cannot measure directly: does calibrated + replicated still
+    behave like calibrated x 1 under the chosen ``routing``?
     """
     lam_w, r_obs_w, _ = measure.window_stats(traces, n_windows)
     n_hold = max(1, int(round(lam_w.shape[0] * holdout_fraction)))
@@ -143,11 +183,22 @@ def validate(
         p=int(params.p), mode="cache", impl=impl)
     r_sim = sim.mean_response
 
+    r_rep = None
+    if replicas > 1:
+        rep = simulator.simulate_fork_join_batch(
+            jax.random.fold_in(key, replicas), lam_h * replicas,
+            _vec_params(params, n_hold), simulator_queries,
+            p=int(params.p), mode="cache", impl=impl, r=replicas,
+            routing=routing, result_cache=result_cache)
+        r_rep = rep.mean_response
+
     order = jnp.argsort(lam_h)
     return ValidationReport(
         lam=lam_h[order], r_observed=r_obs_h[order],
         r_calibrated=r_cal[order], r_simulated=r_sim[order],
-        calibrated=calibrated)
+        calibrated=calibrated,
+        r_sim_replicated=None if r_rep is None else r_rep[order],
+        replicas=replicas)
 
 
 def calibrate_and_validate(

@@ -159,7 +159,14 @@ def replicas_needed(
 
 @dataclasses.dataclass(frozen=True)
 class CapacityPlan:
-    """Output of plan_capacity — the manager-facing answer (Sec 5, Q i-iii)."""
+    """Output of plan_capacity — the manager-facing answer (Sec 5, Q i-iii).
+
+    ``response_simulated_ms``/``response_simulated_p95_ms`` are filled
+    when the plan was cross-checked by the replicated streaming simulator
+    (``plan_capacity(..., simulate=True)``): the planned topology —
+    ``n_replicas`` dispatcher-routed copies of the p-server cluster,
+    result cache included — run at the full target rate.
+    """
 
     n_replicas: int
     servers_per_replica: int
@@ -168,6 +175,9 @@ class CapacityPlan:
     response_upper_ms: float
     response_lower_ms: float
     utilization: float
+    response_simulated_ms: Optional[float] = None
+    response_simulated_p95_ms: Optional[float] = None
+    routing: Optional[str] = None
 
 
 def plan_capacity(
@@ -176,7 +186,22 @@ def plan_capacity(
     slo_seconds: float,
     *,
     result_cache: Optional[tuple[float, float]] = None,
+    simulate: bool = False,
+    key=None,
+    routing: str = "round_robin",
+    n_queries: int = 60_000,
+    mode: str = "exponential",
 ) -> CapacityPlan:
+    """Section-6 sizing, optionally cross-checked by simulation.
+
+    The analytical path is unchanged: ``replicas_needed`` sizes the
+    cluster off the Eq 7/Eq 8 upper bound.  ``simulate=True``
+    additionally runs the replicated streaming simulator
+    (`repro.core.simulator.simulate_fork_join` with ``r=n_replicas`` and
+    the same ``result_cache``) at the FULL target rate, so the plan's
+    headline numbers carry a mechanistic sanity check of the even-split
+    assumption under an actual ``routing`` policy.
+    """
     n, per_replica = replicas_needed(
         params, target_rate, slo_seconds, result_cache=result_cache)
     n_i = int(n)
@@ -187,6 +212,27 @@ def plan_capacity(
             rate, params, *result_cache)
     p = int(jnp.asarray(params.p))
     util = queueing.utilization(rate, queueing.service_time_server(params))
+    sim_ms = sim_p95_ms = None
+    _SIM_REPLICA_CAP = 256
+    feasible = float(per_replica) > 1e-9
+    if simulate and feasible and n_i <= _SIM_REPLICA_CAP:
+        from repro.core import simulator  # deferred: planner-only dep
+        key = jax.random.PRNGKey(0) if key is None else key
+        sim = simulator.simulate_fork_join(
+            key, float(target_rate), n_queries, params, mode=mode,
+            r=n_i, routing=routing, result_cache=result_cache)
+        sim_ms = float(sim.mean_response) * 1e3
+        sim_p95_ms = float(sim.quantile(0.95)) * 1e3
+    elif simulate:
+        import warnings
+        reason = ("infeasible SLO" if not feasible
+                  else f"above the {_SIM_REPLICA_CAP}-replica simulation "
+                       "cap")
+        warnings.warn(
+            f"skipping the simulated cross-check: the plan needs {n_i} "
+            f"replicas ({reason}); run simulate_fork_join directly with "
+            "a smaller chunk_size if you really want this",
+            UserWarning, stacklevel=2)
     return CapacityPlan(
         n_replicas=n_i,
         servers_per_replica=p,
@@ -195,6 +241,9 @@ def plan_capacity(
         response_upper_ms=float(hi) * 1e3,
         response_lower_ms=float(lo) * 1e3,
         utilization=float(util),
+        response_simulated_ms=sim_ms,
+        response_simulated_p95_ms=sim_p95_ms,
+        routing=routing if sim_ms is not None else None,
     )
 
 

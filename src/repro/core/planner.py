@@ -225,6 +225,13 @@ def plan_over_grid(
         with ``profile_bin_seconds`` — makes every simulated scenario's
         load time-varying, so "the cheapest config whose p95 survives the
         daily peak" is ``simulate=True, quantile=0.95, profile=...``.
+
+    Replication rides the grid itself: build it with ``r=[1, 2, 4]``
+    (and optionally ``result_cache=(hit_r, s_cache)``) and both paths
+    price r dispatcher-routed replicas per cell — analytically at
+    ``lam / r`` via Eq 7/8, simulated under a real routing policy
+    (``routing="jsq"`` etc. passes through ``sim_kwargs``).  The frontier
+    then answers "replicate, upgrade, or cache?" in one extraction.
     """
     if simulate:
         key = jax.random.PRNGKey(0) if key is None else key

@@ -37,6 +37,7 @@ __all__ = [
     "fork_join_upper_bound",
     "fork_join_interpolation",
     "response_time_bounds",
+    "apply_result_cache",
     "response_time_with_result_cache",
     "saturation_rate",
     "expected_max_exponential",
@@ -184,6 +185,26 @@ def response_time_bounds(lam: ArrayLike, params: ServerParams) -> tuple[Array, A
     return lo, hi
 
 
+def apply_result_cache(
+    response: ArrayLike,
+    lam: ArrayLike,
+    hit_result: ArrayLike,
+    s_broker_cache_hit: ArrayLike,
+) -> Array:
+    """The Eq 8 blend, applicable to ANY response surface:
+
+    R_cached = R * (1 - hit_r) + R_broker_cache * hit_r
+
+    where R_broker_cache is the M/M/1 residence of the broker's cache
+    queue at the full (un-thinned, conservative as in the paper) arrival
+    rate.  This is THE one place the Eq 8 mixture convention lives —
+    `repro.core.sweep` applies it to both bounds of whole grids.
+    """
+    hit_r = jnp.asarray(hit_result)
+    r_cache = mm1_residence_time(lam, s_broker_cache_hit)
+    return jnp.asarray(response) * (1.0 - hit_r) + r_cache * hit_r
+
+
 def response_time_with_result_cache(
     lam: ArrayLike,
     params: ServerParams,
@@ -197,10 +218,8 @@ def response_time_with_result_cache(
     Conservative as in the paper: lambda is NOT thinned at the index
     servers (the cache only short-circuits the response-time path).
     """
-    hit_r = jnp.asarray(hit_result)
     _, hi = response_time_bounds(lam, params)
-    r_cache = mm1_residence_time(lam, s_broker_cache_hit)
-    return hi * (1.0 - hit_r) + r_cache * hit_r
+    return apply_result_cache(hi, lam, hit_result, s_broker_cache_hit)
 
 
 def saturation_rate(params: ServerParams) -> Array:

@@ -35,6 +35,36 @@ call sites keep working.
 
 Simulated system (paper Fig 8): broker FCFS queue -> fork to p index-server
 FCFS queues -> join (max over servers) -> response = join - arrival.
+
+Replication (paper Sec 6, ``replicas_needed``): with ``r > 1`` the network
+grows a front-end dispatcher that routes each query to ONE of r identical
+replicas, each a full broker + p-server fork-join.  Routing policies:
+
+  * "round_robin" — query i goes to replica i mod r (deterministic);
+  * "random"      — iid uniform replica choice (Poisson thinning);
+  * "jsq"         — join-shortest-queue on *carried per-replica work*: a
+    fluid backlog tracker (per-replica, per-server remaining seconds)
+    rides in the scan carry, and each query picks the replica whose
+    slowest server frees up first.
+
+The replicated network still runs as masked max-plus scans over the FULL
+arrival stream: a query routed elsewhere contributes zero service to this
+replica's queues, and because arrivals are nondecreasing a zero-service
+"phantom" (C_i = max(A_i, C_{i-1})) can never delay a later real query —
+max(A_j, max(A_i, C)) = max(A_j, C) for A_j >= A_i.  So all
+S x r x (p + 1) sample paths stay on the one associative-scan/Pallas
+path, and peak memory is S x r x p x chunk floats.
+
+An optional broker-level result cache (``result_cache=(hit_r, s_cache)``)
+short-circuits service: each query is a cache hit with probability hit_r
+and is then served by its replica's broker-cache FCFS queue with
+Exp(s_cache) service instead of forking to the index servers — the
+mechanistic counterpart of Eq 8, placed exactly where the paper puts it
+(at each cluster's broker, so the analytic Eq 8 term at lam / r and the
+simulated cache queue describe the same system).  Unlike the paper's
+conservative bound the simulator DOES thin the index-server load, so
+simulated means sit at or below the Eq 8 bound.
+
 Service-time generators cover three regimes:
 
   * "exponential" — iid Exp(S_server) per (query, server): the model's
@@ -79,14 +109,18 @@ __all__ = [
     "chunk_random_draws",
     "DEFAULT_CHUNK",
     "DEFAULT_HIST_BINS",
+    "ROUTING_POLICIES",
 ]
 
 DEFAULT_CHUNK = 4096
 DEFAULT_HIST_BINS = 256
-# salt for the reservoir tap's RNG stream: folded on top of the per-chunk
-# key AFTER chunk_random_draws' fold, so enabling the tap never perturbs
-# the canonical gap/broker/service draws
+ROUTING_POLICIES = ("round_robin", "random", "jsq")
+# salts for auxiliary RNG streams: folded on top of the per-chunk key
+# AFTER chunk_random_draws' fold, so enabling the tap, random routing, or
+# the result cache never perturbs the canonical gap/broker/service draws
 _TAP_SALT = 0x7EE5
+_ROUTE_SALT = 0x2077
+_CACHE_SALT = 0xCA8E
 # log-histogram span, in decades around the per-scenario analytic scale
 _HIST_DECADES_BELOW = 3.0
 _HIST_DECADES_TOTAL = 6.0
@@ -337,13 +371,66 @@ def _clamp_chunk_for_profile(proc: ArrivalProcess, chunk: int) -> int:
     return chunk
 
 
+def _routing_mask(routing: str, r: int, key: Array, c_idx, gidx,
+                  n_scen: int, chunk: int, dtype) -> Optional[Array]:
+    """(S, r, chunk) one-hot replica assignment for oblivious policies.
+
+    Returns None for "jsq" (its mask needs the carried work state and is
+    built inside the scan body).  Round-robin assigns by GLOBAL query
+    index, so the assignment is invariant to how the stream is chunked.
+    """
+    if routing == "round_robin":
+        assign = (gidx % r)[None, :]                        # (1, chunk)
+    elif routing == "random":
+        k_route = jax.random.fold_in(
+            jax.random.fold_in(key, c_idx), _ROUTE_SALT)
+        assign = jax.random.randint(k_route, (n_scen, chunk), 0, r)
+    else:
+        return None
+    mask = (assign[:, None, :] == jnp.arange(r)[None, :, None])
+    return jnp.broadcast_to(mask.astype(dtype), (n_scen, r, chunk))
+
+
+def _jsq_route(w: Array, gaps: Array, services: Array, live: Array,
+               r: int, dtype) -> tuple[Array, Array]:
+    """Join-shortest-queue on carried per-replica work (fluid backlog).
+
+    w: (S, r, p) remaining seconds of work per replica server, measured
+    at the previous arrival.  For each query (a cheap sequential scan —
+    JSQ is state-dependent, so this is irreducible): drain every tracker
+    by the interarrival gap, pick the replica whose *slowest* server
+    frees first (the join is what the query waits for), and add the
+    query's drawn per-server service times to that replica's trackers.
+    ``live`` zeroes the work deposit for queries that never reach a
+    replica (result-cache hits).  Returns ((S, r, chunk) one-hot mask,
+    updated work state) — the work state rides in the outer scan carry,
+    so JSQ pressure persists across chunks.
+    """
+
+    def step(w, inp):
+        gap, svc, lv = inp                       # (S,), (S, p), (S,)
+        w = jnp.maximum(w - gap[:, None, None], 0.0)
+        backlog = jnp.max(w, axis=-1)            # (S, r) slowest server
+        choice = jnp.argmin(backlog, axis=-1)    # (S,)
+        oh = (choice[:, None] == jnp.arange(r)[None, :]).astype(dtype)
+        w = w + (oh * lv[:, None])[:, :, None] * svc[:, None, :]
+        return w, oh
+
+    xs = (gaps.T, jnp.moveaxis(services, -1, 0), live.T)
+    w, oh_seq = jax.lax.scan(step, w, xs)        # oh_seq: (chunk, S, r)
+    return jnp.moveaxis(oh_seq, 0, -1), w
+
+
 @functools.partial(
     jax.jit, static_argnames=("n_queries", "p", "mode", "impl", "chunk",
-                              "warmup_fraction", "hist_bins", "tap_size"))
+                              "warmup_fraction", "hist_bins", "tap_size",
+                              "r", "routing", "has_cache"))
 def _simulate_stream(
     key: Array,
     proc: ArrivalProcess,
     params: ServerParams,
+    cache_hit: Array,
+    cache_service: Array,
     n_queries: int,
     p: int,
     mode: str,
@@ -352,8 +439,16 @@ def _simulate_stream(
     warmup_fraction: float,
     hist_bins: int,
     tap_size: int = 0,
+    r: int = 1,
+    routing: str = "round_robin",
+    has_cache: bool = False,
 ) -> SimResult:
-    """The one chunked engine behind every fork-join entry point."""
+    """The one chunked engine behind every fork-join entry point.
+
+    ``r``/``routing``/``has_cache`` are static: the single-replica,
+    no-cache compilation is EXACTLY the pre-replication program (same
+    draws, same op order, bit-identical statistics).
+    """
     n_scen = proc.rates.shape[0]
     n_chunks = -(-n_queries // chunk)
     n_warm = int(n_queries * warmup_fraction)
@@ -361,13 +456,22 @@ def _simulate_stream(
 
     s_broker = jnp.broadcast_to(
         jnp.asarray(params.s_broker, dtype), (n_scen,))
+    cache_hit = jnp.broadcast_to(jnp.asarray(cache_hit, dtype), (n_scen,))
+    cache_service = jnp.broadcast_to(
+        jnp.asarray(cache_service, dtype), (n_scen,))
 
     # Per-scenario histogram scale off the Eq 7 analytic ballpark so the
-    # fixed bin budget lands where each scenario's mass actually is.
+    # fixed bin budget lands where each scenario's mass actually is.  The
+    # dispatcher splits arrivals over r replicas (and the result cache
+    # short-circuits hits), so the per-replica operating point is
+    # lam * (1 - hit_r) / r; both factors are exact no-ops at the
+    # default r=1, hit_r=0.
     ref_rate = jnp.broadcast_to(proc.mean_rate.astype(dtype), (n_scen,))
+    if has_cache:
+        ref_rate = ref_rate * (1.0 - cache_hit)
     s_mean = jnp.broadcast_to(
         jnp.asarray(service_time_server(params), dtype), (n_scen,))
-    _, hi = queueing.response_time_bounds(ref_rate, params)
+    _, hi = queueing.response_time_bounds(ref_rate / r, params)
     hi = jnp.broadcast_to(jnp.asarray(hi, dtype), (n_scen,))
     scale = jnp.where(jnp.isfinite(hi) & (hi > 0), hi, 100.0 * s_mean)
     ln10 = math.log(10.0)
@@ -395,8 +499,13 @@ def _simulate_stream(
     # kept for profile lookups.  Clock magnitudes therefore stay O(chunk
     # duration) forever — float32 accuracy is independent of the simulated
     # horizon, which is what lets millions of queries stream through.
+    #
+    # Replicated carry: c_brk is (S, r), c_srv and the JSQ work tracker
+    # are (S, r, p), the cache queue's carry is (S,).  Unused trackers
+    # (non-JSQ routing, cache off) are carried as constants and dead-code
+    # eliminated by XLA.
     def body(carry, x):
-        (t_origin, c_brk, c_srv, count, s_resp, ss_resp,
+        (t_origin, c_brk, c_srv, c_cache, w_jsq, count, s_resp, ss_resp,
          s_br, s_cl, s_sv, hist, tap_pri, tap_val) = carry
         if has_trace:
             c_idx, trace_gaps_c = x
@@ -414,22 +523,97 @@ def _simulate_stream(
             rate = jnp.maximum(proc.rate_at(t_origin), 1e-30)
             gaps = u_gaps / rate[:, None]
         arrivals = jnp.cumsum(gaps, axis=-1)   # relative to chunk origin
+        gidx = c_idx * chunk + col
+
+        if has_cache:
+            # Result-cache hits short-circuit at their replica's broker
+            # cache: an FCFS queue with Exp(s_cache) service, zero
+            # index-server work — the Eq 8 topology (per-cluster cache),
+            # so the analytic term at lam / r describes the same queue.
+            kc = jax.random.fold_in(
+                jax.random.fold_in(key, c_idx), _CACHE_SALT)
+            kh, ks = jax.random.split(kc)
+            is_hit = jax.random.bernoulli(
+                kh, jnp.broadcast_to(cache_hit[:, None], (n_scen, chunk)))
+            miss_f = 1.0 - is_hit.astype(dtype)
+            t_cache = (jax.random.exponential(ks, (n_scen, chunk))
+                       * cache_service[:, None]
+                       * is_hit.astype(dtype))
+        else:
+            miss_f = None
 
         s_broker_c = u_brk * s_broker[:, None]
-        broker_done = fcfs_completion_times(arrivals, s_broker_c,
-                                            impl=impl, carry=c_brk)
-        fork = jnp.broadcast_to(broker_done[:, None, :],
-                                (n_scen, p, chunk))
-        completions = fcfs_completion_times(fork, services, impl=impl,
-                                            carry=c_srv)
-        join = jnp.max(completions, axis=1)
+        if r == 1:
+            # single replica: EXACTLY the pre-replication program (the
+            # miss mask is the only difference, and only with a cache)
+            if has_cache:
+                s_broker_c = s_broker_c * miss_f
+                services = services * miss_f[:, None, :]
+                cache_done = fcfs_completion_times(
+                    arrivals, t_cache, impl=impl, carry=c_cache[:, 0])
+                c_cache_new = (cache_done[:, -1])[:, None]
+            broker_done = fcfs_completion_times(arrivals, s_broker_c,
+                                                impl=impl, carry=c_brk[:, 0])
+            fork = jnp.broadcast_to(broker_done[:, None, :],
+                                    (n_scen, p, chunk))
+            completions = fcfs_completion_times(fork, services, impl=impl,
+                                                carry=c_srv[:, 0])
+            join = jnp.max(completions, axis=1)
+            server0 = completions[:, 0, :]
+            c_brk_new = (broker_done[:, -1])[:, None]
+            c_srv_new = (completions[:, :, -1])[:, None, :]
+            w_jsq_new = w_jsq
+        else:
+            live = miss_f if has_cache else jnp.ones_like(gaps)
+            mask = _routing_mask(routing, r, key, c_idx, gidx, n_scen,
+                                 chunk, dtype)
+            if mask is None:  # jsq: needs the carried work state
+                mask, w_jsq_new = _jsq_route(w_jsq, gaps, services, live,
+                                             r, dtype)
+            else:
+                w_jsq_new = w_jsq
+            # hits occupy their replica's cache queue; only misses enter
+            # its broker + index servers
+            mask_srv = mask * miss_f[:, None, :] if has_cache else mask
+            # every replica scans the FULL stream; phantom (zero-service)
+            # entries cannot delay later real queries (see module doc)
+            arr_r = jnp.broadcast_to(arrivals[:, None, :],
+                                     (n_scen, r, chunk))
+            if has_cache:
+                cache_done_r = fcfs_completion_times(
+                    arr_r, t_cache[:, None, :] * mask, impl=impl,
+                    carry=c_cache)
+                cache_done = jnp.sum(cache_done_r * mask, axis=1)
+                c_cache_new = cache_done_r[:, :, -1]
+            broker_done_r = fcfs_completion_times(
+                arr_r, s_broker_c[:, None, :] * mask_srv, impl=impl,
+                carry=c_brk)
+            fork = jnp.broadcast_to(broker_done_r[:, :, None, :],
+                                    (n_scen, r, p, chunk))
+            completions = fcfs_completion_times(
+                fork, services[:, None, :, :] * mask_srv[:, :, None, :],
+                impl=impl, carry=c_srv)
+            join_r = jnp.max(completions, axis=2)        # (S, r, chunk)
+            # read each query off its OWN replica's sample path
+            broker_done = jnp.sum(broker_done_r * mask_srv, axis=1)
+            join = jnp.sum(join_r * mask_srv, axis=1)
+            server0 = jnp.sum(completions[:, :, 0, :] * mask_srv, axis=1)
+            c_brk_new = broker_done_r[:, :, -1]
+            c_srv_new = completions[:, :, :, -1]
 
-        response = join - arrivals
-        broker_res = broker_done - arrivals
-        cluster_res = join - broker_done
-        server_res = completions[:, 0, :] - broker_done
-
-        gidx = c_idx * chunk + col
+        if has_cache:
+            resp_cache = cache_done - arrivals
+            response = jnp.where(is_hit, resp_cache, join - arrivals)
+            broker_res = jnp.where(is_hit, resp_cache,
+                                   broker_done - arrivals)
+            cluster_res = jnp.where(is_hit, 0.0, join - broker_done)
+            server_res = jnp.where(is_hit, 0.0, server0 - broker_done)
+        else:
+            response = join - arrivals
+            broker_res = broker_done - arrivals
+            cluster_res = join - broker_done
+            server_res = server0 - broker_done
+            c_cache_new = c_cache
         mf = ((gidx >= n_warm) & (gidx < n_queries)).astype(dtype)[None, :]
         count = count + jnp.broadcast_to(jnp.sum(mf, -1), (n_scen,))
         s_resp = s_resp + jnp.sum(response * mf, -1)
@@ -463,26 +647,49 @@ def _simulate_stream(
 
         shift = arrivals[:, -1]
         new_carry = ((t_origin + shift) % period,
-                     broker_done[:, -1] - shift,
-                     completions[:, :, -1] - shift[:, None],
+                     c_brk_new - shift[:, None],
+                     c_srv_new - shift[:, None, None],
+                     c_cache_new - shift[:, None] if has_cache
+                     else c_cache_new,
+                     w_jsq_new,
                      count, s_resp, ss_resp, s_br, s_cl, s_sv, hist,
                      tap_pri, tap_val)
         return new_carry, None
 
     zeros = jnp.zeros((n_scen,), dtype)
-    init = (zeros, zeros, jnp.zeros((n_scen, p), dtype), zeros, zeros,
+    init = (zeros, jnp.zeros((n_scen, r), dtype),
+            jnp.zeros((n_scen, r, p), dtype),
+            jnp.zeros((n_scen, r), dtype),
+            jnp.zeros((n_scen, r, p), dtype),
+            zeros, zeros,
             zeros, zeros, zeros, zeros,
             jnp.zeros((n_scen, hist_bins), dtype),
             jnp.full((n_scen, tap_size), -jnp.inf, dtype),
             jnp.full((n_scen, tap_size), jnp.nan, dtype))
-    (t_last, c_brk, c_srv, count, s_resp, ss_resp, s_br, s_cl, s_sv,
-     hist, tap_pri, tap_val), _ = jax.lax.scan(body, init, xs)
+    (t_last, c_brk, c_srv, c_cache, w_jsq, count, s_resp, ss_resp, s_br,
+     s_cl, s_sv, hist, tap_pri, tap_val), _ = jax.lax.scan(body, init, xs)
 
     return SimResult(
         count=count, sum_response=s_resp, sumsq_response=ss_resp,
         sum_broker=s_br, sum_cluster=s_cl, sum_server=s_sv,
         hist=hist, hist_log_lo=hist_log_lo, hist_log_step=hist_log_step,
         tap_response=tap_val)
+
+
+def _cache_args(result_cache) -> tuple[Array, Array, bool]:
+    """Normalize ``result_cache=(hit_r, s_cache)`` into engine inputs."""
+    if result_cache is None:
+        return jnp.asarray(0.0), jnp.asarray(0.0), False
+    hit_r, s_cache = result_cache
+    return jnp.asarray(hit_r), jnp.asarray(s_cache), True
+
+
+def _check_topology(r: int, routing: str) -> None:
+    if r < 1:
+        raise ValueError(f"need at least one replica; got r={r}")
+    if routing not in ROUTING_POLICIES:
+        raise ValueError(f"unknown routing policy {routing!r}; choose "
+                         f"one of {ROUTING_POLICIES}")
 
 
 def simulate_fork_join(
@@ -498,6 +705,9 @@ def simulate_fork_join(
     chunk_size: int = DEFAULT_CHUNK,
     hist_bins: int = DEFAULT_HIST_BINS,
     tap_size: int = 0,
+    r: int = 1,
+    routing: str = "round_robin",
+    result_cache: Optional[tuple[float, float]] = None,
 ) -> SimResult:
     """Simulate the full broker + p-server fork-join network (Fig 8).
 
@@ -510,15 +720,27 @@ def simulate_fork_join(
     discarded from the returned streaming statistics.  ``tap_size > 0``
     additionally carries a bounded reservoir sample of per-query response
     times (see :class:`SimResult`).
+
+    ``r > 1`` grows the network to the replicated topology (Sec 6): a
+    front-end dispatcher routes each query to one of ``r`` full replicas
+    under ``routing`` ("round_robin" | "random" | "jsq"); ``lam`` stays
+    the TOTAL arrival rate.  ``result_cache=(hit_r, s_cache)`` adds the
+    broker-level result cache of Eq 8: hits are served by their routed
+    replica's broker-cache FCFS queue with mean service ``s_cache`` and
+    never fork to its index servers.
     """
     p = int(params.p) if p is None else p  # static before tracing
+    _check_topology(r, routing)
+    cache_hit, cache_service, has_cache = _cache_args(result_cache)
     proc = _as_batch_process(lam)
     _check_trace(proc, n_queries)
     chunk = _clamp_chunk_for_profile(
         proc, max(1, min(chunk_size, n_queries)))
-    res = _simulate_stream(key, proc, _vec_params(params), n_queries, p,
+    res = _simulate_stream(key, proc, _vec_params(params), cache_hit,
+                           cache_service, n_queries, p,
                            mode, impl, chunk, warmup_fraction, hist_bins,
-                           tap_size)
+                           tap_size, r=r, routing=routing,
+                           has_cache=has_cache)
     return jax.tree_util.tree_map(lambda x: x[0], res)
 
 
@@ -535,26 +757,34 @@ def simulate_fork_join_batch(
     chunk_size: int = DEFAULT_CHUNK,
     hist_bins: int = DEFAULT_HIST_BINS,
     tap_size: int = 0,
+    r: int = 1,
+    routing: str = "round_robin",
+    result_cache: Optional[tuple[float, float]] = None,
 ) -> SimResult:
     """S fork-join scenarios in one XLA program; all stats are (S,).
 
     ``lam`` is an (S,) rate vector or an :class:`ArrivalProcess` with
     (S, n_bins) rates; every ``params`` field is (S,).  All scenarios
-    share the SAME static server count ``p`` (grids over p dispatch one
-    batch per distinct p — see `repro.core.sweep`).  With
-    ``impl="pallas"`` the per-chunk (S, p, chunk) and (S, chunk) FCFS
-    recurrences flatten onto the row axis of `maxplus_scan`, so all
-    S * (p + 1) sample paths run as a single Pallas grid.
+    share the SAME static server count ``p`` and replica count ``r``
+    (grids over p or r dispatch one batch per distinct (p, r) — see
+    `repro.core.sweep`).  With ``impl="pallas"`` the per-chunk
+    (S, r, p, chunk) and (S, r, chunk) FCFS recurrences flatten onto the
+    row axis of `maxplus_scan`, so all S * r * (p + 1) sample paths run
+    as a single Pallas grid.
 
-    Peak memory is S * p * chunk_size floats — independent of
+    Peak memory is S * r * p * chunk_size floats — independent of
     ``n_queries``, which may stream into the millions.
     """
+    _check_topology(r, routing)
+    cache_hit, cache_service, has_cache = _cache_args(result_cache)
     proc = _as_batch_process(lam)
     _check_trace(proc, n_queries)
     chunk = _clamp_chunk_for_profile(
         proc, max(1, min(chunk_size, n_queries)))
-    return _simulate_stream(key, proc, params, n_queries, p, mode, impl,
-                            chunk, warmup_fraction, hist_bins, tap_size)
+    return _simulate_stream(key, proc, params, cache_hit, cache_service,
+                            n_queries, p, mode, impl,
+                            chunk, warmup_fraction, hist_bins, tap_size,
+                            r=r, routing=routing, has_cache=has_cache)
 
 
 @functools.partial(jax.jit, static_argnames=("c",))

@@ -4,7 +4,7 @@ The paper answers "will configuration X keep response time under the
 constraint?" one scenario at a time.  This module evaluates a dense
 Cartesian grid
 
-    lambda x p x cpu-speedup x disk-speedup x cache-hit-ratio
+    lambda x p x cpu-speedup x disk-speedup x cache-hit-ratio x replicas
 
 as a SINGLE XLA program, two ways:
 
@@ -30,6 +30,7 @@ p95 (exposed to planners via `repro.core.planner.plan_over_grid`).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional, Sequence, Union
 
 import jax
@@ -61,12 +62,19 @@ def _axis(x: ArrayLike) -> Array:
 class SweepGrid:
     """A dense what-if grid over the paper's Section-6 knobs.
 
-    Axis order is fixed: (lam, p, cpu, disk, hit).  ``base`` supplies the
-    measured per-server times that the cpu/disk speedups divide (paper
-    convention: CPU k-times faster divides every CPU time by k); its
-    ``p``/``hit`` fields are ignored in favor of the grid axes.  The
+    Axis order is fixed: (lam, p, cpu, disk, hit, r).  ``base`` supplies
+    the measured per-server times that the cpu/disk speedups divide
+    (paper convention: CPU k-times faster divides every CPU time by k);
+    its ``p``/``hit`` fields are ignored in favor of the grid axes.  The
     broker is CPU-bound and grows with p per the paper's linear fit,
     unless ``broker_from_p=False`` pins it to ``base.s_broker``.
+
+    ``r`` is the replica axis (Sec 6 ``replicas_needed`` as a grid
+    dimension): ``lam`` stays the TOTAL arrival rate and each replica is
+    planned at ``lam / r``.  ``result_cache=(hit_r, s_cache)`` threads
+    the Eq 8 broker-level result cache through both evaluation paths
+    (conservative un-thinned mixture analytically; a mechanistic
+    dispatcher cache queue in the simulator).
     """
 
     lam: Array
@@ -76,13 +84,19 @@ class SweepGrid:
     hit: Array
     base: ServerParams
     broker_from_p: bool = True
+    r: Array = dataclasses.field(
+        default_factory=lambda: jnp.ones((1,), jnp.float32))
+    result_cache: Optional[tuple[float, float]] = None
 
     @classmethod
     def build(cls, *, lam: ArrayLike, p: ArrayLike = 100.0,
               cpu: ArrayLike = 1.0, disk: ArrayLike = 1.0,
               hit: ArrayLike = None, memory: int = 1,
               base: Optional[ServerParams] = None,
-              broker_from_p: bool = True) -> "SweepGrid":
+              broker_from_p: bool = True,
+              r: ArrayLike = 1.0,
+              result_cache: Optional[tuple[float, float]] = None,
+              ) -> "SweepGrid":
         """Grid from explicit axes; defaults come from Table 6 ``memory``."""
         if base is None:
             s_hit, s_miss, s_disk, h = capacity.MEMORY_TABLE[memory]
@@ -93,12 +107,13 @@ class SweepGrid:
             hit = base.hit
         return cls(lam=_axis(lam), p=_axis(p), cpu=_axis(cpu),
                    disk=_axis(disk), hit=_axis(hit), base=base,
-                   broker_from_p=broker_from_p)
+                   broker_from_p=broker_from_p, r=_axis(r),
+                   result_cache=result_cache)
 
     @property
     def shape(self) -> tuple[int, ...]:
         return (self.lam.shape[0], self.p.shape[0], self.cpu.shape[0],
-                self.disk.shape[0], self.hit.shape[0])
+                self.disk.shape[0], self.hit.shape[0], self.r.shape[0])
 
     @property
     def n_scenarios(self) -> int:
@@ -108,12 +123,16 @@ class SweepGrid:
         return n
 
     def broadcast(self) -> tuple[Array, ServerParams]:
-        """(lam, params) with every field shaped to broadcast over `shape`."""
-        lam = self.lam.reshape(-1, 1, 1, 1, 1)
-        p = self.p.reshape(1, -1, 1, 1, 1)
-        cpu = self.cpu.reshape(1, 1, -1, 1, 1)
-        disk = self.disk.reshape(1, 1, 1, -1, 1)
-        hit = self.hit.reshape(1, 1, 1, 1, -1)
+        """(lam, params) with every field shaped to broadcast over `shape`.
+
+        ``lam`` is the total arrival rate; divide by :meth:`lam_replica`'s
+        denominator (the broadcast ``r`` axis) for per-replica rates.
+        """
+        lam = self.lam.reshape(-1, 1, 1, 1, 1, 1)
+        p = self.p.reshape(1, -1, 1, 1, 1, 1)
+        cpu = self.cpu.reshape(1, 1, -1, 1, 1, 1)
+        disk = self.disk.reshape(1, 1, 1, -1, 1, 1)
+        hit = self.hit.reshape(1, 1, 1, 1, -1, 1)
         if self.broker_from_p:
             s_broker = capacity.broker_service_time(p) / cpu
         else:
@@ -128,8 +147,17 @@ class SweepGrid:
         )
         return lam, params
 
+    def lam_replica(self) -> Array:
+        """Per-replica arrival rate, broadcastable over `shape`."""
+        lam, _ = self.broadcast()
+        return lam / self.r.reshape(1, 1, 1, 1, 1, -1)
+
     def broadcast_full(self) -> tuple[Array, ServerParams]:
-        """Like `broadcast`, but every array materialized to `shape`."""
+        """Like `broadcast`, but every array materialized to `shape`.
+
+        The returned ``lam`` is still the TOTAL rate (the simulator's
+        dispatcher does the splitting).
+        """
         lam, params = self.broadcast()
         shape = self.shape
         full = {
@@ -142,7 +170,7 @@ class SweepGrid:
 
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
-    """Dense response surfaces, all shaped `grid.shape` = (L,P,C,D,H)."""
+    """Dense response surfaces, all shaped `grid.shape` = (L,P,C,D,H,R)."""
 
     grid: SweepGrid
     response_lower: Array   # Eq 7 lower bound (s); +inf where saturated
@@ -162,25 +190,53 @@ class SweepResult:
         """Analytic q-percentile upper estimate over the grid (Sec 7).
 
         Mirrors :meth:`SimSweepResult.quantile` so frontier extraction can
-        target tail latency against either surface.
+        target tail latency against either surface.  With a grid-level
+        result cache the surface is the Eq-8-style mixture of the no-cache
+        quantile and the cache queue's exponential quantile (an upper
+        blend — the true quantile of a mixture is below it in the tail).
         """
-        lam, params = self.grid.broadcast()
-        surf = queueing.response_time_quantile_upper(lam, params, q)
+        _, params = self.grid.broadcast()
+        lam_rep = self.grid.lam_replica()
+        surf = queueing.response_time_quantile_upper(lam_rep, params, q)
+        if self.grid.result_cache is not None:
+            hit_r, s_cache = self.grid.result_cache
+            r_cache = queueing.mm1_residence_time(lam_rep, s_cache)
+            t_cache = -r_cache * jnp.log1p(-jnp.asarray(q, jnp.float32))
+            surf = surf * (1.0 - hit_r) + t_cache * hit_r
         return jnp.broadcast_to(surf, self.grid.shape)
 
 
-@jax.jit
-def _bounds_surface(lam: Array, params: ServerParams):
+@functools.partial(jax.jit, static_argnames=("result_cache",))
+def _bounds_surface(lam: Array, params: ServerParams,
+                    result_cache=None):
     lo, hi = queueing.response_time_bounds(lam, params)
+    if result_cache is not None:
+        hit_r, s_cache = result_cache
+        # upper: the Eq 8 mixture (queueing.apply_result_cache is the one
+        # home of the convention: conservative, load NOT thinned).  That
+        # conservatism is only valid UPWARD — for the lower bound both
+        # legs use the mechanistically thinned rates (hits really do
+        # bypass the servers), so lo stays a genuine lower bound.
+        hi = queueing.apply_result_cache(hi, lam, hit_r, s_cache)
+        lo_thin, _ = queueing.response_time_bounds(
+            lam * (1.0 - hit_r), params)
+        r_cache_thin = queueing.mm1_residence_time(lam * hit_r, s_cache)
+        lo = lo_thin * (1.0 - hit_r) + r_cache_thin * hit_r
     util = queueing.utilization(lam, queueing.service_time_server(params))
     return lo, hi, util
 
 
 def sweep_analytical(grid: SweepGrid) -> SweepResult:
-    """Evaluate Eq 7 bounds over the whole grid as one jitted call."""
-    lam, params = grid.broadcast()
+    """Evaluate Eq 7/Eq 8 bounds over the whole grid as one jitted call.
+
+    Replicated cells are evaluated at the per-replica rate ``lam / r``
+    (replication splits arrivals evenly — the paper's linear-gain
+    assumption, which `sweep_simulated` cross-checks under real routing).
+    """
+    lam_rep = grid.lam_replica()
+    _, params = grid.broadcast()
     shape = grid.shape
-    lo, hi, util = _bounds_surface(lam, params)
+    lo, hi, util = _bounds_surface(lam_rep, params, grid.result_cache)
     return SweepResult(
         grid=grid,
         response_lower=jnp.broadcast_to(lo, shape),
@@ -194,8 +250,8 @@ class SimSweepResult:
     """Streaming-simulated surfaces: mean, spread AND quantiles.
 
     ``stats`` is a :class:`repro.core.simulator.SimResult` whose fields
-    all carry the full grid shape (L,P,C,D,H) in front (the histogram has
-    one trailing bin axis), so every summary the streaming engine
+    all carry the full grid shape (L,P,C,D,H,R) in front (the histogram
+    has one trailing bin axis), so every summary the streaming engine
     accumulates is available as a dense surface.
     """
 
@@ -221,7 +277,7 @@ class SimSweepResult:
 
     @property
     def sample_response(self) -> Array:
-        """(L,P,C,D,H, tap_size) reservoir sample of per-query responses.
+        """(L,P,C,D,H,R, tap_size) reservoir sample of per-query responses.
 
         NaN-padded when a scenario saw fewer post-warmup queries than the
         tap size; empty trailing axis unless the sweep ran with
@@ -229,6 +285,15 @@ class SimSweepResult:
         simulated systems (`repro.calibrate.measure.traces_from_sweep`).
         """
         return self.stats.tap_response
+
+
+def _static_count(x, axis_name: str) -> int:
+    v = int(round(float(x)))
+    if abs(v - float(x)) > 1e-3:
+        raise ValueError(
+            f"simulation needs integer {axis_name} counts; got {x} "
+            "(the analytical path accepts fractional values)")
+    return v
 
 
 def sweep_simulated(
@@ -244,14 +309,23 @@ def sweep_simulated(
     tap_size: int = 0,
     profile: Optional[Array] = None,
     profile_bin_seconds: float = 3600.0,
+    routing: str = "round_robin",
 ) -> SimSweepResult:
     """Streaming-simulated response surfaces over the grid.
 
-    One streaming dispatch per distinct p (a static shape); within a
-    dispatch all L*C*D*H scenarios run as one `lax.scan` over query
-    chunks.  Peak memory is n_p_scenarios * p * chunk_size floats — the
-    total query count only adds scan iterations, so `n_queries` can be
-    10-100x what the old materializing path could hold.
+    One streaming dispatch per distinct (p, r) pair (static shapes);
+    within a dispatch all L*C*D*H scenarios run as one `lax.scan` over
+    query chunks.  Peak memory is n_scenarios_per_dispatch * r * p *
+    chunk_size floats — the total query count only adds scan iterations,
+    so `n_queries` can be 10-100x what the old materializing path could
+    hold.
+
+    Replicated cells (``grid.r``) run the dispatcher topology under
+    ``routing`` ("round_robin" | "random" | "jsq"); each scenario's lam
+    stays the total rate, so the surface directly cross-checks the
+    analytical ``lam / r`` splitting assumption, imbalance included.
+    ``grid.result_cache`` switches on the simulator's mechanistic Eq 8
+    dispatcher cache in every dispatch.
 
     ``profile`` makes the load non-stationary: a (n_bins,) relative-rate
     curve (e.g. `repro.workloadgen.loadgen.diurnal_rates`) that tiles with
@@ -272,30 +346,41 @@ def sweep_simulated(
         base_proc = ArrivalProcess.piecewise(
             jnp.asarray(profile), profile_bin_seconds).normalized()
 
-    slabs = []
-    keys = jax.random.split(key, grid.p.shape[0])
-    for i, k in enumerate(keys):
-        p = int(round(float(grid.p[i])))
-        if abs(p - float(grid.p[i])) > 1e-3:
-            raise ValueError(
-                f"simulation needs integer server counts; got p={grid.p[i]}"
-                " (the analytical path accepts fractional p)")
-        flat = lambda x: x[:, i].reshape(-1)  # noqa: E731 — (L,C,D,H) slab
-        params_i = ServerParams(**{n: flat(v) for n, v in fields.items()})
-        lam_i = flat(lam_full)
-        if profile is None:
-            arrival = ArrivalProcess.stationary(lam_i)
-        else:
-            arrival = base_proc.scaled_by(lam_i)
-        res = simulator.simulate_fork_join_batch(
-            k, arrival, params_i, n_queries, p=p, mode=mode, impl=impl,
-            warmup_fraction=warmup_fraction, chunk_size=chunk_size,
-            hist_bins=hist_bins, tap_size=tap_size)
-        slab_shape = (shape[0], shape[2], shape[3], shape[4])
-        slabs.append(jax.tree_util.tree_map(
-            lambda x: x.reshape(slab_shape + x.shape[1:]), res))
+    n_p, n_r = grid.p.shape[0], grid.r.shape[0]
+    # flat indexing (no reshape) keeps both legacy uint32 and new-style
+    # typed PRNG keys working: split always yields a 1-D sequence of keys
+    keys = jax.random.split(key, n_p * n_r)
+    p_slabs = []
+    for i in range(n_p):
+        p = _static_count(grid.p[i], "server")
+        r_slabs = []
+        for j in range(n_r):
+            r = _static_count(grid.r[j], "replica")
+            # (L,C,D,H) slab at this (p, r): axes 1 and 5 pinned
+            flat = lambda x: x[:, i, :, :, :, j].reshape(-1)  # noqa: E731
+            params_ij = ServerParams(
+                **{n: flat(v) for n, v in fields.items()})
+            lam_ij = flat(lam_full)
+            if profile is None:
+                arrival = ArrivalProcess.stationary(lam_ij)
+            else:
+                arrival = base_proc.scaled_by(lam_ij)
+            res = simulator.simulate_fork_join_batch(
+                keys[i * n_r + j], arrival, params_ij, n_queries, p=p,
+                mode=mode,
+                impl=impl, warmup_fraction=warmup_fraction,
+                chunk_size=chunk_size, hist_bins=hist_bins,
+                tap_size=tap_size, r=r, routing=routing,
+                result_cache=grid.result_cache)
+            slab_shape = (shape[0], shape[2], shape[3], shape[4])
+            r_slabs.append(jax.tree_util.tree_map(
+                lambda x: x.reshape(slab_shape + x.shape[1:]), res))
+        # stack the replica axis behind (L,C,D,H) -> axis 4
+        p_slabs.append(jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=4), *r_slabs))
+    # stack the p axis into position 1 -> (L,P,C,D,H,R)
     stats = jax.tree_util.tree_map(
-        lambda *xs: jnp.stack(xs, axis=1), *slabs)
+        lambda *xs: jnp.stack(xs, axis=1), *p_slabs)
     return SimSweepResult(grid=grid, stats=stats)
 
 
@@ -325,14 +410,17 @@ class Frontier:
     disk: Array
     hit: Array
     response: Array    # targeted-surface response of the chosen config (s)
+    r: Array = None    # replicas of the chosen config ((L,); 1s pre-grid)
 
     def describe(self, i: int) -> str:
         if not bool(self.feasible[i]):
             return (f"lam={float(self.lam[i]):g} qps: INFEASIBLE "
                     f"anywhere on the grid")
+        reps = 1 if self.r is None else int(round(float(self.r[i])))
+        rep_s = f" x{reps} replicas" if reps != 1 else ""
         return (f"lam={float(self.lam[i]):g} qps: p={float(self.p[i]):g} "
                 f"cpu x{float(self.cpu[i]):g} disk x{float(self.disk[i]):g} "
-                f"hit={float(self.hit[i]):.2f} -> "
+                f"hit={float(self.hit[i]):.2f}{rep_s} -> "
                 f"R<={float(self.response[i]) * 1e3:.0f} ms "
                 f"(cost {float(self.cost[i]):.1f})")
 
@@ -353,8 +441,10 @@ def extract_frontier(
     cheapest configuration whose p95 survives the load" — or hand any
     precomputed ``surface`` shaped `grid.shape`.
 
-    Fully vectorized: the (P,C,D,H) config-cost tensor is masked by the
-    feasibility surface and argmin-reduced per arrival rate.
+    Fully vectorized: the (P,C,D,H,R) config-cost tensor is masked by the
+    feasibility surface and argmin-reduced per arrival rate.  ``cost_fn``
+    prices ONE replica's hardware (p, cpu, disk, hit); replication
+    multiplies it — r copies of the cluster cost r times as much.
     """
     grid = result.grid
     if surface is None:
@@ -367,15 +457,16 @@ def extract_frontier(
         grid.disk.reshape(1, 1, -1, 1),
         grid.hit.reshape(1, 1, 1, -1),
     )
-    costs = jnp.broadcast_to(costs, grid.shape[1:])
+    costs = jnp.broadcast_to(costs, grid.shape[1:5])
+    costs = costs[..., None] * grid.r.reshape(1, 1, 1, 1, -1)
 
-    feasible = surface <= slo_seconds                     # (L,P,C,D,H)
+    feasible = surface <= slo_seconds                     # (L,P,C,D,H,R)
     masked = jnp.where(feasible, costs[None], jnp.inf)
     flat = masked.reshape(grid.shape[0], -1)
     best = jnp.argmin(flat, axis=1)
     best_cost = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
 
-    ip, ic, id_, ih = jnp.unravel_index(best, grid.shape[1:])
+    ip, ic, id_, ih, ir = jnp.unravel_index(best, grid.shape[1:])
     chosen_resp = jnp.take_along_axis(
         surface.reshape(grid.shape[0], -1),
         best[:, None], axis=1)[:, 0]
@@ -389,4 +480,5 @@ def extract_frontier(
         disk=grid.disk[id_],
         hit=grid.hit[ih],
         response=chosen_resp,
+        r=grid.r[ir],
     )

@@ -173,6 +173,21 @@ def test_flash_crowd_process():
     assert multi.rates.shape == (2, 10)
 
 
+def test_calibrate_smoke_example_runs():
+    """CI's calibrate-smoke job and this test share one entry point
+    (examples/calibrate_smoke.py) — the heredoc it replaced could drift
+    from the library without any test noticing."""
+    import importlib.util
+    import pathlib
+    path = (pathlib.Path(__file__).resolve().parent.parent / "examples"
+            / "calibrate_smoke.py")
+    spec = importlib.util.spec_from_file_location("calibrate_smoke", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    cal, report = mod.run_smoke(verbose=False)
+    assert report.lam.shape[0] >= 1
+
+
 def test_calibrated_params_flow_into_planner(traces):
     """Wiring: CalibratedParams -> ServerParams -> plan/sweep/planner."""
     from repro.calibrate import plan_from_trace

@@ -1,0 +1,302 @@
+"""Replicated-cluster simulation layer: dispatcher routing, the broker
+result cache, and their agreement with the paper's Sec-6 sizing math.
+
+The engine simulates r replicas as masked max-plus scans over the FULL
+arrival stream (zero-service phantoms for queries routed elsewhere), so
+the first test pins that algebra sample-path-for-sample-path against a
+literal per-replica subsequence reference.  The rest cross-check the
+analytical path: Eq 7 at ``lam / r`` at low utilization, Eq 8 with the
+result cache, and ``replicas_needed``'s SLO boundary (the ISSUE's
+acceptance criterion).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import capacity, queueing, simulator, sweep
+from repro.core.arrivals import ArrivalProcess
+from repro.core.queueing import ServerParams
+
+T5 = capacity.TABLE5_PARAMS
+
+
+@pytest.fixture
+def x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", old)
+
+
+def _materialized_draws(key, lam, params, n, p, chunk):
+    """Canonical RNG plan materialized whole (same as the streaming run)."""
+    vp = simulator._vec_params(params)
+    n_chunks = -(-n // chunk)
+    ug, ub, sv = [], [], []
+    for c in range(n_chunks):
+        g, b, s = simulator.chunk_random_draws(key, c, 1, chunk, p, vp,
+                                               "exponential")
+        ug.append(g)
+        ub.append(b)
+        sv.append(s)
+    ug = jnp.concatenate(ug, -1)[:, :n]
+    ub = jnp.concatenate(ub, -1)[:, :n]
+    sv = jnp.concatenate(sv, -1)[:, :, :n]
+    arrivals = jnp.cumsum(ug / lam, -1)
+    return arrivals, ub * params.s_broker, sv
+
+
+def test_round_robin_equals_subsequence_reference(x64):
+    """The masked-phantom engine IS per-replica FCFS on the routed
+    subsequences: round-robin r=2, same canonical draws, per-query sample
+    paths rebuilt replica by replica — means agree to 1e-5."""
+    lam, n, chunk, p, r = 40.0, 20_000, 4096, 8, 2
+    key = jax.random.PRNGKey(0)
+    arrivals, s_brk, sv = _materialized_draws(key, lam, T5, n, p, chunk)
+
+    assign = np.arange(n) % r
+    response = np.zeros(n)
+    for k in range(r):
+        idx = np.where(assign == k)[0]
+        arr_k = arrivals[:, idx]
+        brk = simulator.fcfs_completion_times(arr_k, s_brk[:, idx])
+        comp = simulator.fcfs_completion_times(
+            jnp.broadcast_to(brk[:, None, :], sv[:, :, idx].shape),
+            sv[:, :, idx])
+        response[idx] = np.asarray(comp.max(axis=1)[0] - arr_k[0])
+    n_warm = int(n * 0.1)
+    ref_mean = float(np.mean(response[n_warm:]))
+
+    res = simulator.simulate_fork_join(key, lam, n, T5, r=r,
+                                       routing="round_robin",
+                                       chunk_size=chunk)
+    np.testing.assert_allclose(float(res.mean_response), ref_mean,
+                               rtol=1e-5)
+
+
+def test_result_cache_hit0_bit_identical():
+    """ACCEPTANCE: hit_r=0 compiles the cache path in but reproduces the
+    pre-replication engine bit for bit (the cache RNG is salted)."""
+    base = simulator.simulate_fork_join(jax.random.PRNGKey(1), 20.0,
+                                        30_000, T5)
+    zero = simulator.simulate_fork_join(jax.random.PRNGKey(1), 20.0,
+                                        30_000, T5,
+                                        result_cache=(0.0, 1e-3))
+    np.testing.assert_array_equal(np.asarray(base.sum_response),
+                                  np.asarray(zero.sum_response))
+    np.testing.assert_array_equal(np.asarray(base.hist),
+                                  np.asarray(zero.hist))
+    np.testing.assert_array_equal(np.asarray(base.sum_broker),
+                                  np.asarray(zero.sum_broker))
+
+
+def test_low_utilization_matches_analytic_prediction():
+    """ACCEPTANCE: at low per-replica utilization the r-replica simulated
+    mean converges to the Eq-7 prediction at lam / r (imbalance puts the
+    exponential-mode mean at the H_p upper bound as rho -> 0)."""
+    lam, r = 9.0, 3                       # per-replica util ~ 0.10
+    _, hi = queueing.response_time_bounds(lam / r, T5)
+    res = simulator.simulate_fork_join(jax.random.PRNGKey(2), lam,
+                                       120_000, T5, r=r, routing="random")
+    rel = abs(float(res.mean_response) - float(hi)) / float(hi)
+    assert rel <= 0.10, (float(res.mean_response), float(hi), rel)
+
+
+def test_random_split_matches_single_replica():
+    """Random routing thins Poisson(r * lam) into r independent
+    Poisson(lam) streams, so r replicas at r x the load behave like one
+    cluster at 1x — the linear-gain assumption of replicas_needed."""
+    lam = 20.0
+    one = simulator.simulate_fork_join(jax.random.PRNGKey(3), lam,
+                                       150_000, T5)
+    rep = simulator.simulate_fork_join(jax.random.PRNGKey(4), 3 * lam,
+                                       450_000, T5, r=3, routing="random")
+    m1, m3 = float(one.mean_response), float(rep.mean_response)
+    assert abs(m3 - m1) / m1 <= 0.08, (m1, m3)
+
+
+def test_routing_ordering_under_imbalanced_service():
+    """JSQ <= round-robin <= random in mean response under highly
+    variable (cache-mode, low-hit) service draws.
+
+    Note the oblivious pair's ordering: round-robin BEATS random
+    splitting — it feeds each replica Erlang-r interarrivals, which are
+    smoother than random's Poisson thinning (E_r/G/1 waits less than
+    M/G/1).  The load-aware JSQ dominates both.  The ISSUE sketch
+    conjectured random <= round-robin; theory and measurement both give
+    the order asserted here.
+    """
+    params = dataclasses.replace(capacity.scenario_params(memory=1, p=4),
+                                 p=4)
+    lam = 3 * 0.75 / float(queueing.service_time_server(params))
+    means = {}
+    for routing in simulator.ROUTING_POLICIES:
+        res = simulator.simulate_fork_join(
+            jax.random.PRNGKey(5), lam, 150_000, params, r=3, p=4,
+            mode="cache", routing=routing)
+        means[routing] = float(res.mean_response)
+    assert means["jsq"] <= means["round_robin"] * 1.02, means
+    assert means["round_robin"] <= means["random"] * 1.02, means
+    # JSQ's advantage is real, not noise
+    assert means["jsq"] <= means["random"] * 0.95, means
+
+
+def test_slo_boundary_matches_replicas_needed():
+    """ACCEPTANCE: the simulated SLO boundary of the replicated cluster
+    sits within 10% of the analytical one replicas_needed plans against,
+    at the paper's Table 5 operating point (p=8 validation cluster).
+
+    The boundary is a RATE: max_rate_under_slo bisects the Eq 7 upper
+    bound; here a rate sweep of the r=3 simulated topology locates where
+    the simulated mean crosses the same SLO.
+    """
+    slo, r = 0.9, 3
+    lam_star = float(capacity.max_rate_under_slo(T5, slo))
+    factors = np.linspace(0.85, 1.15, 5)
+    vec = ServerParams(**{
+        f.name: jnp.asarray([getattr(T5, f.name)] * len(factors),
+                            jnp.float32)
+        for f in dataclasses.fields(ServerParams)})
+    lams = jnp.asarray(factors * lam_star * r, jnp.float32)
+    res = simulator.simulate_fork_join_batch(
+        jax.random.PRNGKey(6), lams, vec, 200_000, p=8, r=r,
+        routing="random")
+    means = np.asarray(res.mean_response)
+    assert means[0] < slo < means[-1], means
+    cross = float(np.interp(slo, means, factors * lam_star))
+    rel = abs(cross - lam_star) / lam_star
+    assert rel <= 0.10, (cross, lam_star, rel)
+
+
+def test_result_cache_below_eq8_bound_and_helps():
+    """The mechanistic cache thins replica load, so the simulated mean
+    sits at or below the conservative Eq 8 mixture — and strictly below
+    the cache-less run."""
+    lam, r, cache = 60.0, 3, (0.3, 2e-3)
+    with_cache = simulator.simulate_fork_join(
+        jax.random.PRNGKey(7), lam, 150_000, T5, r=r, routing="random",
+        result_cache=cache)
+    without = simulator.simulate_fork_join(
+        jax.random.PRNGKey(7), lam, 150_000, T5, r=r, routing="random")
+    eq8 = float(queueing.response_time_with_result_cache(
+        lam / r, T5, *cache))
+    m = float(with_cache.mean_response)
+    assert m <= eq8 * 1.05, (m, eq8)
+    assert m < float(without.mean_response) * 0.85
+
+
+def test_result_cache_is_per_replica():
+    """The cache lives at each replica's broker (Eq 8's placement), so
+    its load splits with r: at hit_r=0.9 and 450 qps total, a single
+    dispatcher-level cache would saturate (405 qps x 5 ms = rho 2.0)
+    while four per-replica caches run at rho ~0.5.  The simulated mean
+    must land inside the mechanistic (load-thinned) per-replica
+    envelope, not blow up."""
+    lam, r, (hit_r, s_cache) = 450.0, 4, (0.9, 5e-3)
+    assert lam * hit_r * s_cache > 1.0   # one shared cache WOULD saturate
+    res = simulator.simulate_fork_join(
+        jax.random.PRNGKey(11), lam, 200_000, T5, r=r, routing="random",
+        result_cache=(hit_r, s_cache))
+    m = float(res.mean_response)
+    # thinned per-replica operating point: hits at lam*hit_r/r on the
+    # cache queue, misses at lam*(1-hit_r)/r on the fork-join
+    r_cache = float(queueing.mm1_residence_time(lam * hit_r / r, s_cache))
+    lo, hi = queueing.response_time_bounds(lam * (1.0 - hit_r) / r, T5)
+    lo_env = hit_r * r_cache + (1.0 - hit_r) * float(lo)
+    hi_env = hit_r * r_cache + (1.0 - hit_r) * float(hi)
+    assert np.isfinite(m)
+    assert lo_env * 0.9 <= m <= hi_env * 1.1, (m, lo_env, hi_env)
+
+
+def test_replicated_under_flash_crowd_profile():
+    """Replicas + ArrivalProcess compose: a flash-crowd profile at the
+    same average rate costs tail latency that extra replicas win back."""
+    crowd = ArrivalProcess.flash_crowd(
+        45.0, burst_starts=[200.0], burst_seconds=200.0,
+        burst_multiplier=3.0, period_seconds=1000.0, bin_seconds=100.0)
+    kw = dict(mode="exponential", routing="round_robin", chunk_size=1024)
+    r2 = simulator.simulate_fork_join(jax.random.PRNGKey(8), crowd,
+                                      120_000, T5, r=2, **kw)
+    r4 = simulator.simulate_fork_join(jax.random.PRNGKey(8), crowd,
+                                      120_000, T5, r=4, **kw)
+    assert float(r4.quantile(0.95)) < float(r2.quantile(0.95))
+    assert float(r4.mean_response) < float(r2.mean_response)
+
+
+def test_sweep_replica_axis_and_frontier():
+    """The r grid axis: analytic surface = Eq 7 at lam/r, the simulated
+    surface tracks it, and the frontier buys replicas exactly when one
+    cluster saturates (cost scales with r)."""
+    grid = sweep.SweepGrid.build(
+        lam=jnp.asarray([20.0, 70.0]), p=jnp.asarray([8.0]),
+        base=T5, hit=jnp.asarray([0.17]), broker_from_p=False,
+        r=jnp.asarray([1.0, 3.0]))
+    assert grid.shape == (2, 1, 1, 1, 1, 2)
+    ana = sweep.sweep_analytical(grid)
+    # spot-check the per-replica evaluation
+    _, hi = queueing.response_time_bounds(70.0 / 3.0, T5)
+    np.testing.assert_allclose(
+        float(ana.response_upper[1, 0, 0, 0, 0, 1]), float(hi), rtol=1e-5)
+    # lam=70 saturates one cluster (util ~2.3) but not three
+    assert not np.isfinite(float(ana.response_upper[1, ..., 0].max()))
+    assert np.isfinite(float(ana.response_upper[1, ..., 1].max()))
+
+    fr = sweep.extract_frontier(ana, 0.9)
+    assert bool(fr.feasible[0]) and bool(fr.feasible[1])
+    assert float(fr.r[0]) == 1.0      # light load: one replica suffices
+    assert float(fr.r[1]) == 3.0      # heavy load: must replicate
+    assert float(fr.cost[1]) == pytest.approx(3 * float(fr.cost[0]))
+    assert "x3 replicas" in fr.describe(1)
+
+    sim = sweep.sweep_simulated(grid, jax.random.PRNGKey(9),
+                                n_queries=40_000, routing="random")
+    assert sim.mean.shape == grid.shape
+    lo = np.asarray(ana.response_lower)
+    hi = np.asarray(ana.response_upper)
+    m = np.asarray(sim.mean)
+    ok = np.isfinite(hi)              # skip the saturated (r=1, 70qps) cell
+    assert np.all(m[ok] > lo[ok] * 0.95)
+    assert np.all(m[ok] < hi[ok] * 1.05)
+
+
+def test_plan_capacity_simulated_crosscheck():
+    """plan_capacity(simulate=True) replays the planned topology through
+    the replicated engine: the simulated mean respects the SLO the plan
+    promised and stays above the Eq 7 lower bound."""
+    plan = capacity.plan_capacity(T5, 80.0, 0.9, simulate=True,
+                                  routing="random", key=jax.random.PRNGKey(10))
+    assert plan.n_replicas >= 2
+    assert plan.response_simulated_ms is not None
+    assert plan.response_simulated_ms <= 0.9 * 1e3
+    assert plan.response_simulated_ms >= plan.response_lower_ms * 0.9
+    assert plan.response_simulated_p95_ms > plan.response_simulated_ms
+    assert plan.routing == "random"
+
+
+def test_validate_gains_replicated_column():
+    """calibrate.validate(replicas=r) fills the simulated-replicated
+    column; per-replica load equals the measured system's, so it tracks
+    the single-cluster simulator column."""
+    from repro.calibrate import calibrate, simulate_trace, validate
+    true = dataclasses.replace(T5, p=2)
+    traces = [simulate_trace(jax.random.PRNGKey(i), lam, 6_000, true)
+              for i, lam in enumerate([10.0, 18.0])]
+    cal = calibrate(traces, n_windows=8, n_iters=2)
+    report = validate(traces, cal, n_windows=6, replicas=2,
+                      simulator_queries=20_000)
+    assert report.r_sim_replicated is not None
+    assert report.replicas == 2
+    rep = np.asarray(report.r_sim_replicated)
+    sim = np.asarray(report.r_simulated)
+    assert np.all(np.abs(rep - sim) / sim <= 0.25), (rep, sim)
+    assert "sim(x2)" in report.summary()
+    # default path is unchanged
+    plain = validate(traces, cal, n_windows=6, simulator_queries=10_000)
+    assert plain.r_sim_replicated is None
+    assert "sim(x2)" not in plain.summary()

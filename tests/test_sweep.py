@@ -27,7 +27,8 @@ def test_grid_matches_scalar_evaluation():
     assert res.response_upper.shape == grid.shape
     rng = np.random.default_rng(0)
     for _ in range(10):
-        il, ip, ic, id_, ih = (int(rng.integers(0, d)) for d in grid.shape)
+        il, ip, ic, id_, ih, ir = (int(rng.integers(0, d))
+                                   for d in grid.shape)
         cpu, disk = float(grid.cpu[ic]), float(grid.disk[id_])
         p = float(grid.p[ip])
         params = ServerParams(
@@ -38,12 +39,13 @@ def test_grid_matches_scalar_evaluation():
             s_disk=grid.base.s_disk / disk,
             hit=float(grid.hit[ih]),
         )
-        lo, hi = queueing.response_time_bounds(float(grid.lam[il]), params)
+        lam_rep = float(grid.lam[il]) / float(grid.r[ir])
+        lo, hi = queueing.response_time_bounds(lam_rep, params)
         np.testing.assert_allclose(
-            float(res.response_upper[il, ip, ic, id_, ih]), float(hi),
+            float(res.response_upper[il, ip, ic, id_, ih, ir]), float(hi),
             rtol=1e-5)
         np.testing.assert_allclose(
-            float(res.response_lower[il, ip, ic, id_, ih]), float(lo),
+            float(res.response_lower[il, ip, ic, id_, ih, ir]), float(lo),
             rtol=1e-5)
 
 
@@ -221,5 +223,7 @@ def test_grid_build_from_memory_table():
     s_hit, s_miss, s_disk, hit = capacity.MEMORY_TABLE[4]
     assert float(g.base.s_hit) == s_hit
     assert float(g.hit[0]) == np.float32(hit)
-    assert g.shape == (1, 1, 1, 1, 1)
+    # trailing axis is the replica count, defaulting to a single replica
+    assert g.shape == (1, 1, 1, 1, 1, 1)
+    assert float(g.r[0]) == 1.0
     assert g.n_scenarios == 1
