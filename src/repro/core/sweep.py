@@ -35,6 +35,7 @@ from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import capacity, queueing, simulator
 from repro.core.arrivals import ArrivalProcess
@@ -347,15 +348,21 @@ def sweep_simulated(
             jnp.asarray(profile), profile_bin_seconds).normalized()
 
     n_p, n_r = grid.p.shape[0], grid.r.shape[0]
+    # host-side reads of the static axes: np.asarray on the concrete
+    # grid arrays stays concrete even under an ambient trace, whereas
+    # grid.p[i] would become a tracer and break float() — this keeps
+    # sweep_simulated runnable under jax.eval_shape (the staticcheck
+    # shape contract) with an abstract lam axis
+    p_axis, r_axis = np.asarray(grid.p), np.asarray(grid.r)
     # flat indexing (no reshape) keeps both legacy uint32 and new-style
     # typed PRNG keys working: split always yields a 1-D sequence of keys
     keys = jax.random.split(key, n_p * n_r)
     p_slabs = []
     for i in range(n_p):
-        p = _static_count(grid.p[i], "server")
+        p = _static_count(p_axis[i], "server")
         r_slabs = []
         for j in range(n_r):
-            r = _static_count(grid.r[j], "replica")
+            r = _static_count(r_axis[j], "replica")
             # (L,C,D,H) slab at this (p, r): axes 1 and 5 pinned
             flat = lambda x: x[:, i, :, :, :, j].reshape(-1)  # noqa: E731
             params_ij = ServerParams(

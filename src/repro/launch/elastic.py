@@ -22,13 +22,23 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-import jax
 import numpy as np
 
 from repro.core import queueing
 
-__all__ = ["survivor_mesh_shape", "hedge_threshold", "ElasticPlan",
-           "plan_downsize"]
+__all__ = ["survivor_mesh_shape", "expected_straggler_tax",
+           "hedge_threshold", "ElasticPlan", "plan_downsize"]
+
+
+def expected_straggler_tax(p: int) -> float:
+    """E[slowest of p] / E[one], for iid exponential step times.
+
+    This is the paper's Eq 6 synchronization factor H_p — the mean
+    slowdown a synchronous fork-join step (training microbatch or
+    serving fan-out) pays for waiting on p participants.  It is the
+    quantity `hedge_threshold` trades against the cost of a duplicate.
+    """
+    return float(queueing.harmonic_number(max(int(p), 1)))
 
 
 def survivor_mesh_shape(original: Sequence[int], failed_hosts: int,

@@ -1,0 +1,32 @@
+"""repro.staticcheck: rule-based static analysis for this repo.
+
+Four rule families over one registry (`repro.staticcheck.registry`):
+
+  * convention rules (RPR001-099) — the ROADMAP "Standing conventions";
+  * tracer-safety rules (RPR101-199) — JAX footguns that never throw;
+  * Pallas rules (RPR201-299) — kernel grid/BlockSpec structure;
+  * the eval_shape contract (RPR301) — entry-point shape/dtype pinning.
+
+Run ``python -m repro.staticcheck src tests`` (or the
+``repro-staticcheck`` console script).  Suppress a single line with
+``# staticcheck: disable=RPR0xx`` — bare ``disable`` is itself a finding.
+"""
+
+from repro.staticcheck import contract as _contract  # registers RPR301
+from repro.staticcheck import rules_conventions as _rc  # noqa: F401
+from repro.staticcheck import rules_pallas as _rp  # noqa: F401
+from repro.staticcheck import rules_tracer as _rt  # noqa: F401
+from repro.staticcheck.analysis import Finding, Module
+from repro.staticcheck.cli import check_source, main, run
+from repro.staticcheck.registry import RULES, Rule, rules_for_path
+
+__all__ = [
+    "Finding",
+    "Module",
+    "RULES",
+    "Rule",
+    "check_source",
+    "main",
+    "run",
+    "rules_for_path",
+]

@@ -1,0 +1,9 @@
+"""``python -m repro.staticcheck`` entry point."""
+
+import sys
+
+import repro.staticcheck  # noqa: F401  (registers every rule)
+from repro.staticcheck.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,406 @@
+"""Shared AST machinery: modules, suppressions, and abstract domains.
+
+Three layers, used by every rule module:
+
+  * **Module** — a parsed source file with its import-alias table, so a
+    rule can ask "does this call resolve to ``jax.random.exponential``?"
+    without caring whether the file wrote ``jax.random.exponential``,
+    ``jrandom.exponential`` or ``from jax import random``.
+  * **Suppressions** — ``# staticcheck: disable=RPR0xx[,RPR0yy]`` on the
+    flagged line.  Bare ``disable`` (no ID) and unknown IDs are themselves
+    findings (RPR000) so suppressions cannot rot silently.
+  * **Tracer abstraction** — a tiny abstract interpreter over function
+    bodies with the three-value lattice STATIC < UNKNOWN < TRACED.  Jit
+    entry points (``@jax.jit`` / ``functools.partial(jax.jit,
+    static_argnames=...)``) mark their non-static parameters TRACED;
+    functions handed to ``lax.scan``/``cond``/``while_loop``/``fori_loop``
+    mark all parameters TRACED; values propagate through assignments,
+    arithmetic, and jnp/lax calls.  Shape/dtype attribute reads and
+    ``is (not) None`` tests are STATIC by construction (pytree structure
+    and shapes are static under tracing) — that is what keeps the
+    branch-on-tracer rule quiet on the streaming engine's legitimate
+    ``if has_trace:`` / ``if r == 1:`` static branches while still
+    catching a real ``if jnp.any(x > 0):`` inside a jitted function.
+    TRACED only ever arises from values *derived from traced parameters*,
+    so an UNKNOWN (e.g. any un-resolvable call result) never false-fires.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import pathlib
+import re
+import tokenize
+from typing import Iterator, Optional, Sequence, Union
+
+__all__ = [
+    "Finding",
+    "Module",
+    "iter_functions",
+    "resolve_call",
+    "TracerLattice",
+    "FunctionContext",
+    "jit_entry_info",
+    "control_flow_bodies",
+    "TracerInterp",
+]
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*staticcheck:\s*disable(?:=(?P<ids>[A-Za-z0-9_,\s]*))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: rule ID + location + message."""
+
+    rule_id: str
+    path: str          # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    suppressed: bool = False
+
+    def render(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule_id} {self.message}{tag}")
+
+
+class Module:
+    """A parsed source file + import aliases + suppression table."""
+
+    def __init__(self, path: Union[str, pathlib.Path], rel_posix: str,
+                 text: Optional[str] = None):
+        self.path = pathlib.Path(path)
+        self.rel = rel_posix
+        self.text = self.path.read_text() if text is None else text
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(self.path))
+        self.aliases = _import_aliases(self.tree)
+        self.suppressions, self.bad_suppressions = _suppressions(self.text)
+
+    def qualname(self, node: ast.AST) -> Optional[str]:
+        """Resolve a Name/Attribute chain to a full dotted path, or None."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.aliases.get(node.id, node.id)
+        parts.append(root)
+        return ".".join(reversed(parts))
+
+    def is_suppressed(self, rule_id: str, line: int) -> bool:
+        return rule_id in self.suppressions.get(line, set())
+
+
+def _import_aliases(tree: ast.Module) -> dict[str, str]:
+    """Local name -> fully dotted module/symbol path."""
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _suppressions(text: str
+                  ) -> tuple[dict[int, set[str]], list[tuple[int, str]]]:
+    """Per-line suppressed rule IDs + malformed suppression comments.
+
+    Only real COMMENT tokens count — docstrings that *mention* the
+    suppression syntax (like this package's own docs) are not
+    suppressions.
+    """
+    table: dict[int, set[str]] = {}
+    bad: list[tuple[int, str]] = []
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except (tokenize.TokenError, IndentationError):
+        return table, bad
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _SUPPRESS_RE.search(tok.string)
+        if not m:
+            continue
+        lineno = tok.start[0]
+        ids = [s.strip() for s in (m.group("ids") or "").split(",")
+               if s.strip()]
+        if not ids:
+            bad.append((lineno, "suppression without a rule ID"))
+            continue
+        table[lineno] = set(ids)
+    return table, bad
+
+
+def iter_functions(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def resolve_call(mod: Module, node: ast.Call) -> Optional[str]:
+    """Fully qualified name of a call's callee, or None."""
+    return mod.qualname(node.func)
+
+
+# --------------------------------------------------------------------------
+# Tracer abstraction
+# --------------------------------------------------------------------------
+
+class TracerLattice:
+    STATIC = 0
+    UNKNOWN = 1
+    TRACED = 2
+
+    @staticmethod
+    def join(*vals: int) -> int:
+        return max(vals) if vals else TracerLattice.STATIC
+
+
+# attribute reads that are static regardless of the object's tracedness:
+# shapes, ranks and dtypes are compile-time constants under jit
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "n_bins", "n_queries",
+                 "p", "tap_size", "name"}
+
+# callee roots whose results are traced when any argument is traced
+_ARRAY_NAMESPACES = ("jax.numpy", "jnp", "jax.lax", "jax.random", "jax.nn",
+                     "jax.scipy", "jax.tree_util", "jax")
+
+_CONTROL_FLOW_FNS = {
+    "jax.lax.scan": 0, "jax.lax.cond": (1, 2), "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": 2, "jax.lax.switch": None, "jax.lax.map": 0,
+}
+
+
+@dataclasses.dataclass
+class FunctionContext:
+    """Why a function's parameters are considered traced."""
+
+    node: ast.FunctionDef
+    kind: str                       # "jit" | "body"
+    static_params: frozenset[str] = frozenset()
+
+
+def jit_entry_info(mod: Module, fn: ast.FunctionDef
+                   ) -> Optional[FunctionContext]:
+    """FunctionContext if ``fn`` is jit-decorated (possibly via partial)."""
+    for deco in fn.decorator_list:
+        target = deco.func if isinstance(deco, ast.Call) else deco
+        qn = mod.qualname(target)
+        if qn in ("jax.jit", "jit"):
+            static = _static_argnames(deco)
+            return FunctionContext(fn, "jit", static)
+        if qn in ("functools.partial", "partial") and isinstance(
+                deco, ast.Call) and deco.args:
+            inner = mod.qualname(deco.args[0])
+            if inner in ("jax.jit", "jit"):
+                static = _static_argnames(deco)
+                return FunctionContext(fn, "jit", static)
+    return None
+
+
+def _static_argnames(deco: ast.AST) -> frozenset[str]:
+    names: set[str] = set()
+    if isinstance(deco, ast.Call):
+        for kw in deco.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                for sub in ast.walk(kw.value):
+                    if isinstance(sub, ast.Constant) and isinstance(
+                            sub.value, str):
+                        names.add(sub.value)
+    return frozenset(names)
+
+
+def control_flow_bodies(mod: Module, scope: ast.AST) -> set[str]:
+    """Names of local functions passed to lax control-flow combinators.
+
+    Their parameters (carry, per-step slices) are traced by construction.
+    Lambdas are handled inline by the interpreter; this resolves the
+    ``def body(...)`` / ``lax.scan(body, ...)`` idiom.
+    """
+    names: set[str] = set()
+    for node in ast.walk(scope):
+        if not isinstance(node, ast.Call):
+            continue
+        qn = resolve_call(mod, node)
+        if qn is None:
+            continue
+        spec = _CONTROL_FLOW_FNS.get(qn)
+        if spec is None and qn not in _CONTROL_FLOW_FNS:
+            continue
+        idxs: tuple[int, ...]
+        if spec is None:
+            idxs = tuple(range(len(node.args)))
+        elif isinstance(spec, int):
+            idxs = (spec,)
+        else:
+            idxs = tuple(spec)
+        for i in idxs:
+            if i < len(node.args) and isinstance(node.args[i], ast.Name):
+                names.add(node.args[i].id)
+    return names
+
+
+class TracerInterp:
+    """Forward abstract interpretation of one function body.
+
+    Statement-ordered walk; ``If`` arms are interpreted in forked
+    environments and joined.  The visitor calls ``on_test`` for every
+    ``if``/``while`` test and ``on_call`` for every call site with the
+    abstract values of the call's arguments — rules hook those.
+    """
+
+    def __init__(self, mod: Module, ctx: FunctionContext):
+        self.mod = mod
+        self.ctx = ctx
+        self.env: dict[str, int] = {}
+        fn = ctx.node
+        args = list(fn.args.posonlyargs) + list(fn.args.args) + list(
+            fn.args.kwonlyargs)
+        for i, a in enumerate(args):
+            if a.arg in ("self", "cls"):
+                self.env[a.arg] = TracerLattice.STATIC
+            elif a.arg in ctx.static_params or str(i) in ctx.static_params:
+                self.env[a.arg] = TracerLattice.STATIC
+            elif _annotated_static(a):
+                self.env[a.arg] = TracerLattice.STATIC
+            else:
+                self.env[a.arg] = TracerLattice.TRACED
+
+    # -- abstract evaluation ----------------------------------------------
+
+    def value(self, node: Optional[ast.AST]) -> int:
+        L = TracerLattice
+        if node is None or isinstance(node, ast.Constant):
+            return L.STATIC
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, L.STATIC)
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return L.STATIC
+            base = self.value(node.value)
+            return base
+        if isinstance(node, ast.Subscript):
+            return L.join(self.value(node.value), self.value(node.slice))
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return L.join(*[self.value(e) for e in node.elts])
+        if isinstance(node, ast.BinOp):
+            return L.join(self.value(node.left), self.value(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self.value(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return L.join(*[self.value(v) for v in node.values])
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` probes pytree STRUCTURE,
+            # which is static under tracing even when x is traced
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return L.STATIC
+            return L.join(self.value(node.left),
+                          *[self.value(c) for c in node.comparators])
+        if isinstance(node, ast.IfExp):
+            return L.join(self.value(node.body), self.value(node.orelse))
+        if isinstance(node, ast.Call):
+            qn = resolve_call(self.mod, node)
+            argv = [self.value(a) for a in node.args] + [
+                self.value(kw.value) for kw in node.keywords]
+            if qn is not None and qn.startswith(_ARRAY_NAMESPACES):
+                return L.join(L.STATIC, *argv)
+            return L.UNKNOWN
+        if isinstance(node, (ast.GeneratorExp, ast.ListComp, ast.SetComp,
+                             ast.DictComp)):
+            return L.UNKNOWN
+        if isinstance(node, ast.Starred):
+            return self.value(node.value)
+        if isinstance(node, ast.JoinedStr):
+            return L.STATIC
+        return L.UNKNOWN
+
+    # -- statement walk ----------------------------------------------------
+
+    def run(self, on_test, on_call) -> None:
+        self._block(self.ctx.node.body, on_test, on_call)
+
+    def _assign_target(self, target: ast.AST, val: int) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = val
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._assign_target(e, val)
+        # attribute/subscript stores don't rebind names
+
+    def _expr(self, node: ast.AST, on_call) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                argv = [self.value(a) for a in sub.args]
+                kwv = {kw.arg: self.value(kw.value) for kw in sub.keywords}
+                on_call(sub, argv, kwv)
+
+    def _block(self, stmts, on_test, on_call) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                val_node = stmt.value
+                if val_node is not None:
+                    self._expr(val_node, on_call)
+                val = self.value(val_node)
+                if isinstance(stmt, ast.Assign):
+                    for t in stmt.targets:
+                        self._assign_target(t, val)
+                else:
+                    self._assign_target(stmt.target, val)
+            elif isinstance(stmt, ast.If):
+                self._expr(stmt.test, on_call)
+                on_test(stmt, self.value(stmt.test))
+                saved = dict(self.env)
+                self._block(stmt.body, on_test, on_call)
+                after_body = self.env
+                self.env = dict(saved)
+                self._block(stmt.orelse, on_test, on_call)
+                for k in set(after_body) | set(self.env):
+                    self.env[k] = TracerLattice.join(
+                        after_body.get(k, TracerLattice.STATIC),
+                        self.env.get(k, TracerLattice.STATIC))
+            elif isinstance(stmt, ast.While):
+                self._expr(stmt.test, on_call)
+                on_test(stmt, self.value(stmt.test))
+                self._block(stmt.body, on_test, on_call)
+            elif isinstance(stmt, ast.For):
+                self._expr(stmt.iter, on_call)
+                self._assign_target(stmt.target, self.value(stmt.iter))
+                self._block(stmt.body, on_test, on_call)
+                self._block(stmt.orelse, on_test, on_call)
+            elif isinstance(stmt, (ast.Return, ast.Expr, ast.Assert,
+                                   ast.Raise)):
+                for field in ast.iter_child_nodes(stmt):
+                    self._expr(field, on_call)
+            elif isinstance(stmt, (ast.With,)):
+                for item in stmt.items:
+                    self._expr(item.context_expr, on_call)
+                self._block(stmt.body, on_test, on_call)
+            elif isinstance(stmt, ast.Try):
+                self._block(stmt.body, on_test, on_call)
+                for h in stmt.handlers:
+                    self._block(h.body, on_test, on_call)
+                self._block(stmt.orelse, on_test, on_call)
+                self._block(stmt.finalbody, on_test, on_call)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue  # nested defs are analyzed separately
+            # pass/break/continue/import/global: nothing to do
+
+
+def _annotated_static(arg: ast.arg) -> bool:
+    """Parameters annotated as host types are static by declaration."""
+    ann = arg.annotation
+    if isinstance(ann, ast.Name):
+        return ann.id in ("int", "str", "bool")
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value in ("int", "str", "bool")
+    return False

@@ -1,0 +1,182 @@
+"""Command-line driver: collect files, run rules, report, gate.
+
+Usage (CI runs exactly this, see .github/workflows/ci.yml):
+
+    python -m repro.staticcheck src tests          # rules + contract
+    python -m repro.staticcheck --format json src  # machine-readable
+    python -m repro.staticcheck --list-rules       # registry dump
+    python -m repro.staticcheck --update-contract  # intentional API change
+
+Exit codes: 0 = clean, 1 = unsuppressed findings, 2 = usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Iterable, Optional, Sequence
+
+from repro.staticcheck.analysis import Finding, Module
+from repro.staticcheck.registry import RULES, rules_for_path
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "build", "dist"}
+
+
+def check_source(text: str, rel_posix: str,
+                 path: Optional[pathlib.Path] = None) -> list[Finding]:
+    """Run every applicable rule over one source string.
+
+    ``rel_posix`` decides rule scoping (fixture tests pass synthetic
+    paths like ``src/repro/core/x.py``).  Suppressed findings are kept
+    (marked), so reporters can count them; RPR000 covers malformed
+    suppressions.
+    """
+    try:
+        mod = Module(path or pathlib.Path(rel_posix), rel_posix, text=text)
+    except SyntaxError as e:
+        return [Finding("RPR000", rel_posix, e.lineno or 1, 0,
+                        f"could not parse: {e.msg}")]
+    findings: list[Finding] = []
+    for lineno, msg in mod.bad_suppressions:
+        findings.append(Finding("RPR000", rel_posix, lineno, 0, msg))
+    for lineno, ids in mod.suppressions.items():
+        for rid in sorted(ids):
+            if rid not in RULES:
+                findings.append(Finding(
+                    "RPR000", rel_posix, lineno, 0,
+                    f"suppression references unknown rule ID {rid}"))
+    for r in rules_for_path(rel_posix):
+        for f in r.check(mod):
+            if mod.is_suppressed(f.rule_id, f.line):
+                f = Finding(f.rule_id, f.path, f.line, f.col, f.message,
+                            suppressed=True)
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule_id))
+    return findings
+
+
+def check_file(path: pathlib.Path, root: pathlib.Path) -> list[Finding]:
+    try:
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    return check_source(path.read_text(), rel, path=path)
+
+
+def collect_files(targets: Sequence[str],
+                  root: pathlib.Path) -> list[pathlib.Path]:
+    files: list[pathlib.Path] = []
+    for t in targets:
+        p = (root / t) if not pathlib.Path(t).is_absolute() else \
+            pathlib.Path(t)
+        if p.is_file():
+            files.append(p)
+        elif p.is_dir():
+            files.extend(
+                f for f in sorted(p.rglob("*.py"))
+                if not _SKIP_DIRS.intersection(f.parts))
+        else:
+            raise FileNotFoundError(t)
+    return files
+
+
+def run(targets: Sequence[str], root: pathlib.Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for f in collect_files(targets, root):
+        findings.extend(check_file(f, root))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Reporters
+# --------------------------------------------------------------------------
+
+def report_text(findings: Iterable[Finding], out=sys.stdout) -> None:
+    findings = list(findings)
+    active = [f for f in findings if not f.suppressed]
+    for f in active:
+        print(f.render(), file=out)
+    n_sup = sum(1 for f in findings if f.suppressed)
+    print(f"staticcheck: {len(active)} finding(s), "
+          f"{n_sup} suppressed, {len(RULES)} rule(s)", file=out)
+
+
+def report_json(findings: Iterable[Finding], out=sys.stdout) -> None:
+    findings = list(findings)
+    payload = {
+        "findings": [
+            {"rule": f.rule_id, "path": f.path, "line": f.line,
+             "col": f.col, "message": f.message,
+             "suppressed": f.suppressed}
+            for f in findings],
+        "counts": {
+            "active": sum(1 for f in findings if not f.suppressed),
+            "suppressed": sum(1 for f in findings if f.suppressed),
+        },
+    }
+    json.dump(payload, out, indent=2, sort_keys=True)
+    print(file=out)
+
+
+def list_rules(out=sys.stdout) -> None:
+    for rid in sorted(RULES):
+        r = RULES[rid]
+        print(f"{rid}  [{r.family:<10}]  {r.name}", file=out)
+        print(f"        {r.description}", file=out)
+
+
+# --------------------------------------------------------------------------
+# Entry point
+# --------------------------------------------------------------------------
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-staticcheck",
+        description="AST + abstract-interpretation checks for the repro "
+                    "codebase (conventions, tracer safety, Pallas "
+                    "structure, eval_shape contract)")
+    ap.add_argument("targets", nargs="*", default=["src", "tests"],
+                    help="files/directories to check (default: src tests)")
+    ap.add_argument("--root", default=".",
+                    help="repo root that scoping globs are relative to")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    ap.add_argument("--no-contract", action="store_true",
+                    help="skip the eval_shape contract check (pure AST)")
+    ap.add_argument("--update-contract", action="store_true",
+                    help="re-snapshot shape_contract.json and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        list_rules()
+        return 0
+
+    # imported lazily: pulls in jax (the AST rules do not need it)
+    if args.update_contract:
+        from repro.staticcheck import contract
+        contract.save()
+        print(f"wrote {contract.CONTRACT_PATH}")
+        return 0
+
+    root = pathlib.Path(args.root)
+    targets = args.targets or ["src", "tests"]
+    try:
+        findings = run(targets, root)
+    except FileNotFoundError as e:
+        print(f"staticcheck: no such target: {e}", file=sys.stderr)
+        return 2
+
+    if not args.no_contract:
+        from repro.staticcheck import contract
+        findings.extend(contract.check())
+
+    reporter = report_json if args.format == "json" else report_text
+    reporter(findings)
+    return 1 if any(not f.suppressed for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,227 @@
+"""Abstract-run harness: eval_shape the public API against a contract.
+
+``jax.eval_shape`` traces every registered entry point with *abstract*
+inputs — no kernel executes, no RNG draws, yet the full pytree of output
+shapes, dtypes and weak-type flags comes out.  Comparing that against the
+committed ``shape_contract.json`` turns silent shape/dtype regressions
+(an accidental f64 promotion in the scan carry, a dropped scenario axis,
+a field that became weakly typed) into a red CI job with a one-line diff.
+
+The contract is intentionally *data*, not code: when an API change is
+deliberate, regenerate the file with
+
+    python -m repro.staticcheck --update-contract
+
+and review the JSON diff in the PR like any other artifact.
+
+Probe design notes:
+
+  * PRNG keys (and per-probe array inputs: the batch rate vector, the
+    sweep's lam axis, TraceRecord leaves) are passed as *abstract*
+    ``ShapeDtypeStruct`` arguments, so the streaming ``lax.scan`` binds
+    abstractly instead of running 60k queries.
+  * Host-side scalars and static configuration (ServerParams, grid
+    axes other than lam, ``n_queries``) stay concrete — the entry points
+    legitimately call ``int()``/``float()`` on them before tracing.
+  * ``plan_capacity`` is host-side by design (it returns Python
+    scalars), so its probe runs the analytic path concretely and the
+    contract pins the *Python types* of the plan's fields.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Callable
+
+from repro.staticcheck.analysis import Finding
+from repro.staticcheck.registry import register_datarule
+
+CONTRACT_PATH = pathlib.Path(__file__).with_name("shape_contract.json")
+CONTRACT_REL = "src/repro/staticcheck/shape_contract.json"
+
+register_datarule(
+    "RPR301", "eval-shape-contract", "contract",
+    "entry-point output shapes/dtypes/weak-types must match the "
+    "committed shape_contract.json (regenerate with --update-contract "
+    "when the change is intentional)")
+
+
+def _spec(leaf) -> str:
+    """'float32[3,256]' (+ '~' when weakly typed), or 'py:int'."""
+    dtype = getattr(leaf, "dtype", None)
+    if dtype is None:
+        return f"py:{type(leaf).__name__}"
+    shape = ",".join(str(d) for d in getattr(leaf, "shape", ()))
+    weak = "~" if getattr(leaf, "weak_type", False) else ""
+    return f"{dtype}[{shape}]{weak}"
+
+
+def _tree_specs(out) -> dict[str, str]:
+    from jax.tree_util import keystr, tree_flatten_with_path
+    leaves, _ = tree_flatten_with_path(out)
+    return {keystr(path): _spec(leaf) for path, leaf in leaves}
+
+
+# --------------------------------------------------------------------------
+# Probes
+# --------------------------------------------------------------------------
+
+def _probes() -> dict[str, Callable[[], dict[str, str]]]:
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.calibrate import fit, measure
+    from repro.core import capacity, simulator, sweep
+    from repro.core.queueing import ServerParams
+
+    params = ServerParams(p=4, s_broker=0.004, s_hit=0.0125, s_miss=0.05,
+                          s_disk=0.04, hit=0.5)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    def p_sim():
+        return _tree_specs(jax.eval_shape(
+            lambda k: simulator.simulate_fork_join(
+                k, 50.0, 256, params, chunk_size=128, tap_size=8),
+            key))
+
+    def p_sim_replicated():
+        return _tree_specs(jax.eval_shape(
+            lambda k: simulator.simulate_fork_join(
+                k, 120.0, 256, params, chunk_size=128, r=3,
+                routing="jsq", result_cache=(0.3, 0.001)),
+            key))
+
+    def p_sim_batch():
+        lam = jax.ShapeDtypeStruct((3,), jnp.float32)
+        batch_params = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (3,)),
+            params)
+        return _tree_specs(jax.eval_shape(
+            lambda k, l: simulator.simulate_fork_join_batch(
+                k, l, batch_params, 256, p=4, chunk_size=128),
+            key, lam))
+
+    grid = sweep.SweepGrid.build(
+        lam=[40.0, 60.0], p=[4.0], cpu=[1.0, 2.0], disk=[1.0],
+        r=[1.0, 2.0], base=params)
+
+    # SweepResult/SimSweepResult are deliberately NOT pytrees (they carry
+    # the grid); the probes return their array fields as a dict, which
+    # also pins the field names themselves.
+    def p_sweep_analytical():
+        lam = jax.ShapeDtypeStruct((2,), jnp.float32)
+
+        def go(l):
+            res = sweep.sweep_analytical(dataclasses.replace(grid, lam=l))
+            return {"response_lower": res.response_lower,
+                    "response_upper": res.response_upper,
+                    "utilization": res.utilization}
+
+        return _tree_specs(jax.eval_shape(go, lam))
+
+    def p_sweep_simulated():
+        lam = jax.ShapeDtypeStruct((2,), jnp.float32)
+
+        def go(k, l):
+            res = sweep.sweep_simulated(
+                dataclasses.replace(grid, lam=l), k, n_queries=256,
+                chunk_size=128, tap_size=4)
+            return {"stats": res.stats}
+
+        return _tree_specs(jax.eval_shape(go, key, lam))
+
+    def p_calibrate():
+        n, p = 128, 4
+        tr = measure.TraceRecord(
+            arrival=jax.ShapeDtypeStruct((n,), jnp.float32),
+            response=jax.ShapeDtypeStruct((n,), jnp.float32),
+            broker_busy=jax.ShapeDtypeStruct((n,), jnp.float32),
+            server_busy=jax.ShapeDtypeStruct((n, p), jnp.float32),
+            server_hit=jax.ShapeDtypeStruct((n, p), jnp.float32),
+            server_disk=jax.ShapeDtypeStruct((n, p), jnp.float32),
+        )
+        return _tree_specs(jax.eval_shape(
+            lambda t: fit.calibrate(t, n_windows=4, n_iters=2), tr))
+
+    def p_plan_capacity():
+        plan = capacity.plan_capacity(params, 200.0, 0.5, simulate=False)
+        return {f".{f}": _spec(getattr(plan, f))
+                for f in sorted(vars(plan))}
+
+    return {
+        "simulate_fork_join": p_sim,
+        "simulate_fork_join[r=3,cache]": p_sim_replicated,
+        "simulate_fork_join_batch": p_sim_batch,
+        "sweep_analytical": p_sweep_analytical,
+        "sweep_simulated": p_sweep_simulated,
+        "fit.calibrate": p_calibrate,
+        "plan_capacity": p_plan_capacity,
+    }
+
+
+# --------------------------------------------------------------------------
+# Snapshot / check / update
+# --------------------------------------------------------------------------
+
+def snapshot() -> dict[str, dict[str, str]]:
+    """Run every probe; {probe name: {leaf path: spec}}."""
+    return {name: probe() for name, probe in sorted(_probes().items())}
+
+
+def load(path: pathlib.Path = CONTRACT_PATH) -> dict:
+    return json.loads(path.read_text())
+
+
+def save(path: pathlib.Path = CONTRACT_PATH) -> None:
+    path.write_text(json.dumps({"probes": snapshot()}, indent=2,
+                               sort_keys=True) + "\n")
+
+
+def check(path: pathlib.Path = CONTRACT_PATH,
+          live: dict | None = None) -> list[Finding]:
+    """Diff the live snapshot against the committed contract.
+
+    ``live`` lets callers reuse one snapshot across several comparisons
+    (the probes re-trace every entry point, which costs seconds).
+    """
+    if not path.exists():
+        return [Finding("RPR301", CONTRACT_REL, 1, 0,
+                        "shape contract file missing; run "
+                        "`python -m repro.staticcheck --update-contract`")]
+    committed = load(path).get("probes", {})
+    live = snapshot() if live is None else live
+    findings: list[Finding] = []
+
+    def diff(probe: str, want: dict, got: dict) -> None:
+        for leaf in sorted(set(want) | set(got)):
+            w, g = want.get(leaf), got.get(leaf)
+            if w == g:
+                continue
+            if w is None:
+                msg = f"new output leaf `{probe}{leaf}` = {g}"
+            elif g is None:
+                msg = f"output leaf `{probe}{leaf}` ({w}) disappeared"
+            else:
+                msg = (f"`{probe}{leaf}` changed: contract says {w}, "
+                       f"eval_shape says {g}")
+            findings.append(Finding(
+                "RPR301", CONTRACT_REL, 1, 0,
+                msg + " — if intentional, regenerate with "
+                "--update-contract"))
+
+    for probe in sorted(set(committed) | set(live)):
+        if probe not in live:
+            findings.append(Finding(
+                "RPR301", CONTRACT_REL, 1, 0,
+                f"probe `{probe}` is in the contract but no longer "
+                "registered"))
+        elif probe not in committed:
+            findings.append(Finding(
+                "RPR301", CONTRACT_REL, 1, 0,
+                f"probe `{probe}` has no committed contract entry"))
+        else:
+            diff(probe, committed[probe], live[probe])
+    return findings

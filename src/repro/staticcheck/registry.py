@@ -1,0 +1,98 @@
+"""The one rule registry: stable IDs, metadata, scoping.
+
+Every staticcheck rule registers here with a stable ``RPR####`` ID.  The
+CLI (`repro.staticcheck.cli`), the convention tests
+(`tests/test_conventions.py`, `tests/test_staticcheck.py`), the CI job and
+the README rule table all read THIS table — rule IDs exist in exactly one
+place, so adding a rule is one ``@rule(...)`` decorator and suppressions
+(``# staticcheck: disable=RPR0xx``) can never reference a phantom ID.
+
+ID bands (families):
+
+  * ``RPR000``           framework (suppression hygiene)
+  * ``RPR001``-``RPR099`` repo conventions (ROADMAP "Standing conventions")
+  * ``RPR101``-``RPR199`` JAX tracer safety
+  * ``RPR201``-``RPR299`` Pallas kernel structure
+  * ``RPR301``-``RPR399`` abstract-run (eval_shape) contract
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Callable, Iterable, Iterator, Optional, Sequence
+
+__all__ = ["Rule", "RULES", "rule", "rules_for_path", "FAMILIES"]
+
+FAMILIES = ("framework", "convention", "tracer", "pallas", "contract")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One registered rule.
+
+    ``scope`` is a sequence of fnmatch glob patterns over the repo-relative
+    posix path (e.g. ``src/repro/core/*.py``); a file is checked by the
+    rule iff it matches at least one include pattern and no pattern in
+    ``exclude``.  ``check`` takes a `repro.staticcheck.analysis.Module`
+    and yields `Finding`s; contract rules have ``check=None`` (they run in
+    the eval_shape harness, not per-file).
+    """
+
+    id: str
+    name: str
+    family: str
+    description: str
+    scope: tuple[str, ...]
+    exclude: tuple[str, ...] = ()
+    check: Optional[Callable[..., Iterator]] = None
+
+    def applies_to(self, rel_posix: str) -> bool:
+        if not any(fnmatch.fnmatch(rel_posix, pat) for pat in self.scope):
+            return False
+        return not any(fnmatch.fnmatch(rel_posix, pat)
+                       for pat in self.exclude)
+
+
+RULES: dict[str, Rule] = {}
+
+
+def rule(id: str, name: str, family: str, description: str,
+         scope: Sequence[str], exclude: Sequence[str] = ()):
+    """Register a checker function under a stable rule ID."""
+    if family not in FAMILIES:
+        raise ValueError(f"unknown rule family {family!r}")
+    if id in RULES:
+        raise ValueError(f"duplicate rule id {id}")
+
+    def deco(fn):
+        RULES[id] = Rule(id=id, name=name, family=family,
+                         description=description, scope=tuple(scope),
+                         exclude=tuple(exclude), check=fn)
+        return fn
+
+    return deco
+
+
+def register_datarule(id: str, name: str, family: str, description: str,
+                      scope: Sequence[str] = ()) -> Rule:
+    """Register a rule that has no per-file checker (e.g. the contract)."""
+    if id in RULES:
+        raise ValueError(f"duplicate rule id {id}")
+    r = Rule(id=id, name=name, family=family, description=description,
+             scope=tuple(scope), check=None)
+    RULES[id] = r
+    return r
+
+
+def rules_for_path(rel_posix: str) -> list[Rule]:
+    return [r for r in RULES.values()
+            if r.check is not None and r.applies_to(rel_posix)]
+
+
+# the framework's own rule: emitted by the driver (repro.staticcheck.cli)
+# for suppression comments with no rule ID, unknown rule IDs, and
+# unparseable files
+register_datarule(
+    "RPR000", "suppression-hygiene", "framework",
+    "suppressions must name a registered rule ID; files must parse")

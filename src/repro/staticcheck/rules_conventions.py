@@ -1,0 +1,230 @@
+"""Convention rules: the ROADMAP "Standing conventions", as AST checks.
+
+These subsume (and extend) the old 34-line grep guard that used to live in
+``tests/test_conventions.py``:
+
+  * RPR001 — version-gated JAX symbols only in ``repro/compat.py``;
+  * RPR002 — no bespoke arrival-gap synthesis outside the sanctioned
+    arrival modules (everything else goes through ``ArrivalProcess``);
+  * RPR003 — no raw arrays fed to the calibration fitters (trace
+    ingestion goes through ``TraceRecord``);
+  * RPR004 — no hand-wired multi-``simulate_fork_join`` replica modeling
+    (replication goes through the dispatcher layer's ``r=``).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.staticcheck.analysis import Finding, Module, resolve_call
+from repro.staticcheck.registry import rule
+
+# --------------------------------------------------------------------------
+# RPR001: compat-shim convention (PR 1)
+# --------------------------------------------------------------------------
+
+# fully qualified names that compat.py wraps; referencing them anywhere
+# else makes the next JAX upgrade a multi-file hunt
+_SHIMMED_QUALNAMES = {
+    "jax.sharding.AxisType",
+    "jax.shard_map",
+    "jax.experimental.shard_map.shard_map",
+}
+# gated *attribute* names: flagged wherever they hang off any base —
+# pltpu.TPUCompilerParams, tpu.TPUCompilerParams, x.CompilerParams ...
+_SHIMMED_ATTRS = {"TPUCompilerParams", "CompilerParams"}
+
+
+@rule("RPR001", "compat-shim-only-in-compat", "convention",
+      "version-gated JAX symbols (TPUCompilerParams/CompilerParams, "
+      "jax.sharding.AxisType, jax.shard_map) must go through "
+      "repro/compat.py shims",
+      scope=["src/**/*.py"], exclude=["src/repro/compat.py"])
+def check_compat_shims(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Attribute) and node.attr in _SHIMMED_ATTRS:
+            yield Finding(
+                "RPR001", mod.rel, node.lineno, node.col_offset,
+                f"direct use of gated Pallas symbol `.{node.attr}`; call "
+                "repro.compat.tpu_compiler_params() instead")
+            continue
+        if isinstance(node, (ast.Attribute, ast.Name)):
+            qn = mod.qualname(node)
+            if qn in _SHIMMED_QUALNAMES:
+                yield Finding(
+                    "RPR001", mod.rel, node.lineno, node.col_offset,
+                    f"direct use of version-gated `{qn}`; use the "
+                    "repro.compat shim instead")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and node.module.startswith(
+                    "jax.experimental.shard_map"):
+                yield Finding(
+                    "RPR001", mod.rel, node.lineno, node.col_offset,
+                    "import of jax.experimental.shard_map; use "
+                    "repro.compat.shard_map instead")
+
+
+# --------------------------------------------------------------------------
+# RPR002: ArrivalProcess convention (PR 2)
+# --------------------------------------------------------------------------
+
+# modules allowed to synthesize arrival gaps directly: the abstraction
+# itself, the paper's Sec-4.2 workload statistics, the load generator and
+# the calibration trace sampler
+_ARRIVAL_SANCTIONED = (
+    "src/repro/core/arrivals.py",
+    "src/repro/core/workload.py",
+    "src/repro/workloadgen/loadgen.py",
+    "src/repro/calibrate/measure.py",
+)
+
+
+@rule("RPR002", "arrivals-via-arrival-process", "convention",
+      "bespoke arrival-gap synthesis (cumsum over exponential draws) "
+      "outside the sanctioned arrival modules; express load shapes as "
+      "ArrivalProcess constructors",
+      scope=["src/**/*.py"], exclude=list(_ARRIVAL_SANCTIONED))
+def check_bespoke_arrivals(mod: Module) -> Iterator[Finding]:
+    for fn in [n for n in ast.walk(mod.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Module))]:
+        tainted: set[str] = set()
+
+        def _has_exp_draw(node: ast.AST) -> bool:
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    qn = resolve_call(mod, sub)
+                    if qn in ("jax.random.exponential",
+                              "numpy.random.exponential"):
+                        return True
+                if isinstance(sub, ast.Name) and sub.id in tainted:
+                    return True
+            return False
+
+        body = fn.body if not isinstance(fn, ast.Module) else []
+        for stmt in body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Assign) and _has_exp_draw(sub.value):
+                    for t in sub.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                tainted.add(n.id)
+                if isinstance(sub, ast.Call):
+                    qn = resolve_call(mod, sub)
+                    if qn in ("jax.numpy.cumsum", "numpy.cumsum",
+                              "jnp.cumsum") and sub.args and _has_exp_draw(
+                                  sub.args[0]):
+                        yield Finding(
+                            "RPR002", mod.rel, sub.lineno, sub.col_offset,
+                            "bespoke arrival synthesis (cumsum of "
+                            "exponential gaps); construct a "
+                            "repro.core.arrivals.ArrivalProcess instead")
+
+
+# --------------------------------------------------------------------------
+# RPR003: TraceRecord convention (PR 3)
+# --------------------------------------------------------------------------
+
+_FITTER_NAMES = {
+    "fit_moments", "calibrate", "refine", "window_stats", "window_plan",
+    "calibrate_and_validate", "validate",
+}
+_FITTER_MODULES = ("repro.calibrate", "fit.", "measure.", "validate.")
+_RAW_ARRAY_FACTORIES = {
+    "jax.numpy.asarray", "jax.numpy.array", "jax.numpy.stack",
+    "jax.numpy.concatenate", "numpy.asarray", "numpy.array", "numpy.stack",
+    "numpy.concatenate",
+}
+
+
+def _is_fitter_call(mod: Module, node: ast.Call) -> bool:
+    qn = resolve_call(mod, node)
+    if qn is None:
+        return False
+    leaf = qn.rsplit(".", 1)[-1]
+    if leaf not in _FITTER_NAMES:
+        return False
+    # only calls that resolve INTO the calibrate package (imported from
+    # it, or attribute access on one of its modules)
+    return ("calibrate" in qn or qn.startswith(_FITTER_MODULES)
+            or qn == leaf and leaf in mod.aliases)
+
+
+def _is_raw_array(mod: Module, node: ast.AST) -> bool:
+    if isinstance(node, ast.Call):
+        return resolve_call(mod, node) in _RAW_ARRAY_FACTORIES
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return any(_is_raw_array(mod, e) for e in node.elts) or all(
+            isinstance(e, ast.Constant) for e in node.elts) and bool(
+                node.elts)
+    return False
+
+
+@rule("RPR003", "traces-are-trace-records", "convention",
+      "raw arrays passed to calibration fitters; construct a "
+      "repro.calibrate.measure.TraceRecord (or a list of them) instead",
+      scope=["src/**/*.py", "tests/**/*.py", "examples/**/*.py"])
+def check_raw_trace_arrays(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and _is_fitter_call(mod, node)):
+            continue
+        first = node.args[0] if node.args else None
+        for kw in node.keywords:
+            if kw.arg in ("traces", "trace"):
+                first = kw.value
+        if first is not None and _is_raw_array(mod, first):
+            yield Finding(
+                "RPR003", mod.rel, node.lineno, node.col_offset,
+                "raw array fed to a calibration fitter; trace ingestion "
+                "goes through TraceRecord (ROADMAP calibration "
+                "convention)")
+
+
+# --------------------------------------------------------------------------
+# RPR004: replica-topology convention (PR 4)
+# --------------------------------------------------------------------------
+
+_SIM_ENTRY_LEAVES = {"simulate_fork_join", "simulate_fork_join_batch"}
+_REPLICA_NAMES = {"r", "replicas", "n_replicas", "n_rep", "num_replicas"}
+
+
+@rule("RPR004", "replicas-via-dispatcher", "convention",
+      "hand-wired replica modeling around simulate_fork_join; use the "
+      "engine's r=/routing= dispatcher layer instead",
+      scope=["src/**/*.py"])
+def check_handwired_replicas(mod: Module) -> Iterator[Finding]:
+    loops = [n for n in ast.walk(mod.tree)
+             if isinstance(n, (ast.For, ast.While))]
+
+    def _enclosing_loop(call: ast.Call) -> bool:
+        return any(any(sub is call for sub in ast.walk(lp)) for lp in loops)
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        qn = resolve_call(mod, node)
+        if qn is None or qn.rsplit(".", 1)[-1] not in _SIM_ENTRY_LEAVES:
+            continue
+        kwargs = {kw.arg for kw in node.keywords}
+        # (a) a per-replica loop that never tells the engine about r
+        if "r" not in kwargs and _enclosing_loop(node):
+            yield Finding(
+                "RPR004", mod.rel, node.lineno, node.col_offset,
+                "simulate_fork_join called in a loop without r=; "
+                "modeling replicas by repeated simulator calls assumes "
+                "perfect splitting — pass r=/routing= instead")
+            continue
+        # (b) lam divided by a replica count by hand (perfect-split
+        # assumption smuggled into the arrival rate)
+        for arg in list(node.args[:2]) + [
+                kw.value for kw in node.keywords if kw.arg == "lam"]:
+            if (isinstance(arg, ast.BinOp) and isinstance(arg.op, ast.Div)
+                    and isinstance(arg.right, ast.Name)
+                    and arg.right.id in _REPLICA_NAMES
+                    and "r" not in kwargs):
+                yield Finding(
+                    "RPR004", mod.rel, node.lineno, node.col_offset,
+                    f"arrival rate divided by `{arg.right.id}` by hand; "
+                    "pass the TOTAL rate with r= so routing imbalance "
+                    "is modeled (ROADMAP replica-topology convention)")

@@ -1,0 +1,190 @@
+"""Pallas kernel structure rules.
+
+The five ``kernels/*/kernel.py`` files share one shape: compute grid from
+shapes with ``//``, build BlockSpecs with index-map lambdas, and hand
+everything to ``pl.pallas_call``.  Three things go wrong in practice and
+none of them throw where the mistake is:
+
+  * a grid dimension silently truncates when the shape is not a block
+    multiple (RPR203);
+  * an index-map lambda with the wrong arity fails deep inside Pallas
+    with an error that does not mention the BlockSpec (RPR202) — note the
+    arity is ``len(grid) + num_scalar_prefetch`` under
+    ``PrefetchScalarGridSpec``, and bound constants like
+    ``lambda h, i, j, n_rep=n_rep: ...`` do not count;
+  * compiler params constructed from ``pltpu`` directly break on the next
+    JAX rename (RPR201 — the structured version of the old grep guard);
+  * a kernel without ``interpret=`` plumbing cannot be validated on CPU
+    (RPR204).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.staticcheck.analysis import Finding, Module, iter_functions, \
+    resolve_call
+from repro.staticcheck.registry import rule
+
+_KERNEL_SCOPE = ["src/repro/kernels/*/kernel.py",
+                 "src/repro/kernels/**/kernel.py"]
+
+
+def _is_pallas_call(mod: Module, node: ast.Call) -> bool:
+    qn = resolve_call(mod, node)
+    return qn is not None and qn.rsplit(".", 1)[-1] == "pallas_call"
+
+
+def _kw(node: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in node.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _resolve_tuple(fn: ast.FunctionDef, node: Optional[ast.expr]
+                   ) -> Optional[ast.Tuple]:
+    """Follow one level of `name = (…)` assignment to a tuple literal."""
+    if isinstance(node, ast.Tuple):
+        return node
+    if isinstance(node, ast.Name):
+        for stmt in ast.walk(fn):
+            if (isinstance(stmt, ast.Assign)
+                    and isinstance(stmt.value, ast.Tuple)
+                    and any(isinstance(t, ast.Name) and t.id == node.id
+                            for t in stmt.targets)):
+                return stmt.value
+    return None
+
+
+def _grid_info(mod: Module, fn: ast.FunctionDef, call: ast.Call
+               ) -> tuple[Optional[ast.Tuple], int]:
+    """(grid tuple literal, num_scalar_prefetch) for one pallas_call."""
+    grid = _kw(call, "grid")
+    prefetch = 0
+    spec = _kw(call, "grid_spec")
+    if grid is None and isinstance(spec, ast.Call):
+        grid = _kw(spec, "grid")
+        n = _kw(spec, "num_scalar_prefetch")
+        if isinstance(n, ast.Constant) and isinstance(n.value, int):
+            prefetch = n.value
+    return _resolve_tuple(fn, grid), prefetch
+
+
+def _index_map_lambdas(mod: Module, scope: ast.AST
+                       ) -> Iterator[ast.Lambda]:
+    """Index-map lambdas of every BlockSpec under ``scope``."""
+    for sub in ast.walk(scope):
+        if not isinstance(sub, ast.Call):
+            continue
+        qn = resolve_call(mod, sub)
+        if qn is None or qn.rsplit(".", 1)[-1] != "BlockSpec":
+            continue
+        lam = _kw(sub, "index_map")
+        if lam is None and len(sub.args) >= 2:
+            lam = sub.args[1]
+        if isinstance(lam, ast.Lambda):
+            yield lam
+
+
+@rule("RPR201", "compiler-params-via-compat", "pallas",
+      "pallas_call compiler_params must come from "
+      "repro.compat.tpu_compiler_params(), not a direct pltpu "
+      "constructor (the constructor name is version-gated)",
+      scope=_KERNEL_SCOPE)
+def check_compiler_params_source(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and _is_pallas_call(mod, node)):
+            continue
+        cp = _kw(node, "compiler_params")
+        if cp is None:
+            continue
+        if isinstance(cp, ast.Call):
+            qn = resolve_call(mod, cp) or ""
+            if qn.rsplit(".", 1)[-1] == "tpu_compiler_params":
+                continue
+        yield Finding(
+            "RPR201", mod.rel, cp.lineno, cp.col_offset,
+            "compiler_params not built by "
+            "repro.compat.tpu_compiler_params(); direct construction "
+            "breaks on the next JAX rename")
+
+
+@rule("RPR202", "index-map-arity", "pallas",
+      "BlockSpec index-map arity must equal len(grid) + "
+      "num_scalar_prefetch (bound defaults excluded)",
+      scope=_KERNEL_SCOPE)
+def check_index_map_arity(mod: Module) -> Iterator[Finding]:
+    for fn in iter_functions(mod.tree):
+        calls = [n for n in ast.walk(fn)
+                 if isinstance(n, ast.Call) and _is_pallas_call(mod, n)]
+        for node in calls:
+            grid, prefetch = _grid_info(mod, fn, node)
+            if grid is None:
+                continue            # arity not statically determinable
+            want = len(grid.elts) + prefetch
+            # a lone pallas_call owns every BlockSpec in the function,
+            # including `spec = pl.BlockSpec(...)` bound to a name first
+            scope = fn if len(calls) == 1 else node
+            for lam in _index_map_lambdas(mod, scope):
+                n_args = (len(lam.args.posonlyargs) + len(lam.args.args)
+                          - len(lam.args.defaults))
+                if n_args != want:
+                    yield Finding(
+                        "RPR202", mod.rel, lam.lineno, lam.col_offset,
+                        f"index-map lambda takes {n_args} grid args but "
+                        f"grid has {len(grid.elts)} dims + {prefetch} "
+                        "scalar-prefetch refs")
+
+
+@rule("RPR203", "grid-divisibility-guard", "pallas",
+      "a grid dimension computed with // silently truncates the last "
+      "partial block; assert divisibility (or use pl.cdiv with masking)",
+      scope=_KERNEL_SCOPE)
+def check_grid_divisibility(mod: Module) -> Iterator[Finding]:
+    for fn in iter_functions(mod.tree):
+        has_guard = any(
+            isinstance(stmt, ast.Assert)
+            and any(isinstance(sub, ast.BinOp)
+                    and isinstance(sub.op, ast.Mod)
+                    for sub in ast.walk(stmt.test))
+            for stmt in ast.walk(fn) if isinstance(stmt, ast.Assert))
+        uses_cdiv = any(
+            isinstance(sub, ast.Call)
+            and (resolve_call(mod, sub) or "").rsplit(".", 1)[-1] == "cdiv"
+            for sub in ast.walk(fn))
+        if has_guard or uses_cdiv:
+            continue
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and _is_pallas_call(mod, node)):
+                continue
+            grid, _ = _grid_info(mod, fn, node)
+            if grid is None:
+                continue
+            for elt in grid.elts:
+                for sub in ast.walk(elt):
+                    if isinstance(sub, ast.BinOp) and isinstance(
+                            sub.op, ast.FloorDiv):
+                        yield Finding(
+                            "RPR203", mod.rel, sub.lineno, sub.col_offset,
+                            "grid dim uses // with no divisibility "
+                            "assert (and no pl.cdiv) in "
+                            f"`{fn.name}`; a partial block would be "
+                            "silently dropped")
+
+
+@rule("RPR204", "interpret-plumbing", "pallas",
+      "pallas_call without interpret= plumbing cannot run the CPU "
+      "validation path (ROADMAP: TPU target, interpret-mode CI)",
+      scope=_KERNEL_SCOPE)
+def check_interpret_plumbing(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and _is_pallas_call(mod, node)):
+            continue
+        if _kw(node, "interpret") is None:
+            yield Finding(
+                "RPR204", mod.rel, node.lineno, node.col_offset,
+                "pallas_call without interpret=; thread an interpret "
+                "flag through so CPU CI can validate the kernel")

@@ -1,0 +1,333 @@
+"""JAX tracer-safety rules.
+
+These are the bug classes that never throw — they silently bake one
+scenario into a jitted sweep (RPR101/RPR105), correlate arrival streams
+(RPR102), fall back to host numpy mid-trace (RPR103), or promote the f32
+streaming carry to f64 (RPR104).
+
+Tracer rules only analyze functions that are *demonstrably* jit-reachable:
+``@jax.jit`` / ``functools.partial(jax.jit, ...)`` entry points and
+function bodies handed to ``lax.scan``/``cond``/``while_loop``/
+``fori_loop``.  Host-side helpers (e.g. ``ArrivalProcess.from_trace``'s
+deliberate float64 accumulation) are out of scope by construction.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.staticcheck.analysis import (
+    Finding,
+    FunctionContext,
+    Module,
+    TracerInterp,
+    TracerLattice,
+    control_flow_bodies,
+    iter_functions,
+    jit_entry_info,
+    resolve_call,
+)
+from repro.staticcheck.registry import rule
+
+_HOT_SCOPE = ["src/repro/core/*.py", "src/repro/calibrate/*.py"]
+
+
+def _jit_reachable(mod: Module) -> Iterator[tuple[ast.FunctionDef,
+                                                  FunctionContext]]:
+    """(fn, context) for jit entry points and lax control-flow bodies."""
+    body_names = control_flow_bodies(mod, mod.tree)
+    for fn in iter_functions(mod.tree):
+        ctx = jit_entry_info(mod, fn)
+        if ctx is not None:
+            yield fn, ctx
+        elif fn.name in body_names:
+            yield fn, FunctionContext(fn, "body")
+
+
+# --------------------------------------------------------------------------
+# RPR101 / RPR105: Python control flow & host conversions on tracers
+# --------------------------------------------------------------------------
+
+@rule("RPR101", "no-python-branch-on-tracer", "tracer",
+      "Python if/while on a traced value inside a jit-reachable function "
+      "bakes one branch into the compiled sweep; use jnp.where / lax.cond",
+      scope=_HOT_SCOPE)
+def check_branch_on_tracer(mod: Module) -> Iterator[Finding]:
+    findings: list[Finding] = []
+    for fn, ctx in _jit_reachable(mod):
+        interp = TracerInterp(mod, ctx)
+
+        def on_test(stmt: ast.stmt, val: int) -> None:
+            if val == TracerLattice.TRACED:
+                kw = "while" if isinstance(stmt, ast.While) else "if"
+                findings.append(Finding(
+                    "RPR101", mod.rel, stmt.lineno, stmt.col_offset,
+                    f"Python `{kw}` on a traced value in jit-reachable "
+                    f"`{fn.name}`; use jnp.where or lax.cond"))
+
+        interp.run(on_test, lambda *_: None)
+    yield from findings
+
+
+_HOST_CASTS = {"float", "int", "bool"}
+
+
+@rule("RPR105", "no-host-cast-on-tracer", "tracer",
+      "float()/int()/bool() on a traced value forces a concretization "
+      "error (or silent host sync) inside jit; keep it as an array",
+      scope=_HOT_SCOPE)
+def check_host_cast_on_tracer(mod: Module) -> Iterator[Finding]:
+    findings: list[Finding] = []
+    for fn, ctx in _jit_reachable(mod):
+        interp = TracerInterp(mod, ctx)
+
+        def on_call(node: ast.Call, argv: list[int], kwv: dict) -> None:
+            qn = resolve_call(mod, node)
+            if (qn in _HOST_CASTS and argv
+                    and argv[0] == TracerLattice.TRACED):
+                findings.append(Finding(
+                    "RPR105", mod.rel, node.lineno, node.col_offset,
+                    f"`{qn}()` applied to a traced value in "
+                    f"jit-reachable `{fn.name}`"))
+
+        interp.run(lambda *_: None, on_call)
+    yield from findings
+
+
+# --------------------------------------------------------------------------
+# RPR102: PRNG key reuse
+# --------------------------------------------------------------------------
+
+# calls that CONSUME their key argument: sampling the same key twice (or
+# splitting it twice) yields identical/correlated streams.  fold_in is a
+# pure derivation (the simulator deliberately salts one key many times)
+# and is NOT consumption.
+_KEY_CONSUMERS = {
+    "exponential", "normal", "uniform", "gamma", "beta", "bernoulli",
+    "randint", "choice", "permutation", "categorical", "truncated_normal",
+    "laplace", "poisson", "binomial", "bits", "gumbel", "split",
+}
+_KEY_MAKERS = {"PRNGKey", "key", "split", "fold_in", "wrap_key_data",
+               "clone"}
+
+
+def _random_leaf(mod: Module, node: ast.Call) -> Optional[str]:
+    qn = resolve_call(mod, node)
+    if qn is None:
+        return None
+    head, _, leaf = qn.rpartition(".")
+    if head in ("jax.random", "random", "jrandom", "jr"):
+        return leaf
+    if qn.startswith("jax.random."):
+        return qn.split(".", 2)[-1]
+    return None
+
+
+class _KeyWalker:
+    """Path-sensitive key-consumption counter for one function body.
+
+    ``keys`` maps a variable name to (consumed_count, loop_depth_at_def).
+    ``If`` arms run in forked states; an arm that returns/raises does not
+    contribute to the joined state (that is what keeps the per-mode
+    ``return jax.random.exponential(key, ...)`` dispatch in
+    ``sample_service_times_batch`` clean).  A consumption at a loop depth
+    greater than the key's definition depth is an immediate finding —
+    every iteration would re-consume the same key.
+    """
+
+    def __init__(self, mod: Module, fn: ast.FunctionDef):
+        self.mod = mod
+        self.fn = fn
+        self.keys: dict[str, tuple[int, int]] = {}
+        self.depth = 0
+        self.findings: list[Finding] = []
+        for a in (list(fn.args.posonlyargs) + list(fn.args.args)
+                  + list(fn.args.kwonlyargs)):
+            if "key" in a.arg.lower() or a.arg in ("rng", "prng"):
+                self.keys[a.arg] = (0, 0)
+
+    # -- events ------------------------------------------------------------
+
+    def _consume(self, name: str, node: ast.AST, leaf: str) -> None:
+        if name not in self.keys:
+            return
+        count, def_depth = self.keys[name]
+        if self.depth > def_depth:
+            self.findings.append(Finding(
+                "RPR102", self.mod.rel, node.lineno, node.col_offset,
+                f"PRNG key `{name}` consumed by `{leaf}` inside a loop "
+                f"but derived outside it (in `{self.fn.name}`); every "
+                "iteration reuses the same randomness — fold_in the "
+                "loop index or split per iteration"))
+            return
+        if count >= 1:
+            self.findings.append(Finding(
+                "RPR102", self.mod.rel, node.lineno, node.col_offset,
+                f"PRNG key `{name}` consumed more than once (again by "
+                f"`{leaf}` in `{self.fn.name}`); split or fold_in "
+                "before each use"))
+        self.keys[name] = (count + 1, def_depth)
+
+    def _visit_call(self, node: ast.Call) -> None:
+        leaf = _random_leaf(self.mod, node)
+        if leaf is None:
+            return
+        if leaf in _KEY_CONSUMERS:
+            arg = node.args[0] if node.args else None
+            for kw in node.keywords:
+                if kw.arg == "key":
+                    arg = kw.value
+            if isinstance(arg, ast.Name):
+                self._consume(arg.id, node, leaf)
+
+    def _maybe_bind(self, stmt: ast.Assign | ast.AnnAssign) -> None:
+        value = stmt.value
+        if not isinstance(value, ast.Call):
+            return
+        leaf = _random_leaf(self.mod, value)
+        if leaf not in _KEY_MAKERS:
+            return
+        targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                   else [stmt.target])
+        for t in targets:
+            elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]
+            for e in elts:
+                if isinstance(e, ast.Name):
+                    self.keys[e.id] = (0, self.depth)
+
+    # -- walk --------------------------------------------------------------
+
+    def run(self) -> list[Finding]:
+        self._block(self.fn.body)
+        return self.findings
+
+    def _exprs(self, node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                self._visit_call(sub)
+
+    def _block(self, stmts: list[ast.stmt]) -> bool:
+        """Walk statements; True if the block definitely terminates."""
+        for stmt in stmts:
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                if stmt.value is not None:
+                    self._exprs(stmt.value)
+                self._maybe_bind(stmt)
+            elif isinstance(stmt, ast.AugAssign):
+                self._exprs(stmt.value)
+            elif isinstance(stmt, ast.If):
+                self._exprs(stmt.test)
+                saved = dict(self.keys)
+                body_done = self._block(stmt.body)
+                after_body = self.keys
+                self.keys = dict(saved)
+                else_done = self._block(stmt.orelse)
+                if body_done and not else_done:
+                    pass                       # keep the else state
+                elif else_done and not body_done:
+                    self.keys = after_body
+                else:
+                    merged = {}
+                    for k in set(after_body) | set(self.keys):
+                        c1, d1 = after_body.get(k, (0, self.depth))
+                        c2, d2 = self.keys.get(k, (0, self.depth))
+                        merged[k] = (max(c1, c2), min(d1, d2))
+                    self.keys = merged
+                if body_done and else_done:
+                    return True
+            elif isinstance(stmt, (ast.For, ast.While)):
+                if isinstance(stmt, ast.For):
+                    self._exprs(stmt.iter)
+                else:
+                    self._exprs(stmt.test)
+                self.depth += 1
+                self._block(stmt.body)
+                self.depth -= 1
+                self._block(stmt.orelse)
+            elif isinstance(stmt, (ast.Return, ast.Raise)):
+                for child in ast.iter_child_nodes(stmt):
+                    self._exprs(child)
+                return True
+            elif isinstance(stmt, (ast.Expr, ast.Assert)):
+                self._exprs(stmt)
+            elif isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    self._exprs(item.context_expr)
+                if self._block(stmt.body):
+                    return True
+            elif isinstance(stmt, ast.Try):
+                self._block(stmt.body)
+                for h in stmt.handlers:
+                    self._block(h.body)
+                self._block(stmt.orelse)
+                self._block(stmt.finalbody)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                continue                       # analyzed separately
+        return False
+
+
+@rule("RPR102", "no-prng-key-reuse", "tracer",
+      "a jax.random key sampled (or split) twice without re-derivation "
+      "yields identical streams and silently correlates scenarios",
+      scope=["src/**/*.py"])
+def check_key_reuse(mod: Module) -> Iterator[Finding]:
+    for fn in iter_functions(mod.tree):
+        yield from _KeyWalker(mod, fn).run()
+
+
+# --------------------------------------------------------------------------
+# RPR103: host numpy on traced values in hot modules
+# --------------------------------------------------------------------------
+
+@rule("RPR103", "no-numpy-on-tracers", "tracer",
+      "numpy ops applied to traced arguments in a hot module force a "
+      "trace-time concretization; use jax.numpy",
+      scope=["src/repro/core/*.py", "src/repro/kernels/**/*.py"])
+def check_numpy_on_tracers(mod: Module) -> Iterator[Finding]:
+    findings: list[Finding] = []
+    for fn, ctx in _jit_reachable(mod):
+        interp = TracerInterp(mod, ctx)
+
+        def on_call(node: ast.Call, argv: list[int], kwv: dict) -> None:
+            qn = resolve_call(mod, node)
+            if (qn is not None and qn.startswith("numpy.")
+                    and TracerLattice.TRACED in argv):
+                findings.append(Finding(
+                    "RPR103", mod.rel, node.lineno, node.col_offset,
+                    f"host numpy call `{qn}` on a traced value in "
+                    f"jit-reachable `{fn.name}`; use jax.numpy"))
+
+        interp.run(lambda *_: None, on_call)
+    yield from findings
+
+
+# --------------------------------------------------------------------------
+# RPR104: f64 leaks into the f32 streaming scan
+# --------------------------------------------------------------------------
+
+_F64_NAMES = {"jax.numpy.float64", "numpy.float64", "jnp.float64"}
+
+
+@rule("RPR104", "no-f64-in-streaming-scan", "tracer",
+      "float64 literal/dtype inside a jit-reachable function promotes "
+      "the f32 max-plus carry and drifts the tail estimates",
+      scope=_HOT_SCOPE)
+def check_f64_promotion(mod: Module) -> Iterator[Finding]:
+    for fn, _ctx in _jit_reachable(mod):
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Attribute, ast.Name)):
+                qn = mod.qualname(node)
+                if qn in _F64_NAMES:
+                    yield Finding(
+                        "RPR104", mod.rel, node.lineno, node.col_offset,
+                        f"float64 dtype `{qn}` inside jit-reachable "
+                        f"`{fn.name}`; the streaming scan is f32 by "
+                        "contract")
+            elif (isinstance(node, ast.Constant)
+                  and node.value in ("float64", "f64")):
+                yield Finding(
+                    "RPR104", mod.rel, node.lineno, node.col_offset,
+                    "string dtype 'float64' inside jit-reachable "
+                    f"`{fn.name}`; the streaming scan is f32 by contract")

@@ -1,34 +1,52 @@
 """Repo-convention guards, enforced as tests so CI catches drift.
 
-ROADMAP convention (PR 1): every JAX symbol that has been renamed or
-gated across versions goes through ``src/repro/compat.py``.  Nothing else
-under ``src/`` may touch the shimmed names directly — otherwise the next
-JAX upgrade is a five-file hunt instead of a one-file edit.
+Historically this file held a 34-line grep for shimmed JAX symbols; the
+grep body is gone — `repro.staticcheck` is the enforcement mechanism for
+ALL standing conventions now (compat shims, ArrivalProcess, TraceRecord,
+replica topology, plus the tracer-safety and Pallas families).  This test
+drives the framework over the real tree so `pytest` alone still guards
+the conventions even when the CI staticcheck job is skipped.
+
+The eval_shape contract (RPR301) is exercised separately in
+tests/test_staticcheck.py — here we keep the pure-AST pass, which needs
+no jax import and runs in milliseconds.
 """
 
 from __future__ import annotations
 
 import pathlib
-import re
 
-SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+import repro.staticcheck as staticcheck
 
-# The symbols compat.py wraps; see its module docstring.
-_SHIMMED = re.compile(
-    r"TPUCompilerParams|jax\.sharding\.AxisType|jax\.shard_map")
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_repo_is_staticcheck_clean():
+    findings = staticcheck.run(["src", "tests"], ROOT)
+    active = [f for f in findings if not f.suppressed]
+    assert not active, (
+        "staticcheck findings (fix them, or suppress a deliberate "
+        "exception with `# staticcheck: disable=<RULE>` and a reason):\n"
+        + "\n".join(f.render() for f in active))
+
+
+def test_rule_registry_has_all_families():
+    by_family: dict[str, int] = {}
+    for r in staticcheck.RULES.values():
+        by_family[r.family] = by_family.get(r.family, 0) + 1
+    # ISSUE 6 acceptance: >= 10 distinct rules across the four families
+    assert len(staticcheck.RULES) >= 10
+    for family in ("convention", "tracer", "pallas", "contract"):
+        assert by_family.get(family, 0) >= 1, f"no {family} rules"
 
 
 def test_shimmed_jax_symbols_only_in_compat():
-    offenders = []
-    for path in sorted(SRC.rglob("*.py")):
-        if path.name == "compat.py":
-            continue
-        for lineno, line in enumerate(
-                path.read_text().splitlines(), start=1):
-            if _SHIMMED.search(line):
-                offenders.append(f"{path.relative_to(SRC)}:{lineno}: "
-                                 f"{line.strip()}")
-    assert not offenders, (
-        "shimmed JAX symbols used outside repro/compat.py — route them "
-        "through the compat shims instead (ROADMAP convention):\n"
-        + "\n".join(offenders))
+    """The original grep guard's contract, now enforced by RPR001."""
+    rule = staticcheck.RULES["RPR001"]
+    assert rule.applies_to("src/repro/core/simulator.py")
+    assert not rule.applies_to("src/repro/compat.py")
+    findings = staticcheck.check_source(
+        "import jax.experimental.pallas.tpu as pltpu\n"
+        "params = pltpu.TPUCompilerParams()\n",
+        "src/repro/kernels/foo/kernel.py")
+    assert any(f.rule_id == "RPR001" for f in findings)

@@ -1,0 +1,57 @@
+"""Smoke tests for launch/elastic.py (revived by the staticcheck PR).
+
+The module is the starting point for the ROADMAP autoscaling item; these
+tests pin the arithmetic so it starts from working code.
+"""
+
+from __future__ import annotations
+
+import math
+
+import pytest
+
+from repro.core import queueing
+from repro.launch import elastic
+
+
+def test_survivor_mesh_shrinks_data_axis():
+    # 2 hosts x 4 chips lost out of a (8, 4) data x model mesh: the data
+    # axis absorbs the loss, model stays intact.
+    new = elastic.survivor_mesh_shape(
+        (8, 4), failed_hosts=2, chips_per_host=4, axes=("data", "model"))
+    assert new == (6, 4)
+
+
+def test_survivor_mesh_raises_when_capacity_gone():
+    with pytest.raises(ValueError):
+        elastic.survivor_mesh_shape(
+            (2, 4), failed_hosts=4, chips_per_host=4,
+            axes=("data", "model"))
+
+
+def test_plan_downsize_factors_are_reciprocal():
+    plan = elastic.plan_downsize((8, 4), (6, 4))
+    assert plan.throughput_fraction == pytest.approx(0.75)
+    assert plan.step_time_factor == pytest.approx(4.0 / 3.0)
+    assert plan.throughput_fraction * plan.step_time_factor == (
+        pytest.approx(1.0))
+
+
+def test_expected_straggler_tax_is_harmonic():
+    # H_4 = 1 + 1/2 + 1/3 + 1/4
+    assert elastic.expected_straggler_tax(4) == pytest.approx(
+        25.0 / 12.0, rel=1e-5)
+    # matches the queueing module it delegates to (Eq 6 factor)
+    assert elastic.expected_straggler_tax(16) == pytest.approx(
+        float(queueing.harmonic_number(16)), rel=1e-6)
+    assert elastic.expected_straggler_tax(0) == pytest.approx(1.0)
+
+
+def test_hedge_threshold_scales_with_log_p():
+    r = 0.050
+    assert elastic.hedge_threshold(r, 16) == pytest.approx(
+        r * math.log(16))
+    # duplicates twice as expensive -> wait twice as long
+    assert elastic.hedge_threshold(
+        r, 16, duplicate_cost_fraction=2.0) == pytest.approx(
+        2 * r * math.log(16))

@@ -1,0 +1,463 @@
+"""Tests for the repro.staticcheck analyzer itself.
+
+One fixture triple per rule — a positive hit, the same hit suppressed,
+and clean code the rule must NOT flag (the clean cases encode the false
+positives found while tuning the rules on the real tree: static
+`if r == 1:` branches under static_argnames, per-mode key dispatch where
+every branch returns, `sweep_simulated`'s loop that DOES pass r=, bound
+lambda defaults in GQA index maps, ...).
+
+The eval_shape-contract tests at the bottom seed a deliberate shape
+regression into a copy of the contract and assert the harness goes red.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+import repro.staticcheck as sc
+from repro.staticcheck import contract
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def ids_of(src: str, rel: str) -> list[str]:
+    return [f.rule_id for f in sc.check_source(src, rel)
+            if not f.suppressed]
+
+
+def assert_triple(rule: str, rel: str, bad: str, clean: str,
+                  disable: str | None = None) -> None:
+    """Positive hit, suppressed hit, clean code — the per-rule contract."""
+    hits = sc.check_source(bad, rel)
+    assert any(f.rule_id == rule and not f.suppressed for f in hits), (
+        f"{rule} did not fire:\n{bad}")
+    flagged_line = next(f.line for f in hits if f.rule_id == rule)
+    lines = bad.splitlines()
+    lines[flagged_line - 1] += (
+        f"  # staticcheck: disable={disable or rule}")
+    suppressed = sc.check_source("\n".join(lines) + "\n", rel)
+    assert all(f.suppressed for f in suppressed
+               if f.rule_id == rule and f.line == flagged_line), (
+        f"{rule} suppression did not take")
+    assert not any(f.rule_id == rule for f in sc.check_source(clean, rel)), (
+        f"{rule} false-fired on clean code:\n{clean}")
+
+
+# --------------------------------------------------------------------------
+# framework: RPR000 + registry + CLI
+# --------------------------------------------------------------------------
+
+def test_rule_ids_are_stable_and_banded():
+    for rid, rule in sc.RULES.items():
+        assert rid == rule.id and rid.startswith("RPR")
+        n = int(rid[3:])
+        band = {"framework": (0, 0), "convention": (1, 99),
+                "tracer": (101, 199), "pallas": (201, 299),
+                "contract": (301, 399)}[rule.family]
+        assert band[0] <= n <= band[1], f"{rid} outside {rule.family} band"
+
+
+def test_bare_suppression_is_a_finding():
+    src = "import jax\nx = 1  # staticcheck: disable\n"
+    assert "RPR000" in ids_of(src, "src/repro/core/x.py")
+
+
+def test_unknown_rule_id_suppression_is_a_finding():
+    src = "x = 1  # staticcheck: disable=RPR999\n"
+    assert "RPR000" in ids_of(src, "src/repro/core/x.py")
+
+
+def test_docstring_mention_is_not_a_suppression():
+    src = '"""Use # staticcheck: disable=RPR0xx on the line."""\nx = 1\n'
+    assert ids_of(src, "src/repro/core/x.py") == []
+
+
+def test_syntax_error_reports_not_raises():
+    assert "RPR000" in ids_of("def f(:\n", "src/repro/core/x.py")
+
+
+def test_cli_module_runs_and_gates(tmp_path):
+    bad = tmp_path / "src" / "repro" / "core"
+    bad.mkdir(parents=True)
+    (bad / "x.py").write_text(
+        "import jax\nparams = jax.sharding.AxisType\n")
+    env_root = str(tmp_path)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.staticcheck", "src",
+         "--root", env_root, "--no-contract", "--format", "json"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": str(tmp_path)})
+    assert proc.returncode == 1, proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["counts"]["active"] == 1
+    assert payload["findings"][0]["rule"] == "RPR001"
+
+
+def test_cli_list_rules():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.staticcheck", "--list-rules"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0
+    for rid in sc.RULES:
+        assert rid in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# convention rules
+# --------------------------------------------------------------------------
+
+def test_rpr001_compat_shims():
+    assert_triple(
+        "RPR001", "src/repro/core/x.py",
+        bad=("from jax.experimental.pallas import tpu as pltpu\n"
+             "cp = pltpu.TPUCompilerParams()\n"),
+        clean=("from repro.compat import tpu_compiler_params\n"
+               "cp = tpu_compiler_params(dimension_semantics=('parallel',))\n"))
+    # compat.py itself is out of scope by design
+    assert not sc.RULES["RPR001"].applies_to("src/repro/compat.py")
+
+
+def test_rpr002_bespoke_arrivals():
+    assert_triple(
+        "RPR002", "src/repro/core/x.py",
+        bad=("import jax, jax.numpy as jnp\n"
+             "def arr(key, lam, n):\n"
+             "    gaps = jax.random.exponential(key, (n,)) / lam\n"
+             "    return jnp.cumsum(gaps)\n"),
+        # the sanctioned construction: go through ArrivalProcess
+        clean=("from repro.core.arrivals import ArrivalProcess\n"
+               "def arr(lam):\n"
+               "    return ArrivalProcess.stationary(lam)\n"))
+    # the arrival modules themselves are allowed to do this
+    assert not sc.RULES["RPR002"].applies_to("src/repro/core/arrivals.py")
+    assert not sc.RULES["RPR002"].applies_to(
+        "src/repro/calibrate/measure.py")
+    # tests may synthesize arrivals freely (scope is src/ only)
+    assert not sc.RULES["RPR002"].applies_to("tests/test_simulator.py")
+
+
+def test_rpr003_raw_trace_arrays():
+    assert_triple(
+        "RPR003", "src/repro/calibrate/x.py",
+        bad=("import jax.numpy as jnp\n"
+             "from repro.calibrate.fit import fit_moments\n"
+             "params = fit_moments(jnp.stack([a, b]))\n"),
+        clean=("from repro.calibrate.fit import fit_moments\n"
+               "from repro.calibrate.measure import TraceRecord\n"
+               "def f(tr: TraceRecord):\n"
+               "    return fit_moments(tr)\n"))
+
+
+def test_rpr004_handwired_replicas():
+    assert_triple(
+        "RPR004", "src/repro/core/x.py",
+        bad=("from repro.core.simulator import simulate_fork_join\n"
+             "def f(key, lam, n, params, n_replicas):\n"
+             "    outs = []\n"
+             "    for i in range(n_replicas):\n"
+             "        outs.append(simulate_fork_join(\n"
+             "            key, lam / n_replicas, n, params))\n"
+             "    return outs\n"),
+        # sweep_simulated's real shape: loop over grid cells, but the
+        # engine is told about replication via r=
+        clean=("from repro.core.simulator import simulate_fork_join_batch\n"
+               "def f(keys, lam, n, params, n_rep):\n"
+               "    outs = []\n"
+               "    for j in range(2):\n"
+               "        outs.append(simulate_fork_join_batch(\n"
+               "            keys[j], lam, params, n, p=4, r=n_rep))\n"
+               "    return outs\n"))
+
+
+# --------------------------------------------------------------------------
+# tracer rules
+# --------------------------------------------------------------------------
+
+def test_rpr101_branch_on_tracer():
+    assert_triple(
+        "RPR101", "src/repro/core/x.py",
+        bad=("import jax, jax.numpy as jnp\n"
+             "@jax.jit\n"
+             "def f(x):\n"
+             "    if jnp.any(x > 0):\n"
+             "        return x\n"
+             "    return -x\n"),
+        # the streaming engine's legitimate static branches: static
+        # argnames and `is None` structure probes stay STATIC
+        clean=("import jax, functools\n"
+               "import jax.numpy as jnp\n"
+               "@functools.partial(jax.jit, static_argnames=('r', 'mode'))\n"
+               "def f(x, mask, r, mode):\n"
+               "    if r == 1:\n"
+               "        x = x + 1\n"
+               "    if mask is None:\n"
+               "        x = x * 2\n"
+               "    if x.shape[0] > 4:\n"
+               "        x = x[:4]\n"
+               "    return x\n"))
+
+
+def test_rpr101_scan_body_params_are_traced():
+    src = ("import jax\n"
+           "import jax.numpy as jnp\n"
+           "def outer(xs):\n"
+           "    def body(carry, x):\n"
+           "        if x > 0:\n"
+           "            carry = carry + x\n"
+           "        return carry, carry\n"
+           "    return jax.lax.scan(body, jnp.float32(0), xs)\n")
+    assert "RPR101" in ids_of(src, "src/repro/core/x.py")
+
+
+def test_rpr102_key_reuse():
+    assert_triple(
+        "RPR102", "src/repro/core/x.py",
+        bad=("import jax\n"
+             "def draws(key, n):\n"
+             "    a = jax.random.exponential(key, (n,))\n"
+             "    b = jax.random.normal(key, (n,))\n"
+             "    return a + b\n"),
+        # per-mode dispatch where every branch returns: each path
+        # consumes the key exactly once (sample_service_times_batch)
+        clean=("import jax\n"
+               "def draws(key, n, mode):\n"
+               "    if mode == 'a':\n"
+               "        return jax.random.exponential(key, (n,))\n"
+               "    k1, k2 = jax.random.split(key)\n"
+               "    return jax.random.normal(k1, (n,)) + "
+               "jax.random.normal(k2, (n,))\n"))
+
+
+def test_rpr102_loop_reuse():
+    src = ("import jax\n"
+           "def draws(key, n):\n"
+           "    out = []\n"
+           "    for i in range(n):\n"
+           "        out.append(jax.random.normal(key, ()))\n"
+           "    return out\n")
+    assert "RPR102" in ids_of(src, "src/repro/core/x.py")
+    # fold_in per iteration is the sanctioned pattern (chunk_random_draws)
+    clean = ("import jax\n"
+             "def draws(key, n):\n"
+             "    out = []\n"
+             "    for i in range(n):\n"
+             "        ki = jax.random.fold_in(key, i)\n"
+             "        out.append(jax.random.normal(ki, ()))\n"
+             "    return out\n")
+    assert "RPR102" not in ids_of(clean, "src/repro/core/x.py")
+
+
+def test_rpr102_fold_in_is_not_consumption():
+    # the simulator salts ONE key with three different salts — clean
+    src = ("import jax\n"
+           "def salted(key, c_idx):\n"
+           "    k1 = jax.random.fold_in(jax.random.fold_in(key, c_idx), 1)\n"
+           "    k2 = jax.random.fold_in(jax.random.fold_in(key, c_idx), 2)\n"
+           "    return jax.random.uniform(k1), jax.random.uniform(k2)\n")
+    assert "RPR102" not in ids_of(src, "src/repro/core/x.py")
+
+
+def test_rpr103_numpy_on_tracers():
+    assert_triple(
+        "RPR103", "src/repro/core/x.py",
+        bad=("import jax\n"
+             "import numpy as np\n"
+             "@jax.jit\n"
+             "def f(x):\n"
+             "    return np.sort(x)\n"),
+        # numpy on host-side statics is fine (sweep_simulated's axis reads)
+        clean=("import jax\n"
+               "import jax.numpy as jnp\n"
+               "import numpy as np\n"
+               "@jax.jit\n"
+               "def f(x, n: int):\n"
+               "    scale = np.log(n)\n"
+               "    return jnp.sort(x) * scale\n"))
+
+
+def test_rpr104_f64_in_scan():
+    assert_triple(
+        "RPR104", "src/repro/core/x.py",
+        bad=("import jax\n"
+             "import jax.numpy as jnp\n"
+             "@jax.jit\n"
+             "def f(x):\n"
+             "    return x.astype(jnp.float64)\n"),
+        # host-side float64 differencing (ArrivalProcess.from_trace) is
+        # not jit-reachable and must stay legal
+        clean=("import numpy as np\n"
+               "def from_trace(ts):\n"
+               "    t = np.asarray(ts, dtype=np.float64)\n"
+               "    return np.diff(t)\n"))
+
+
+def test_rpr105_host_cast_on_tracer():
+    assert_triple(
+        "RPR105", "src/repro/calibrate/x.py",
+        bad=("import jax\n"
+             "@jax.jit\n"
+             "def f(x):\n"
+             "    return float(x) * 2\n"),
+        # int() on a static argname is the simulator's `p = int(params.p)`
+        clean=("import jax, functools\n"
+               "@functools.partial(jax.jit, static_argnames=('p',))\n"
+               "def f(x, p):\n"
+               "    return x * int(p)\n"))
+
+
+# --------------------------------------------------------------------------
+# pallas rules
+# --------------------------------------------------------------------------
+
+_KREL = "src/repro/kernels/foo/kernel.py"
+
+
+def test_rpr201_compiler_params_via_compat():
+    assert_triple(
+        "RPR201", _KREL,
+        bad=("from jax.experimental import pallas as pl\n"
+             "def f(a, k):\n"
+             "    return pl.pallas_call(k, grid=(4,),\n"
+             "        compiler_params=dict(dimension_semantics=('parallel',)),\n"
+             "        interpret=False)(a)\n"),
+        clean=("from jax.experimental import pallas as pl\n"
+               "from repro.compat import tpu_compiler_params\n"
+               "def f(a, k):\n"
+               "    return pl.pallas_call(k, grid=(4,),\n"
+               "        compiler_params=tpu_compiler_params(\n"
+               "            dimension_semantics=('parallel',)),\n"
+               "        interpret=False)(a)\n"))
+
+
+def test_rpr202_index_map_arity():
+    assert_triple(
+        "RPR202", _KREL,
+        bad=("from jax.experimental import pallas as pl\n"
+             "def f(a, k, n):\n"
+             "    assert n % 4 == 0\n"
+             "    grid = (n // 4, 2)\n"
+             "    spec = pl.BlockSpec((4, 4), lambda i: (i, 0))\n"
+             "    return pl.pallas_call(k, grid=grid, in_specs=[spec],\n"
+             "        out_specs=spec, interpret=False)(a)\n"),
+        # bound defaults (GQA n_rep=n_rep) do NOT count toward arity
+        clean=("from jax.experimental import pallas as pl\n"
+               "def f(a, k, n, n_rep):\n"
+               "    assert n % 4 == 0\n"
+               "    grid = (n // 4, 2)\n"
+               "    spec = pl.BlockSpec(\n"
+               "        (4, 4), lambda i, j, n_rep=n_rep: (i // n_rep, j))\n"
+               "    return pl.pallas_call(k, grid=grid, in_specs=[spec],\n"
+               "        out_specs=spec, interpret=False)(a)\n"))
+
+
+def test_rpr202_counts_scalar_prefetch():
+    # PrefetchScalarGridSpec: arity = len(grid) + num_scalar_prefetch
+    src = ("from jax.experimental import pallas as pl\n"
+           "from jax.experimental.pallas import tpu as pltpu\n"
+           "def f(a, k, ids):\n"
+           "    grid = (4, 2)\n"
+           "    return pl.pallas_call(k,\n"
+           "        grid_spec=pltpu.PrefetchScalarGridSpec(\n"
+           "            num_scalar_prefetch=1,\n"
+           "            grid=grid,\n"
+           "            in_specs=[pl.BlockSpec((1, 4),\n"
+           "                lambda i, j, ids_ref: (i, 0))],\n"
+           "            out_specs=pl.BlockSpec((1, 4),\n"
+           "                lambda i, j: (i, 0))),\n"
+           "        interpret=False)(ids, a)\n")
+    findings = [f for f in sc.check_source(src, _KREL)
+                if f.rule_id == "RPR202"]
+    assert len(findings) == 1          # only the 2-arg out_specs lambda
+    assert findings[0].line == 12
+
+
+def test_rpr203_grid_divisibility():
+    assert_triple(
+        "RPR203", _KREL,
+        bad=("from jax.experimental import pallas as pl\n"
+             "def f(a, k, n):\n"
+             "    grid = (n // 4,)\n"
+             "    spec = pl.BlockSpec((4,), lambda i: (i,))\n"
+             "    return pl.pallas_call(k, grid=grid, in_specs=[spec],\n"
+             "        out_specs=spec, interpret=False)(a)\n"),
+        clean=("from jax.experimental import pallas as pl\n"
+               "def f(a, k, n):\n"
+               "    assert n % 4 == 0, n\n"
+               "    grid = (n // 4,)\n"
+               "    spec = pl.BlockSpec((4,), lambda i: (i,))\n"
+               "    return pl.pallas_call(k, grid=grid, in_specs=[spec],\n"
+               "        out_specs=spec, interpret=False)(a)\n"))
+
+
+def test_rpr204_interpret_plumbing():
+    assert_triple(
+        "RPR204", _KREL,
+        bad=("from jax.experimental import pallas as pl\n"
+             "def f(a, k):\n"
+             "    return pl.pallas_call(k, grid=(4,))(a)\n"),
+        clean=("from jax.experimental import pallas as pl\n"
+               "def f(a, k, interpret=False):\n"
+               "    return pl.pallas_call(k, grid=(4,),\n"
+               "        interpret=interpret)(a)\n"))
+
+
+def test_real_kernels_are_clean():
+    for kernel in sorted(
+            (ROOT / "src" / "repro" / "kernels").glob("*/kernel.py")):
+        rel = kernel.relative_to(ROOT).as_posix()
+        findings = [f for f in sc.check_source(kernel.read_text(), rel)
+                    if not f.suppressed]
+        assert not findings, (
+            f"{rel}:\n" + "\n".join(f.render() for f in findings))
+
+
+# --------------------------------------------------------------------------
+# eval_shape contract (RPR301)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def live_snapshot():
+    return contract.snapshot()
+
+
+def test_contract_matches_committed(live_snapshot):
+    findings = contract.check(live=live_snapshot)
+    assert not findings, "\n".join(f.render() for f in findings)
+
+
+def test_contract_catches_seeded_shape_regression(tmp_path, live_snapshot):
+    doc = json.loads(contract.CONTRACT_PATH.read_text())
+    # seed a regression: pretend the batch histogram gained an axis and
+    # the response sum was promoted to f64
+    probe = doc["probes"]["simulate_fork_join_batch"]
+    probe[".hist"] = "float32[3,2,256]"
+    probe[".sum_response"] = "float64[3]"
+    seeded = tmp_path / "shape_contract.json"
+    seeded.write_text(json.dumps(doc))
+    findings = contract.check(seeded, live=live_snapshot)
+    assert len(findings) == 2
+    assert all(f.rule_id == "RPR301" for f in findings)
+    messages = " ".join(f.message for f in findings)
+    assert "float64[3]" in messages and "float32[3,2,256]" in messages
+
+
+def test_contract_catches_removed_probe(tmp_path, live_snapshot):
+    doc = json.loads(contract.CONTRACT_PATH.read_text())
+    doc["probes"]["simulate_fork_join"][".p99"] = "float32[]"
+    seeded = tmp_path / "shape_contract.json"
+    seeded.write_text(json.dumps(doc))
+    findings = contract.check(seeded, live=live_snapshot)
+    assert any("disappeared" in f.message for f in findings)
+
+
+def test_contract_missing_file_is_a_finding(tmp_path):
+    findings = contract.check(tmp_path / "nope.json", live={})
+    assert findings and findings[0].rule_id == "RPR301"
