@@ -30,13 +30,15 @@ import sys
 # metric name -> (kind, allowance); kind "higher" = bigger is better
 GATES = {
     "queries_per_s": ("higher", None),
+    "queries_per_s_jsq": ("higher", None),
     "queries_fitted_per_s": ("higher", None),
+    "scenarios_per_s": ("higher", None),
     "peak_mem_streaming_bytes": ("exact-max", 0.0),
     "peak_mem_measured_bytes": ("max", 0.10),
 }
 
 BASELINE_FILES = ("BENCH_streaming.json", "BENCH_calibrate.json",
-                  "BENCH_replicated.json")
+                  "BENCH_replicated.json", "BENCH_sharded.json")
 
 
 def compare(baseline: dict, fresh: dict, name: str,

@@ -19,7 +19,7 @@ import traceback
 
 from benchmarks import (calibrate_bench, kernels_bench, paper_tables,
                         partitioning_bench, replicated_bench,
-                        streaming_bench, sweep_bench)
+                        sharded_bench, streaming_bench, sweep_bench)
 
 BENCHES = [
     paper_tables.bench_table2_query_lengths,
@@ -44,6 +44,7 @@ BENCHES = [
     sweep_bench.bench_sweep_simulated,
     streaming_bench.bench_streaming_sweep,
     replicated_bench.bench_replicated_sweep,
+    sharded_bench.bench_sharded_sweep,
     calibrate_bench.bench_calibrate,
     partitioning_bench.bench_partitioning,
 ]

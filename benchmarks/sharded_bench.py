@@ -1,0 +1,151 @@
+"""Scenario-sharded sweep benchmark: the million-scenario planning path.
+
+Measures `sweep_analytical`/`sweep_simulated` with a 1-D ("scenario",)
+mesh from `repro.launch.mesh.make_sweep_mesh` over 8 XLA devices:
+
+* analytical — a 1,000,000-scenario (L,P,C,D,H,R) grid evaluated as one
+  shard_map program (the SNIPPETS.md 38M-qps global planning exercise
+  needs surfaces of this size);
+* simulated — a replicated fused-engine grid streamed with each device
+  owning a scenario shard.
+
+The device count must be fixed BEFORE jax initializes, so the harness
+entry (`bench_sharded_sweep`) re-runs this module as a CHILD process
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and reads
+the record it writes.  On a single-core CI host the 8 virtual devices
+timeshare one core — the numbers pin the *sharded program's* throughput
+trajectory (vs its own committed baseline on the same runner class),
+they do not claim an 8x speedup.  Results go to ``BENCH_sharded.json``
+for the bench-regression gate (``queries_per_s`` and ``scenarios_per_s``
+are both gated "higher").
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import subprocess
+import sys
+import time
+
+from benchmarks import _util
+
+_DEVICES = 8
+_TIMING_PASSES = 3
+
+
+def bench_sharded_sweep(rows):
+    out = _util.bench_output_path("BENCH_sharded.json")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count="
+                        f"{_DEVICES}").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    env.get("PYTHONPATH", "")) if p)
+    r = subprocess.run([sys.executable, "-m", "benchmarks.sharded_bench"],
+                       env=env, capture_output=True, text=True,
+                       timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"sharded bench child failed\nSTDOUT:\n{r.stdout}\n"
+            f"STDERR:\n{r.stderr}")
+    record = json.loads(out.read_text())
+    rows.append((
+        "sharded_sweep", record["wall_seconds"] * 1e6,
+        f"{record['n_scenarios_analytical']} analytic scenarios on "
+        f"{_DEVICES} devices, {record['scenarios_per_s'] / 1e6:.2f}M "
+        f"scen/s; simulated {record['n_scenarios_simulated']} scen x "
+        f"{record['n_queries']} q sharded: "
+        f"{record['queries_per_s'] / 1e6:.2f}M queries/s; -> {out}"))
+
+
+def _main() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import capacity, sweep
+    from repro.launch.mesh import make_sweep_mesh
+
+    assert len(jax.devices()) == _DEVICES, jax.devices()
+    mesh = make_sweep_mesh()
+
+    # --- analytical: 100 x 4 x 5 x 5 x 20 x 5 = 1,000,000 scenarios ----
+    big = sweep.SweepGrid.build(
+        lam=jnp.linspace(10.0, 120.0, 100),
+        p=jnp.asarray([50.0, 100.0, 200.0, 400.0]),
+        cpu=jnp.linspace(1.0, 3.0, 5),
+        disk=jnp.linspace(1.0, 3.0, 5),
+        hit=jnp.linspace(0.05, 0.95, 20),
+        r=jnp.asarray([1.0, 2.0, 4.0, 8.0, 16.0]),
+        base=capacity.TABLE5_PARAMS,
+        result_cache=(0.2, 2e-3),
+    )
+    n_ana = big.n_scenarios
+
+    def run_ana():
+        res = sweep.sweep_analytical(big, mesh=mesh)
+        jax.block_until_ready(res.response_upper)
+        return res
+
+    run_ana()                                   # compile + warm
+    times = []
+    for _ in range(_TIMING_PASSES):
+        t0 = time.perf_counter()
+        run_ana()
+        times.append(time.perf_counter() - t0)
+    dt_ana = statistics.median(times)
+
+    # --- simulated: 32-scenario replicated slab, sharded 4 per device --
+    sim_grid = sweep.SweepGrid.build(
+        lam=jnp.linspace(30.0, 90.0, 16),
+        p=jnp.asarray([8.0]),
+        hit=jnp.asarray([0.17, 0.5]),
+        r=jnp.asarray([2.0]),
+        base=capacity.TABLE5_PARAMS,
+        broker_from_p=False,
+        result_cache=(0.2, 2e-3),
+    )
+    n_sim = sim_grid.n_scenarios
+    # quick stays large: the sharded path pays ~5s of per-call trace/
+    # dispatch overhead, and a small horizon would sink queries_per_s
+    # far below the full-size baseline the regression gate compares to
+    n_q = _util.scale_queries(200_000, 150_000)
+
+    def run_sim():
+        res = sweep.sweep_simulated(
+            sim_grid, jax.random.PRNGKey(0), n_queries=n_q,
+            chunk_size=4096, mesh=mesh)
+        jax.block_until_ready(res.mean)
+        return res
+
+    run_sim()                                   # compile + warm
+    times = []
+    for _ in range(_TIMING_PASSES):
+        t0 = time.perf_counter()
+        run_sim()
+        times.append(time.perf_counter() - t0)
+    dt_sim = statistics.median(times)
+
+    record = {
+        "bench": "sharded_sweep",
+        "n_devices": _DEVICES,
+        "n_scenarios_analytical": n_ana,
+        "wall_seconds_analytical": dt_ana,
+        "scenarios_per_s": n_ana / dt_ana,
+        "n_scenarios_simulated": n_sim,
+        "n_queries": n_q,
+        "chunk_size": 4096,
+        "r": 2,
+        "routing": "round_robin",
+        "wall_seconds": dt_sim,
+        "queries_per_s": n_sim * n_q / dt_sim,
+    }
+    out = _util.bench_output_path("BENCH_sharded.json")
+    out.write_text(json.dumps(record, indent=2) + "\n")
+
+
+if __name__ == "__main__":
+    _main()

@@ -201,6 +201,7 @@ def plan_over_grid(
     n_queries: Optional[int] = None,
     profile=None,
     profile_bin_seconds: float = 3600.0,
+    mesh=None,
     **sim_kwargs,
 ):
     """Section-6 what-if analysis over a whole configuration grid at once.
@@ -232,13 +233,17 @@ def plan_over_grid(
     ``lam / r`` via Eq 7/8, simulated under a real routing policy
     (``routing="jsq"`` etc. passes through ``sim_kwargs``).  The frontier
     then answers "replicate, upgrade, or cache?" in one extraction.
+
+    ``mesh`` (a 1-D mesh from `repro.launch.mesh.make_sweep_mesh`) shards
+    the scenario axis of either surface across devices — the
+    million-scenario planning path of ``examples/global_sweep.py``.
     """
     if simulate:
         key = jax.random.PRNGKey(0) if key is None else key
         result = sweep.sweep_simulated(
             grid, key, n_queries=20_000 if n_queries is None else n_queries,
             profile=profile, profile_bin_seconds=profile_bin_seconds,
-            **sim_kwargs)
+            mesh=mesh, **sim_kwargs)
     else:
         if (profile is not None or key is not None
                 or n_queries is not None or sim_kwargs):
@@ -246,7 +251,7 @@ def plan_over_grid(
                 "profile/key/n_queries/simulation kwargs only take effect "
                 "with simulate=True; the analytic path would silently "
                 "ignore them")
-        result = sweep.sweep_analytical(grid)
+        result = sweep.sweep_analytical(grid, mesh=mesh)
     frontier = sweep.extract_frontier(result, slo_seconds, cost_fn=cost_fn,
                                       quantile=quantile)
     return result, frontier

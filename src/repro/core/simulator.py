@@ -47,13 +47,23 @@ replicas, each a full broker + p-server fork-join.  Routing policies:
     rides in the scan carry, and each query picks the replica whose
     slowest server frees up first.
 
-The replicated network still runs as masked max-plus scans over the FULL
-arrival stream: a query routed elsewhere contributes zero service to this
-replica's queues, and because arrivals are nondecreasing a zero-service
-"phantom" (C_i = max(A_i, C_{i-1})) can never delay a later real query —
-max(A_j, max(A_i, C)) = max(A_j, C) for A_j >= A_i.  So all
-S x r x (p + 1) sample paths stay on the one associative-scan/Pallas
-path, and peak memory is S x r x p x chunk floats.
+The replicated network runs FUSED by default (``replica_impl="fused"``):
+routing choices become an integer assignment per query, each chunk is
+compacted so every replica's queries are contiguous (a pure reshape for
+round-robin when chunk % r == 0; a stable sort otherwise), and ONE
+segmented (max, +) scan per queue level covers all r replicas — each
+query is scanned once on its own replica's queues, so per-chunk work is
+S x p x chunk elements *independent of r* and the working set shrinks by
+the same factor.  Per-replica carries seed the segment heads and are
+read back off the segment ends, so the streaming chunk chain is
+unchanged.  ``replica_impl="masked"`` keeps the original oracle: every
+replica re-scans the FULL stream with zero-service "phantoms" for
+queries routed elsewhere (a phantom C_i = max(A_i, C_{i-1}) can never
+delay a later real query since arrivals are nondecreasing —
+max(A_j, max(A_i, C)) = max(A_j, C) for A_j >= A_i).  The same argument
+shows the two implementations produce identical sample paths in exact
+arithmetic; the masked path costs ~r x more and survives only as the
+equality-test reference.
 
 An optional broker-level result cache (``result_cache=(hit_r, s_cache)``)
 short-circuits service: each query is a cache hit with probability hit_r
@@ -100,6 +110,7 @@ Array = jax.Array
 __all__ = [
     "maxplus_combine",
     "fcfs_completion_times",
+    "fcfs_completion_times_routed",
     "ArrivalProcess",
     "SimResult",
     "simulate_fork_join",
@@ -353,11 +364,17 @@ def _clamp_chunk_for_profile(proc: ArrivalProcess, chunk: int) -> int:
     if proc.trace_gaps is not None or proc.n_bins == 1:
         return chunk
     try:
-        pos = proc.rates[proc.rates > 0]
-        min_rate = float(jnp.min(pos)) if pos.size else 0.0
+        # where-mask (not boolean indexing) so tracer rates fail on the
+        # float() below with ConcretizationTypeError — under an ambient
+        # trace (eval_shape, shard_map) the clamp deliberately no-ops
+        # and callers clamp host-side (see repro.core.sweep)
+        pos = jnp.where(proc.rates > 0, proc.rates, jnp.inf)
+        min_rate = float(jnp.min(pos))
         bin_s = float(proc.bin_seconds)
     except jax.errors.ConcretizationTypeError:
         return chunk
+    if not math.isfinite(min_rate):
+        min_rate = 0.0
     if min_rate <= 0.0:
         return chunk
     clamped = max(_MIN_PROFILE_CHUNK, int(min_rate * bin_s))
@@ -371,24 +388,22 @@ def _clamp_chunk_for_profile(proc: ArrivalProcess, chunk: int) -> int:
     return chunk
 
 
-def _routing_mask(routing: str, r: int, key: Array, c_idx, gidx,
-                  n_scen: int, chunk: int, dtype) -> Optional[Array]:
-    """(S, r, chunk) one-hot replica assignment for oblivious policies.
+def _routing_assign(routing: str, r: int, key: Array, c_idx, gidx,
+                    n_scen: int, chunk: int) -> Optional[Array]:
+    """(S, chunk) integer replica assignment for oblivious policies.
 
-    Returns None for "jsq" (its mask needs the carried work state and is
-    built inside the scan body).  Round-robin assigns by GLOBAL query
-    index, so the assignment is invariant to how the stream is chunked.
+    Returns None for "jsq" (its choice needs the carried work state and
+    is computed inside the scan body).  Round-robin assigns by GLOBAL
+    query index, so the assignment is invariant to how the stream is
+    chunked.
     """
     if routing == "round_robin":
-        assign = (gidx % r)[None, :]                        # (1, chunk)
-    elif routing == "random":
+        return jnp.broadcast_to((gidx % r)[None, :], (n_scen, chunk))
+    if routing == "random":
         k_route = jax.random.fold_in(
             jax.random.fold_in(key, c_idx), _ROUTE_SALT)
-        assign = jax.random.randint(k_route, (n_scen, chunk), 0, r)
-    else:
-        return None
-    mask = (assign[:, None, :] == jnp.arange(r)[None, :, None])
-    return jnp.broadcast_to(mask.astype(dtype), (n_scen, r, chunk))
+        return jax.random.randint(k_route, (n_scen, chunk), 0, r)
+    return None
 
 
 def _jsq_route(w: Array, gaps: Array, services: Array, live: Array,
@@ -402,9 +417,10 @@ def _jsq_route(w: Array, gaps: Array, services: Array, live: Array,
     frees first (the join is what the query waits for), and add the
     query's drawn per-server service times to that replica's trackers.
     ``live`` zeroes the work deposit for queries that never reach a
-    replica (result-cache hits).  Returns ((S, r, chunk) one-hot mask,
-    updated work state) — the work state rides in the outer scan carry,
-    so JSQ pressure persists across chunks.
+    replica (result-cache hits).  Returns ((S, chunk) integer replica
+    choice, updated work state) — the work state rides in the outer scan
+    carry, so JSQ pressure persists across chunks; both the masked and
+    the fused replicated paths consume the same choice stream.
     """
 
     def step(w, inp):
@@ -414,17 +430,89 @@ def _jsq_route(w: Array, gaps: Array, services: Array, live: Array,
         choice = jnp.argmin(backlog, axis=-1)    # (S,)
         oh = (choice[:, None] == jnp.arange(r)[None, :]).astype(dtype)
         w = w + (oh * lv[:, None])[:, :, None] * svc[:, None, :]
-        return w, oh
+        return w, choice
 
     xs = (gaps.T, jnp.moveaxis(services, -1, 0), live.T)
-    w, oh_seq = jax.lax.scan(step, w, xs)        # oh_seq: (chunk, S, r)
-    return jnp.moveaxis(oh_seq, 0, -1), w
+    w, choice_seq = jax.lax.scan(step, w, xs)    # choice_seq: (chunk, S)
+    return choice_seq.T, w
+
+
+def _fcfs_segmented(arrivals: Array, services: Array, flags: Array,
+                    carry_per_q: Optional[Array], impl: str) -> Array:
+    """FCFS completions of many queues packed as contiguous segments.
+
+    The fused replicated engine compacts each chunk's queries into
+    per-replica contiguous runs along the last axis; ``flags`` marks the
+    first element of each run.  A segmented (max, +) scan then computes
+    every queue's sample path in ONE pass over chunk elements — this is
+    the kernel-level fusion that replaces r masked re-scans of the full
+    stream.  ``carry_per_q`` holds each element's queue carry (the
+    completion time of that queue's prior work), pre-composed at segment
+    heads: seeding the head and resetting there is exactly seeding the
+    whole segment.  ``impl`` picks `jax.lax.associative_scan` ("xla") or
+    the Pallas segmented kernel ("pallas"; interpret mode off-TPU).
+    """
+    a = arrivals + services
+    b = services
+    flags = jnp.broadcast_to(flags, a.shape)
+    if carry_per_q is not None:
+        a = jnp.where(flags, jnp.maximum(a, carry_per_q + b), a)
+    if impl == "pallas":
+        from repro.kernels.maxplus_scan import ops as mp_ops
+        out_a, _ = mp_ops.maxplus_segment_scan(a, b, flags)
+        return out_a
+    from repro.kernels.maxplus_scan.ref import maxplus_segment_combine
+    out_a, _, _ = jax.lax.associative_scan(
+        maxplus_segment_combine, (a, b, flags), axis=-1)
+    return out_a
+
+
+def fcfs_completion_times_routed(
+    arrivals: Array, services: Array, assign: Array, r: int,
+    *, impl: str = "xla", carry: Optional[Array] = None,
+) -> tuple[Array, Array]:
+    """Completions of r parallel FCFS queues with per-query routing.
+
+    arrivals: (..., n) nondecreasing; services: (..., n) positive;
+    assign: (..., n) integers in [0, r) — each query joins the FCFS queue
+    of its assigned replica, in arrival order.  carry: optional (..., r)
+    completion time of each queue's prior work.
+
+    Fused route-compaction (one scan over n elements instead of r masked
+    re-scans over all n): stable-sort by assignment so each queue is a
+    contiguous segment, seed segment heads from the carry, run one
+    segmented (max, +) scan, and scatter completions back to arrival
+    order.  Returns ``(completions (..., n), new_carry (..., r))`` where
+    empty queues keep their old carry.
+    """
+    if r < 1:
+        raise ValueError(f"need at least one queue; got r={r}")
+    if carry is None:
+        carry = jnp.full(assign.shape[:-1] + (r,), -jnp.inf,
+                         arrivals.dtype)
+    order = jnp.argsort(assign, axis=-1, stable=True)
+    asg_s = jnp.take_along_axis(assign, order, axis=-1)
+    flags = jnp.concatenate(
+        [jnp.ones_like(asg_s[..., :1], dtype=bool),
+         asg_s[..., 1:] != asg_s[..., :-1]], axis=-1)
+    counts = jnp.sum(
+        assign[..., None, :] == jnp.arange(r)[:, None], axis=-1)
+    ends = jnp.clip(jnp.cumsum(counts, axis=-1) - 1, 0, None)
+    arr_s = jnp.take_along_axis(arrivals, order, axis=-1)
+    svc_s = jnp.take_along_axis(services, order, axis=-1)
+    carry_q = jnp.take_along_axis(carry, asg_s, axis=-1)
+    done_s = _fcfs_segmented(arr_s, svc_s, flags, carry_q, impl)
+    new_carry = jnp.where(counts > 0,
+                          jnp.take_along_axis(done_s, ends, axis=-1),
+                          carry)
+    inv = jnp.argsort(order, axis=-1, stable=True)
+    return jnp.take_along_axis(done_s, inv, axis=-1), new_carry
 
 
 @functools.partial(
     jax.jit, static_argnames=("n_queries", "p", "mode", "impl", "chunk",
                               "warmup_fraction", "hist_bins", "tap_size",
-                              "r", "routing", "has_cache"))
+                              "r", "routing", "has_cache", "replica_impl"))
 def _simulate_stream(
     key: Array,
     proc: ArrivalProcess,
@@ -442,12 +530,21 @@ def _simulate_stream(
     r: int = 1,
     routing: str = "round_robin",
     has_cache: bool = False,
+    replica_impl: str = "fused",
 ) -> SimResult:
     """The one chunked engine behind every fork-join entry point.
 
     ``r``/``routing``/``has_cache`` are static: the single-replica,
     no-cache compilation is EXACTLY the pre-replication program (same
     draws, same op order, bit-identical statistics).
+
+    ``replica_impl`` selects the r > 1 engine: "fused" (default) runs the
+    route-compacted path — each query scanned ONCE on its own replica's
+    queues, ~r x less work — while "masked" keeps the original
+    full-stream masked re-scans as a cross-check oracle.  Both consume
+    the same routing choices and draws, so their sample paths agree
+    query-for-query (exactly in exact arithmetic; see the equality tests
+    in tests/test_replication.py).
     """
     n_scen = proc.rates.shape[0]
     n_chunks = -(-n_queries // chunk)
@@ -523,6 +620,9 @@ def _simulate_stream(
             rate = jnp.maximum(proc.rate_at(t_origin), 1e-30)
             gaps = u_gaps / rate[:, None]
         arrivals = jnp.cumsum(gaps, axis=-1)   # relative to chunk origin
+        # the rebase shift below; captured BEFORE the fused branches
+        # permute `arrivals` into replica-compacted layout
+        last_arrival = arrivals[:, -1]
         gidx = c_idx * chunk + col
 
         if has_cache:
@@ -543,6 +643,13 @@ def _simulate_stream(
             miss_f = None
 
         s_broker_c = u_brk * s_broker[:, None]
+        # `perm` maps chunk-order (S, chunk) arrays into the layout the
+        # fused branches compute in (replica-compacted); None = identity.
+        # All streaming statistics are permutation-invariant (sums,
+        # histogram scatter-adds, the priority-reservoir tap), so the
+        # epilogue only needs mf / priorities / is_hit permuted the same
+        # way as the responses.
+        perm = None
         if r == 1:
             # single replica: EXACTLY the pre-replication program (the
             # miss mask is the only difference, and only with a cache)
@@ -565,18 +672,26 @@ def _simulate_stream(
             w_jsq_new = w_jsq
         else:
             live = miss_f if has_cache else jnp.ones_like(gaps)
-            mask = _routing_mask(routing, r, key, c_idx, gidx, n_scen,
-                                 chunk, dtype)
-            if mask is None:  # jsq: needs the carried work state
-                mask, w_jsq_new = _jsq_route(w_jsq, gaps, services, live,
-                                             r, dtype)
+            assign = _routing_assign(routing, r, key, c_idx, gidx,
+                                     n_scen, chunk)
+            if assign is None:  # jsq: needs the carried work state
+                assign, w_jsq_new = _jsq_route(w_jsq, gaps, services,
+                                               live, r, dtype)
             else:
                 w_jsq_new = w_jsq
+
+        if r == 1:
+            pass
+        elif replica_impl == "masked":
+            # Reference oracle: every replica scans the FULL stream;
+            # phantom (zero-service) entries cannot delay later real
+            # queries (see module doc).  ~r x redundant work — kept for
+            # the fused-vs-masked equality tests.
+            mask = (assign[:, None, :]
+                    == jnp.arange(r)[None, :, None]).astype(dtype)
             # hits occupy their replica's cache queue; only misses enter
             # its broker + index servers
             mask_srv = mask * miss_f[:, None, :] if has_cache else mask
-            # every replica scans the FULL stream; phantom (zero-service)
-            # entries cannot delay later real queries (see module doc)
             arr_r = jnp.broadcast_to(arrivals[:, None, :],
                                      (n_scen, r, chunk))
             if has_cache:
@@ -600,8 +715,103 @@ def _simulate_stream(
             server0 = jnp.sum(completions[:, :, 0, :] * mask_srv, axis=1)
             c_brk_new = broker_done_r[:, :, -1]
             c_srv_new = completions[:, :, :, -1]
+        elif routing == "round_robin" and chunk % r == 0:
+            # Fused fast path: with chunk % r == 0 the round-robin
+            # assignment is col % r every chunk, so compaction into
+            # per-replica contiguous runs is a pure reshape — no sort.
+            # Each query is scanned ONCE on its own replica's queues:
+            # chunk broker elements + p * chunk server elements total,
+            # r x less work than the masked oracle.
+            ct = chunk // r
+
+            def to_rep(x):                       # (S, chunk) -> (S, r, ct)
+                return x.reshape(n_scen, ct, r).swapaxes(-1, -2)
+
+            def perm(x):
+                return to_rep(jnp.broadcast_to(x, (n_scen, chunk))
+                              ).reshape(n_scen, chunk)
+
+            arr_q = to_rep(arrivals)
+            svc_q = services.reshape(n_scen, p, ct, r).transpose(0, 3, 1, 2)
+            brk_q = to_rep(s_broker_c)
+            if has_cache:
+                miss_q = to_rep(miss_f)
+                brk_q = brk_q * miss_q
+                svc_q = svc_q * miss_q[:, :, None, :]
+                cache_done_q = fcfs_completion_times(
+                    arr_q, to_rep(t_cache), impl=impl, carry=c_cache)
+                cache_done = cache_done_q.reshape(n_scen, chunk)
+                c_cache_new = cache_done_q[..., -1]
+            broker_done_q = fcfs_completion_times(arr_q, brk_q, impl=impl,
+                                                  carry=c_brk)
+            fork = jnp.broadcast_to(broker_done_q[:, :, None, :],
+                                    (n_scen, r, p, ct))
+            completions = fcfs_completion_times(fork, svc_q, impl=impl,
+                                                carry=c_srv)
+            broker_done = broker_done_q.reshape(n_scen, chunk)
+            join = jnp.max(completions, axis=2).reshape(n_scen, chunk)
+            server0 = completions[:, :, 0, :].reshape(n_scen, chunk)
+            c_brk_new = broker_done_q[..., -1]
+            c_srv_new = completions[..., -1]
+            arrivals = arr_q.reshape(n_scen, chunk)
+        else:
+            # Fused general path (random, jsq, uneven round-robin):
+            # stable-sort by replica so each replica's queries form a
+            # contiguous segment, seed segment heads from the carries,
+            # and run ONE segmented (max, +) scan per queue level.
+            # Stable sort preserves arrival order within a replica, so
+            # each segment IS that replica's FCFS arrival sequence.
+            order = jnp.argsort(assign, axis=-1, stable=True)
+            asg_s = jnp.take_along_axis(assign, order, axis=-1)
+            flags = jnp.concatenate(
+                [jnp.ones_like(asg_s[:, :1], dtype=bool),
+                 asg_s[:, 1:] != asg_s[:, :-1]], axis=-1)
+            counts = jnp.sum(
+                assign[:, None, :] == jnp.arange(r)[None, :, None],
+                axis=-1)                                  # (S, r)
+            ends = jnp.clip(jnp.cumsum(counts, axis=-1) - 1, 0, None)
+
+            def perm(x):
+                return jnp.take_along_axis(
+                    jnp.broadcast_to(x, (n_scen, chunk)), order, axis=-1)
+
+            arrivals = perm(arrivals)
+            svc_s = jnp.take_along_axis(services, order[:, None, :],
+                                        axis=-1)
+            brk_s = perm(s_broker_c)
+            if has_cache:
+                miss_s = perm(miss_f)
+                brk_s = brk_s * miss_s
+                svc_s = svc_s * miss_s[:, None, :]
+                cache_done = _fcfs_segmented(
+                    arrivals, perm(t_cache), flags,
+                    jnp.take_along_axis(c_cache, asg_s, axis=-1), impl)
+                c_cache_new = jnp.where(
+                    counts > 0,
+                    jnp.take_along_axis(cache_done, ends, axis=-1),
+                    c_cache)
+            broker_done = _fcfs_segmented(
+                arrivals, brk_s, flags,
+                jnp.take_along_axis(c_brk, asg_s, axis=-1), impl)
+            fork = jnp.broadcast_to(broker_done[:, None, :],
+                                    (n_scen, p, chunk))
+            carry_srv_q = jnp.take_along_axis(
+                jnp.swapaxes(c_srv, 1, 2), asg_s[:, None, :], axis=-1)
+            completions = _fcfs_segmented(
+                fork, svc_s, flags[:, None, :], carry_srv_q, impl)
+            join = jnp.max(completions, axis=1)
+            server0 = completions[:, 0, :]
+            c_brk_new = jnp.where(
+                counts > 0,
+                jnp.take_along_axis(broker_done, ends, axis=-1), c_brk)
+            srv_ends = jnp.take_along_axis(completions, ends[:, None, :],
+                                           axis=-1)       # (S, p, r)
+            c_srv_new = jnp.where(counts[:, :, None] > 0,
+                                  jnp.swapaxes(srv_ends, 1, 2), c_srv)
 
         if has_cache:
+            if perm is not None:
+                is_hit = perm(is_hit)
             resp_cache = cache_done - arrivals
             response = jnp.where(is_hit, resp_cache, join - arrivals)
             broker_res = jnp.where(is_hit, resp_cache,
@@ -615,6 +825,8 @@ def _simulate_stream(
             server_res = server0 - broker_done
             c_cache_new = c_cache
         mf = ((gidx >= n_warm) & (gidx < n_queries)).astype(dtype)[None, :]
+        if perm is not None:
+            mf = perm(mf)
         count = count + jnp.broadcast_to(jnp.sum(mf, -1), (n_scen,))
         s_resp = s_resp + jnp.sum(response * mf, -1)
         ss_resp = ss_resp + jnp.sum(response * response * mf, -1)
@@ -637,6 +849,8 @@ def _simulate_stream(
             k_tap = jax.random.fold_in(
                 jax.random.fold_in(key, c_idx), _TAP_SALT)
             pri = jax.random.uniform(k_tap, (n_scen, chunk), dtype)
+            if perm is not None:
+                pri = perm(pri)
             pri = jnp.where(mf > 0, pri, -jnp.inf)
             cat_pri = jnp.concatenate([tap_pri, pri], axis=-1)
             cat_val = jnp.concatenate(
@@ -645,7 +859,7 @@ def _simulate_stream(
             tap_pri, idx = jax.lax.top_k(cat_pri, tap_size)
             tap_val = jnp.take_along_axis(cat_val, idx, axis=-1)
 
-        shift = arrivals[:, -1]
+        shift = last_arrival
         new_carry = ((t_origin + shift) % period,
                      c_brk_new - shift[:, None],
                      c_srv_new - shift[:, None, None],
@@ -684,12 +898,16 @@ def _cache_args(result_cache) -> tuple[Array, Array, bool]:
     return jnp.asarray(hit_r), jnp.asarray(s_cache), True
 
 
-def _check_topology(r: int, routing: str) -> None:
+def _check_topology(r: int, routing: str,
+                    replica_impl: str = "fused") -> None:
     if r < 1:
         raise ValueError(f"need at least one replica; got r={r}")
     if routing not in ROUTING_POLICIES:
         raise ValueError(f"unknown routing policy {routing!r}; choose "
                          f"one of {ROUTING_POLICIES}")
+    if replica_impl not in ("fused", "masked"):
+        raise ValueError(f"unknown replica_impl {replica_impl!r}; choose "
+                         "'fused' or 'masked'")
 
 
 def simulate_fork_join(
@@ -708,6 +926,7 @@ def simulate_fork_join(
     r: int = 1,
     routing: str = "round_robin",
     result_cache: Optional[tuple[float, float]] = None,
+    replica_impl: str = "fused",
 ) -> SimResult:
     """Simulate the full broker + p-server fork-join network (Fig 8).
 
@@ -727,10 +946,12 @@ def simulate_fork_join(
     the TOTAL arrival rate.  ``result_cache=(hit_r, s_cache)`` adds the
     broker-level result cache of Eq 8: hits are served by their routed
     replica's broker-cache FCFS queue with mean service ``s_cache`` and
-    never fork to its index servers.
+    never fork to its index servers.  ``replica_impl`` picks the
+    replicated engine ("fused" default; "masked" is the re-scan oracle —
+    see :func:`_simulate_stream`).
     """
     p = int(params.p) if p is None else p  # static before tracing
-    _check_topology(r, routing)
+    _check_topology(r, routing, replica_impl)
     cache_hit, cache_service, has_cache = _cache_args(result_cache)
     proc = _as_batch_process(lam)
     _check_trace(proc, n_queries)
@@ -740,7 +961,7 @@ def simulate_fork_join(
                            cache_service, n_queries, p,
                            mode, impl, chunk, warmup_fraction, hist_bins,
                            tap_size, r=r, routing=routing,
-                           has_cache=has_cache)
+                           has_cache=has_cache, replica_impl=replica_impl)
     return jax.tree_util.tree_map(lambda x: x[0], res)
 
 
@@ -760,6 +981,7 @@ def simulate_fork_join_batch(
     r: int = 1,
     routing: str = "round_robin",
     result_cache: Optional[tuple[float, float]] = None,
+    replica_impl: str = "fused",
 ) -> SimResult:
     """S fork-join scenarios in one XLA program; all stats are (S,).
 
@@ -772,10 +994,13 @@ def simulate_fork_join_batch(
     row axis of `maxplus_scan`, so all S * r * (p + 1) sample paths run
     as a single Pallas grid.
 
-    Peak memory is S * r * p * chunk_size floats — independent of
-    ``n_queries``, which may stream into the millions.
+    Peak memory of the fused replicated engine is S * p * chunk_size
+    floats — independent of ``n_queries`` AND of ``r`` (each query is
+    scanned once, on its own replica); only the carries grow with r, at
+    S * r * p scalars.  The "masked" oracle keeps the original
+    S * r * p * chunk_size law.
     """
-    _check_topology(r, routing)
+    _check_topology(r, routing, replica_impl)
     cache_hit, cache_service, has_cache = _cache_args(result_cache)
     proc = _as_batch_process(lam)
     _check_trace(proc, n_queries)
@@ -784,7 +1009,8 @@ def simulate_fork_join_batch(
     return _simulate_stream(key, proc, params, cache_hit, cache_service,
                             n_queries, p, mode, impl,
                             chunk, warmup_fraction, hist_bins, tap_size,
-                            r=r, routing=routing, has_cache=has_cache)
+                            r=r, routing=routing, has_cache=has_cache,
+                            replica_impl=replica_impl)
 
 
 @functools.partial(jax.jit, static_argnames=("c",))

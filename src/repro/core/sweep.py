@@ -36,7 +36,9 @@ from typing import Callable, Optional, Sequence, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
+from repro import compat
 from repro.core import capacity, queueing, simulator
 from repro.core.arrivals import ArrivalProcess
 from repro.core.queueing import ServerParams
@@ -207,6 +209,21 @@ class SweepResult:
         return jnp.broadcast_to(surf, self.grid.shape)
 
 
+def _check_sweep_mesh(mesh) -> tuple[str, int]:
+    """Validate a scenario-sharding mesh; returns (axis_name, n_devices).
+
+    Both sweep paths shard over ONE named axis (scenarios are
+    embarrassingly parallel), so the mesh must be 1-D — build it with
+    `repro.launch.mesh.make_sweep_mesh`.
+    """
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"scenario sharding needs a 1-D mesh; got axes "
+            f"{tuple(mesh.axis_names)} (build one with "
+            "repro.launch.mesh.make_sweep_mesh)")
+    return mesh.axis_names[0], int(mesh.devices.size)
+
+
 @functools.partial(jax.jit, static_argnames=("result_cache",))
 def _bounds_surface(lam: Array, params: ServerParams,
                     result_cache=None):
@@ -227,22 +244,57 @@ def _bounds_surface(lam: Array, params: ServerParams,
     return lo, hi, util
 
 
-def sweep_analytical(grid: SweepGrid) -> SweepResult:
+def sweep_analytical(grid: SweepGrid, *, mesh=None) -> SweepResult:
     """Evaluate Eq 7/Eq 8 bounds over the whole grid as one jitted call.
 
     Replicated cells are evaluated at the per-replica rate ``lam / r``
     (replication splits arrivals evenly — the paper's linear-gain
     assumption, which `sweep_simulated` cross-checks under real routing).
+
+    ``mesh`` — a 1-D device mesh from `repro.launch.mesh.make_sweep_mesh`
+    — shards the flattened scenario axis across devices with
+    `compat.shard_map`: the bounds are pure elementwise math, so an
+    N-scenario grid splits into N/n_devices-sized shards with zero
+    communication.  The grid is padded (edge-replicated) to a device
+    multiple and the padding sliced off, so any grid size works.  This is
+    how the million-scenario planning surfaces in
+    ``examples/global_sweep.py`` are evaluated.
     """
     lam_rep = grid.lam_replica()
     _, params = grid.broadcast()
     shape = grid.shape
-    lo, hi, util = _bounds_surface(lam_rep, params, grid.result_cache)
+    if mesh is None:
+        lo, hi, util = _bounds_surface(lam_rep, params, grid.result_cache)
+        return SweepResult(
+            grid=grid,
+            response_lower=jnp.broadcast_to(lo, shape),
+            response_upper=jnp.broadcast_to(hi, shape),
+            utilization=jnp.broadcast_to(util, shape),
+        )
+
+    axis, n_dev = _check_sweep_mesh(mesh)
+    n = grid.n_scenarios
+    pad = (-n) % n_dev
+
+    def flat(x):
+        x = jnp.broadcast_to(jnp.asarray(x, jnp.float32), shape).reshape(-1)
+        return jnp.pad(x, (0, pad), mode="edge") if pad else x
+
+    lam_flat = flat(lam_rep)
+    params_flat = ServerParams(**{
+        f.name: flat(getattr(params, f.name))
+        for f in dataclasses.fields(ServerParams)})
+    spec = PartitionSpec(axis)
+    fn = functools.partial(_bounds_surface, result_cache=grid.result_cache)
+    lo, hi, util = compat.shard_map(
+        fn, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
+        check_vma=False)(lam_flat, params_flat)
+    unflat = lambda x: x[:n].reshape(shape)  # noqa: E731
     return SweepResult(
         grid=grid,
-        response_lower=jnp.broadcast_to(lo, shape),
-        response_upper=jnp.broadcast_to(hi, shape),
-        utilization=jnp.broadcast_to(util, shape),
+        response_lower=unflat(lo),
+        response_upper=unflat(hi),
+        utilization=unflat(util),
     )
 
 
@@ -288,6 +340,42 @@ class SimSweepResult:
         return self.stats.tap_response
 
 
+def _sharded_batch(run, mesh, key, proc: ArrivalProcess,
+                   params: ServerParams) -> simulator.SimResult:
+    """Scenario-shard one (p, r) batch dispatch over a 1-D mesh.
+
+    ``run(key, proc, params)`` is the already-parameterized batch entry
+    (all static knobs bound).  The slab's scenario axis is padded
+    (edge-replicated) to a device multiple, every leading-axis input is
+    sharded with one ``PartitionSpec(axis)``, and each device draws from
+    its OWN key (``jax.random.split(key, n_devices)``) — so sharded
+    surfaces are statistically equivalent but not bit-identical to the
+    unsharded ones.  Every `SimResult` leaf leads with the scenario
+    axis, so a single spec works as the out-spec pytree prefix; padded
+    scenarios are sliced off before returning.
+    """
+    axis, n_dev = _check_sweep_mesh(mesh)
+    n_slab = proc.rates.shape[0]
+    pad = (-n_slab) % n_dev
+    rates = jnp.pad(proc.rates, ((0, pad), (0, 0)), mode="edge") \
+        if pad else proc.rates
+    params = jax.tree_util.tree_map(
+        lambda x: jnp.pad(x, ((0, pad),), mode="edge"), params) \
+        if pad else params
+    keys = jax.random.split(key, n_dev)
+    bin_seconds = proc.bin_seconds
+    spec = PartitionSpec(axis)
+
+    def shard_fn(keys_d, rates_d, params_d):
+        proc_d = ArrivalProcess.piecewise(rates_d, bin_seconds)
+        return run(keys_d[0], proc_d, params_d)
+
+    res = compat.shard_map(
+        shard_fn, mesh=mesh, in_specs=(spec, spec, spec),
+        out_specs=spec, check_vma=False)(keys, rates, params)
+    return jax.tree_util.tree_map(lambda x: x[:n_slab], res)
+
+
 def _static_count(x, axis_name: str) -> int:
     v = int(round(float(x)))
     if abs(v - float(x)) > 1e-3:
@@ -311,6 +399,8 @@ def sweep_simulated(
     profile: Optional[Array] = None,
     profile_bin_seconds: float = 3600.0,
     routing: str = "round_robin",
+    replica_impl: str = "fused",
+    mesh=None,
 ) -> SimSweepResult:
     """Streaming-simulated response surfaces over the grid.
 
@@ -338,11 +428,32 @@ def sweep_simulated(
     every scenario, surfacing a uniform sample of raw per-query response
     times on :attr:`SimSweepResult.sample_response` (calibration's trace
     source) without re-materializing sample paths.
+
+    ``replica_impl`` passes through to the simulator: "fused" (default)
+    routes + compacts + segment-scans each chunk in one kernel pass with
+    r-independent peak memory; "masked" is the r-times-the-work oracle.
+
+    ``mesh`` — a 1-D device mesh from `repro.launch.mesh.make_sweep_mesh`
+    — shards each dispatch's L*C*D*H scenario slab across devices via
+    `compat.shard_map` (scenarios never communicate, so the program is
+    pure SPMD).  Slabs are padded (edge-replicated) to a device multiple
+    and sliced back; each device streams its shard with its OWN PRNG key,
+    so sharded surfaces are statistically equivalent, not bit-identical,
+    to unsharded ones.
     """
     shape = grid.shape
     lam_full, params_full = grid.broadcast_full()
-    fields = {f.name: getattr(params_full, f.name)
-              for f in dataclasses.fields(ServerParams)}
+
+    # hoisted slab extraction: ONE moveaxis/reshape per field up front —
+    # (L,P,C,D,H,R) -> (P, R, L*C*D*H) — so every (p, r) dispatch just
+    # indexes a row instead of re-gathering its slab from the 6-D tensor
+    def slab(x):
+        return jnp.moveaxis(x, (1, 5), (0, 1)).reshape(
+            shape[1], shape[5], -1)
+
+    lam_slabs = slab(lam_full)
+    field_slabs = {f.name: slab(getattr(params_full, f.name))
+                   for f in dataclasses.fields(ServerParams)}
     if profile is not None:
         base_proc = ArrivalProcess.piecewise(
             jnp.asarray(profile), profile_bin_seconds).normalized()
@@ -357,28 +468,42 @@ def sweep_simulated(
     # flat indexing (no reshape) keeps both legacy uint32 and new-style
     # typed PRNG keys working: split always yields a 1-D sequence of keys
     keys = jax.random.split(key, n_p * n_r)
+
+    def dispatch(k, lam_ij, params_ij, p: int, r: int):
+        """The single batch entry shared by every (p, r) cell.
+
+        All cells with equal static (p, r) and slab shape reuse one
+        compiled program (jit caches on statics + avals); sharding wraps
+        the SAME bound entry in `_sharded_batch`, so the mesh path and
+        the local path cannot drift apart.
+        """
+        arrival = (ArrivalProcess.stationary(lam_ij) if profile is None
+                   else base_proc.scaled_by(lam_ij))
+        # profile-fidelity chunk clamp happens HERE, host-side, where the
+        # rates are still concrete — under shard_map they are tracers and
+        # the simulator's internal clamp deliberately no-ops
+        chunk = simulator._clamp_chunk_for_profile(
+            arrival, max(1, min(chunk_size, n_queries)))
+        run = functools.partial(
+            simulator.simulate_fork_join_batch, n_queries=n_queries,
+            p=p, mode=mode, impl=impl, warmup_fraction=warmup_fraction,
+            chunk_size=chunk, hist_bins=hist_bins, tap_size=tap_size,
+            r=r, routing=routing, result_cache=grid.result_cache,
+            replica_impl=replica_impl)
+        if mesh is None:
+            return run(k, arrival, params_ij)
+        return _sharded_batch(run, mesh, k, arrival, params_ij)
+
     p_slabs = []
     for i in range(n_p):
         p = _static_count(p_axis[i], "server")
         r_slabs = []
         for j in range(n_r):
             r = _static_count(r_axis[j], "replica")
-            # (L,C,D,H) slab at this (p, r): axes 1 and 5 pinned
-            flat = lambda x: x[:, i, :, :, :, j].reshape(-1)  # noqa: E731
             params_ij = ServerParams(
-                **{n: flat(v) for n, v in fields.items()})
-            lam_ij = flat(lam_full)
-            if profile is None:
-                arrival = ArrivalProcess.stationary(lam_ij)
-            else:
-                arrival = base_proc.scaled_by(lam_ij)
-            res = simulator.simulate_fork_join_batch(
-                keys[i * n_r + j], arrival, params_ij, n_queries, p=p,
-                mode=mode,
-                impl=impl, warmup_fraction=warmup_fraction,
-                chunk_size=chunk_size, hist_bins=hist_bins,
-                tap_size=tap_size, r=r, routing=routing,
-                result_cache=grid.result_cache)
+                **{n: v[i, j] for n, v in field_slabs.items()})
+            res = dispatch(keys[i * n_r + j], lam_slabs[i, j],
+                           params_ij, p, r)
             slab_shape = (shape[0], shape[2], shape[3], shape[4])
             r_slabs.append(jax.tree_util.tree_map(
                 lambda x: x.reshape(slab_shape + x.shape[1:]), res))

@@ -76,6 +76,53 @@ def _maxplus_block_kernel(a_ref, b_ref, out_a_ref, out_b_ref,
     carry_b_ref[...] = out_b[:, -1:]
 
 
+def _maxplus_segment_block_kernel(a_ref, b_ref, f_ref, out_a_ref,
+                                  out_b_ref, carry_a_ref, carry_b_ref,
+                                  *, block_len: int):
+    """Segmented variant: f = 1 resets the scan (replica segment head).
+
+    Same Hillis-Steele doubling as `_maxplus_block_kernel`, lifted to the
+    segmented combine: when the later operand contains a reset, the
+    earlier map is discarded.  Flags are float 0/1 (VPU-friendly); the
+    flag lane composes by max (logical or).  The cross-block carry needs
+    no flag lane — the carry is always the *earlier* operand of the
+    combine, whose flag is never consumed.  This is what lets one kernel
+    launch cover all r replica subsequences of a routed chunk after they
+    have been compacted into contiguous segments.
+    """
+    l_idx = pl.program_id(1)
+
+    @pl.when(l_idx == 0)
+    def _init_carry():
+        carry_a_ref[...] = jnp.full_like(carry_a_ref, _NEG_INF)
+        carry_b_ref[...] = jnp.zeros_like(carry_b_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    f = f_ref[...]
+
+    k = 1
+    while k < block_len:
+        a_prev = _shift_right(a, k, _NEG_INF)
+        b_prev = _shift_right(b, k, 0.0)
+        f_prev = _shift_right(f, k, 0.0)
+        cut = f > 0.0
+        a = jnp.where(cut, a, jnp.maximum(a, a_prev + b))
+        b = jnp.where(cut, b, b_prev + b)
+        f = jnp.maximum(f, f_prev)
+        k *= 2
+
+    ca = carry_a_ref[...]  # (row_tile, 1)
+    cb = carry_b_ref[...]
+    cut = f > 0.0
+    out_a = jnp.where(cut, a, jnp.maximum(a, ca + b))
+    out_b = jnp.where(cut, b, cb + b)
+    out_a_ref[...] = out_a
+    out_b_ref[...] = out_b
+    carry_a_ref[...] = out_a[:, -1:]
+    carry_b_ref[...] = out_b[:, -1:]
+
+
 def maxplus_scan_pallas(
     a: jax.Array,
     b: jax.Array,
@@ -112,4 +159,47 @@ def maxplus_scan_pallas(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)
+    return out_a, out_b
+
+
+def maxplus_segment_scan_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    f: jax.Array,
+    *,
+    block_len: int = DEFAULT_BLOCK_LEN,
+    row_tile: int = DEFAULT_ROW_TILE,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Segmented inclusive max-plus scan along axis -1.
+
+    ``f`` holds float 0/1 reset flags (1 = this element starts a new
+    segment).  Shapes/dtypes must match ``a``; both dims must be padded
+    to (row_tile, block_len) multiples — `ops.maxplus_segment_scan`
+    handles arbitrary shapes.
+    """
+    rows, length = a.shape
+    assert rows % row_tile == 0 and length % block_len == 0, (rows, length)
+    grid = (rows // row_tile, length // block_len)
+
+    spec = pl.BlockSpec((row_tile, block_len), lambda r, l: (r, l))
+    kernel = functools.partial(_maxplus_segment_block_kernel,
+                               block_len=block_len)
+    out_a, out_b = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(a.shape, a.dtype),
+            jax.ShapeDtypeStruct(b.shape, b.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((row_tile, 1), a.dtype),
+            pltpu.VMEM((row_tile, 1), b.dtype),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b, f)
     return out_a, out_b

@@ -15,6 +15,7 @@ from repro.kernels.maxplus_scan.kernel import (
     DEFAULT_BLOCK_LEN,
     DEFAULT_ROW_TILE,
     maxplus_scan_pallas,
+    maxplus_segment_scan_pallas,
 )
 
 
@@ -52,6 +53,53 @@ def maxplus_scan(
 
     out_a, out_b = maxplus_scan_pallas(
         a2, b2, block_len=block_len, row_tile=row_tile, interpret=interpret)
+    out_a = out_a[:rows, :n].reshape(orig_shape)
+    out_b = out_b[:rows, :n].reshape(orig_shape)
+    return out_a, out_b
+
+
+@functools.partial(jax.jit, static_argnames=("block_len", "row_tile",
+                                             "interpret"))
+def maxplus_segment_scan(
+    a: jax.Array,
+    b: jax.Array,
+    f: jax.Array,
+    *,
+    block_len: int = DEFAULT_BLOCK_LEN,
+    row_tile: int = DEFAULT_ROW_TILE,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Segmented inclusive (max, +) scan along the last axis.
+
+    ``f`` is boolean (or 0/1) reset flags: True starts a new segment, so
+    the scan never looks back across a flagged element.  Used by the
+    fused replicated engine: all r replica subsequences of a routed chunk
+    are compacted into contiguous segments of one row and scanned in a
+    single kernel pass.  Any leading shape; padding uses the semiring
+    identity (a = -inf, b = 0, f = 0), which cannot disturb real lanes.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    orig_shape = a.shape
+    n = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    a2 = a.reshape(rows, n)
+    b2 = b.reshape(rows, n)
+    f2 = f.astype(a.dtype).reshape(rows, n)
+
+    pad_n = (-n) % block_len
+    pad_r = (-rows) % row_tile
+    if pad_n or pad_r:
+        a2 = jnp.pad(a2, ((0, pad_r), (0, pad_n)),
+                     constant_values=-jnp.inf)
+        b2 = jnp.pad(b2, ((0, pad_r), (0, pad_n)), constant_values=0.0)
+        f2 = jnp.pad(f2, ((0, pad_r), (0, pad_n)), constant_values=0.0)
+
+    out_a, out_b = maxplus_segment_scan_pallas(
+        a2, b2, f2, block_len=block_len, row_tile=row_tile,
+        interpret=interpret)
     out_a = out_a[:rows, :n].reshape(orig_shape)
     out_b = out_b[:rows, :n].reshape(orig_shape)
     return out_a, out_b

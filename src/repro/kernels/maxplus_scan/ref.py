@@ -29,3 +29,46 @@ def maxplus_scan_sequential(a: jax.Array, b: jax.Array):
     _, (out_a, out_b) = jax.lax.scan(
         step, init, (jnp.moveaxis(a, -1, 0), jnp.moveaxis(b, -1, 0)))
     return jnp.moveaxis(out_a, 0, -1), jnp.moveaxis(out_b, 0, -1)
+
+
+def maxplus_segment_combine(x, y):
+    """Segmented (max, +) combine: a reset flag truncates the lookback.
+
+    Elements are (a, b, f) with f "this map starts a new segment".  When
+    the later operand contains a reset, the earlier map is discarded —
+    this is the standard segmented-scan lift of an associative combine,
+    and it stays associative.  Flags may be bool or float 0/1.
+    """
+    a1, b1, f1 = x
+    a2, b2, f2 = y
+    cut = f2 > 0 if jnp.issubdtype(jnp.asarray(f2).dtype, jnp.floating) \
+        else f2
+    a = jnp.where(cut, a2, jnp.maximum(a2, a1 + b2))
+    b = jnp.where(cut, b2, b1 + b2)
+    f = jnp.maximum(f1, f2) if jnp.issubdtype(
+        jnp.asarray(f1).dtype, jnp.floating) else jnp.logical_or(f1, f2)
+    return a, b, f
+
+
+def maxplus_segment_scan_ref(a: jax.Array, b: jax.Array, f: jax.Array):
+    """O(log n)-depth segmented oracle via jax.lax.associative_scan."""
+    out_a, out_b, _ = jax.lax.associative_scan(
+        maxplus_segment_combine, (a, b, f), axis=-1)
+    return out_a, out_b
+
+
+def maxplus_segment_scan_sequential(a: jax.Array, b: jax.Array,
+                                    f: jax.Array):
+    """O(n) sequential segmented oracle — the definitional recurrence."""
+
+    def step(carry, abf):
+        c = maxplus_segment_combine(carry, abf)
+        return c, c
+
+    init = (jnp.full(a.shape[:-1], -jnp.inf, a.dtype),
+            jnp.zeros(b.shape[:-1], b.dtype),
+            jnp.zeros(f.shape[:-1], f.dtype))
+    _, (out_a, out_b, _) = jax.lax.scan(
+        step, init, (jnp.moveaxis(a, -1, 0), jnp.moveaxis(b, -1, 0),
+                     jnp.moveaxis(f, -1, 0)))
+    return jnp.moveaxis(out_a, 0, -1), jnp.moveaxis(out_b, 0, -1)

@@ -7,9 +7,27 @@ import; smoke tests and benches must keep seeing 1 device).
 
 from __future__ import annotations
 
+from typing import Optional
+
 from repro import compat
 
-__all__ = ["make_production_mesh", "mesh_axes", "data_axes"]
+__all__ = ["make_production_mesh", "make_sweep_mesh", "mesh_axes",
+           "data_axes"]
+
+
+def make_sweep_mesh(n_devices: Optional[int] = None):
+    """1-D ("scenario",) mesh for scenario-sharded what-if sweeps.
+
+    The ONE mesh constructor shared by `core.sweep`, the benches and
+    `examples/global_sweep.py` — call sites must not hand-build meshes.
+    ``n_devices`` defaults to every local device (8 virtual CPU devices
+    under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; all
+    chips of a TPU slice in production).
+    """
+    import jax
+
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return compat.make_mesh((n,), ("scenario",))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -130,3 +130,54 @@ def test_cin_fuse_sweep(b, hk, m, d, o):
     expect = cin_ref.cin_layer_ref(xk, x0, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                rtol=2e-3, atol=2e-3)
+
+
+# -------------------------------------------------- maxplus (segmented)
+@pytest.mark.parametrize("shape,blk", [
+    ((4, 1024), 256), ((1, 37), 512), ((2, 3, 500), 128), ((8, 2048), 512),
+])
+def test_maxplus_segment_scan_sweep(shape, blk):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    a = jnp.cumsum(jax.random.exponential(ks[0], shape), -1)
+    b = jax.random.exponential(ks[1], shape)
+    f = jax.random.uniform(ks[2], shape) < 0.05
+    oa, ob = mp_ops.maxplus_segment_scan(a, b, f, block_len=blk)
+    ra, rb = mp_ref.maxplus_segment_scan_ref(a, b, f)
+    np.testing.assert_allclose(np.asarray(oa), np.asarray(ra), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ob), np.asarray(rb), rtol=1e-5)
+
+
+def test_maxplus_segment_ref_equals_sequential():
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    a = jax.random.normal(ks[0], (3, 257))
+    b = jax.random.exponential(ks[1], (3, 257))
+    f = jax.random.uniform(ks[2], (3, 257)) < 0.1
+    ra, rb = mp_ref.maxplus_segment_scan_ref(a, b, f)
+    sa, sb = mp_ref.maxplus_segment_scan_sequential(a, b, f)
+    np.testing.assert_allclose(np.asarray(ra), np.asarray(sa), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rb), np.asarray(sb), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_maxplus_segment_no_flags_equals_plain():
+    """With zero reset flags the segmented kernel IS the plain scan."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    a = jnp.cumsum(jax.random.exponential(k1, (4, 777)), -1)
+    b = jax.random.exponential(k2, (4, 777))
+    f = jnp.zeros_like(a, dtype=bool)
+    sa, sb = mp_ops.maxplus_segment_scan(a, b, f, block_len=256)
+    pa, pb = mp_ops.maxplus_scan(a, b, block_len=256)
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(pa), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(sb), np.asarray(pb), rtol=1e-6)
+
+
+def test_maxplus_segment_every_flag_resets():
+    """All-flags input degenerates to the identity: out == (a, b)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(10))
+    a = jax.random.normal(k1, (2, 300))
+    b = jax.random.exponential(k2, (2, 300))
+    f = jnp.ones_like(a, dtype=bool)
+    sa, sb = mp_ops.maxplus_segment_scan(a, b, f, block_len=128)
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(sb), np.asarray(b))

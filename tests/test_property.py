@@ -163,3 +163,32 @@ def test_result_cache_never_hurts(lam_scale, hit_r):
     r = queueing.response_time_with_result_cache(lam, params, hit_r,
                                                  0.069e-3)
     assert float(r) <= float(hi) + 1e-9
+
+
+@given(
+    n=st.integers(4, 120),
+    chunk=st.integers(2, 48),
+    r=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@_settings
+def test_routed_fcfs_chunk_invariance(n, chunk, r, seed):
+    """`fcfs_completion_times_routed` carry-chained over arbitrary chunk
+    splits == one whole call (the fused replicated engine's determinism
+    contract: chunking only regroups the segmented associative scan)."""
+    rng = np.random.default_rng(seed)
+    arr = jnp.asarray(np.cumsum(rng.random(n) * 0.5, dtype=np.float32))
+    svc = jnp.asarray(rng.random(n).astype(np.float32) * 0.3 + 1e-3)
+    asg = jnp.asarray(rng.integers(0, r, n).astype(np.int32))
+    whole, carry_w = simulator.fcfs_completion_times_routed(
+        arr, svc, asg, r)
+    out, carry = [], None
+    for lo in range(0, n, chunk):
+        piece, carry = simulator.fcfs_completion_times_routed(
+            arr[lo:lo + chunk], svc[lo:lo + chunk], asg[lo:lo + chunk],
+            r, carry=carry)
+        out.append(np.asarray(piece))
+    np.testing.assert_allclose(np.concatenate(out), np.asarray(whole),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(carry), np.asarray(carry_w),
+                               rtol=1e-5, atol=1e-4)

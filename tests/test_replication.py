@@ -300,3 +300,75 @@ def test_validate_gains_replicated_column():
     plain = validate(traces, cal, n_windows=6, simulator_queries=10_000)
     assert plain.r_sim_replicated is None
     assert "sim(x2)" not in plain.summary()
+
+
+# ------------------------------------------------------------ fused engine
+
+@pytest.mark.parametrize("routing,r", [
+    ("round_robin", 2),   # chunk % r == 0: pure-reshape fast path
+    ("round_robin", 3),   # chunk % r != 0: general compaction path
+    ("random", 3),
+    ("jsq", 3),
+])
+@pytest.mark.parametrize("cache", [None, (0.25, 2e-3)])
+def test_fused_matches_masked_oracle(x64, routing, r, cache):
+    """ACCEPTANCE: the fused route-compacted engine reproduces the masked
+    phantom oracle sample path for sample path, for every routing policy,
+    with and without the dispatcher result cache.  In exact arithmetic
+    the two are EQUAL (the simulator docstring carries the phantom-carry
+    proof); x64 brings the float gap under 1e-9 relative."""
+    params = dataclasses.replace(capacity.scenario_params(memory=1, p=4),
+                                 p=4)
+    key = jax.random.PRNGKey(11)
+    kw = dict(p=4, r=r, routing=routing, chunk_size=1024, mode="cache",
+              result_cache=cache, tap_size=32)
+    fused = simulator.simulate_fork_join(key, 50.0, 6000, params,
+                                         replica_impl="fused", **kw)
+    masked = simulator.simulate_fork_join(key, 50.0, 6000, params,
+                                          replica_impl="masked", **kw)
+    for name in ("count", "sum_response", "sumsq_response", "sum_broker",
+                 "sum_cluster", "sum_server"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(fused, name)),
+            np.asarray(getattr(masked, name)), rtol=1e-9,
+            err_msg=f"{routing} r={r} cache={cache}: {name}")
+    np.testing.assert_array_equal(np.asarray(fused.hist),
+                                  np.asarray(masked.hist))
+    # the reservoir tap is priority-ordered, not arrival-ordered; the
+    # fused engine permutes per-query priorities consistently, so the
+    # SET of sampled responses matches (NaN pads sort to the end)
+    np.testing.assert_allclose(np.sort(np.asarray(fused.tap_response)),
+                               np.sort(np.asarray(masked.tap_response)),
+                               rtol=1e-9)
+
+
+def test_fused_r1_bit_identical_across_impls():
+    """ACCEPTANCE: at r=1 the replica dispatch is compiled out, so
+    "fused" and "masked" are the SAME program as the pre-fusion streaming
+    engine — bit-identical statistics, cache path included."""
+    key = jax.random.PRNGKey(12)
+    kw = dict(chunk_size=2048, result_cache=(0.2, 2e-3))
+    a = simulator.simulate_fork_join(key, 30.0, 20_000, T5,
+                                     replica_impl="fused", **kw)
+    b = simulator.simulate_fork_join(key, 30.0, 20_000, T5,
+                                     replica_impl="masked", **kw)
+    for f in dataclasses.fields(simulator.SimResult):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f.name)), np.asarray(getattr(b, f.name)),
+            err_msg=f.name)
+
+
+def test_sweep_replica_impl_passthrough(x64):
+    """`sweep_simulated(replica_impl=...)` reaches the engine: fused and
+    masked surfaces agree to float precision over a replicated grid."""
+    grid = sweep.SweepGrid.build(lam=[30.0, 60.0], p=[4.0], cpu=[1.0],
+                                 disk=[1.0], hit=[0.5], r=[2.0, 3.0],
+                                 base=dataclasses.replace(T5, p=4),
+                                 result_cache=(0.2, 2e-3))
+    key = jax.random.PRNGKey(13)
+    f = sweep.sweep_simulated(grid, key, n_queries=4000, chunk_size=512,
+                              replica_impl="fused")
+    m = sweep.sweep_simulated(grid, key, n_queries=4000, chunk_size=512,
+                              replica_impl="masked")
+    np.testing.assert_allclose(np.asarray(f.mean), np.asarray(m.mean),
+                               rtol=1e-9)
