@@ -32,3 +32,20 @@ def quick() -> bool:
 def scale_queries(full: int, quick_value: int) -> int:
     """Pick the simulated horizon for the current mode."""
     return quick_value if quick() else full
+
+
+def profile_block(fn, *args, name: str, n_runs: int = 1, **kwargs) -> dict:
+    """Uniform ``record["profile"]`` block for every BENCH_*.json.
+
+    Thin shim over `repro.obs.profile.profile_jit` (lazy import so the
+    harness can enumerate benches without jax): compile time, XLA
+    cost-analysis flops/bytes and memory-analysis peak of the bench's
+    own entry point.  ``n_runs=0`` skips timed executions — the heavy
+    simulation benches already report wall_seconds from their own
+    medians, so the profile block only adds the compile/cost/memory
+    facts there.
+    """
+    from repro.obs.profile import profile_jit
+
+    return profile_jit(fn, *args, name=name, n_runs=n_runs,
+                       **kwargs).to_json()

@@ -45,6 +45,10 @@ def bench_calibrate(rows):
     jax.block_until_ready(cal.alpha)
     dt_full = time.perf_counter() - t0
 
+    profile = _util.profile_block(
+        jax.jit(lambda trs: calibrate(trs, n_windows=16)), traces,
+        name=f"calibrate[{len(traces)}x{traces[0].n_queries}]", n_runs=1)
+
     record = {
         "bench": "calibrate",
         "n_traces": len(traces),
@@ -57,6 +61,7 @@ def bench_calibrate(rows):
         "alpha": float(cal.alpha),
         "s_disk_rel_err": abs(float(cal.params.s_disk)
                               - float(true.s_disk)) / float(true.s_disk),
+        "profile": profile,
     }
     out = _util.bench_output_path("BENCH_calibrate.json")
     out.write_text(json.dumps(record, indent=2) + "\n")

@@ -15,7 +15,15 @@ Policy (the CI contract):
     deterministic functions of the engine's carried state, so any growth
     is a real structural regression;
   * measured compiled footprints (``peak_mem_measured_bytes``) get a 10%
-    allowance for XLA-version layout noise.
+    allowance for XLA-version layout noise;
+  * ``telemetry_overhead_frac`` is gated by an ABSOLUTE ceiling (kind
+    "ceiling": fresh value <= allowance, no baseline comparison) — the
+    default-bins telemetry slowdown must stay under 10% regardless of
+    what a previous runner measured;
+  * every fresh record must carry the ``profile`` block (compile_s,
+    flops, bytes_accessed, peak_bytes) that `benchmarks._util
+    .profile_block` embeds — a bench silently dropping its profiling
+    hook is a regression of the observability contract itself.
 
 Exits 1 on any violation; always prints the comparison table.
 """
@@ -27,7 +35,8 @@ import json
 import pathlib
 import sys
 
-# metric name -> (kind, allowance); kind "higher" = bigger is better
+# metric name -> (kind, allowance); kind "higher" = bigger is better,
+# "ceiling" = fresh value must stay under the ABSOLUTE allowance
 GATES = {
     "queries_per_s": ("higher", None),
     "queries_per_s_jsq": ("higher", None),
@@ -35,10 +44,15 @@ GATES = {
     "scenarios_per_s": ("higher", None),
     "peak_mem_streaming_bytes": ("exact-max", 0.0),
     "peak_mem_measured_bytes": ("max", 0.10),
+    "telemetry_overhead_frac": ("ceiling", 0.10),
 }
 
 BASELINE_FILES = ("BENCH_streaming.json", "BENCH_calibrate.json",
-                  "BENCH_replicated.json", "BENCH_sharded.json")
+                  "BENCH_replicated.json", "BENCH_sharded.json",
+                  "BENCH_obs.json")
+
+# keys every record's profile block must carry (see _util.profile_block)
+_PROFILE_KEYS = ("compile_s", "flops", "bytes_accessed", "peak_bytes")
 
 
 def compare(baseline: dict, fresh: dict, name: str,
@@ -52,6 +66,9 @@ def compare(baseline: dict, fresh: dict, name: str,
             rel = (new - old) / old if old else 0.0
             verdict = rel >= -max_drop
             note = f"{rel:+.1%} (floor {-max_drop:.0%})"
+        elif kind == "ceiling":
+            verdict = new <= (allowance or 0.0)
+            note = f"absolute ceiling {allowance or 0.0:.0%}"
         else:
             allowed = old * (1.0 + (allowance or 0.0))
             verdict = new <= allowed
@@ -62,6 +79,20 @@ def compare(baseline: dict, fresh: dict, name: str,
         if not verdict:
             failures.append(f"{name}:{metric}")
     return failures
+
+
+def check_profile(fresh: dict, name: str) -> list[str]:
+    """Require the uniform profile block on every fresh record."""
+    prof = fresh.get("profile")
+    missing = ([k for k in _PROFILE_KEYS if k not in prof]
+               if isinstance(prof, dict) else list(_PROFILE_KEYS))
+    if missing:
+        print(f"  FAIL {name}:profile block missing keys {missing}")
+        return [f"{name}:profile"]
+    print(f"  ok   {name}:profile{'':23s} compile "
+          f"{prof['compile_s']:.2f}s, {prof['flops'] / 1e6:,.1f} Mflops, "
+          f"peak {prof['peak_bytes'] / 2**20:,.1f} MiB")
+    return []
 
 
 def main() -> None:
@@ -88,10 +119,11 @@ def main() -> None:
             failures.append(f"{fname}:missing")
             continue
         seen += 1
-        failures += compare(json.loads(b.read_text()),
-                            json.loads(f.read_text()),
-                            fname.removeprefix("BENCH_").removesuffix(".json"),
-                            args.max_throughput_drop)
+        short = fname.removeprefix("BENCH_").removesuffix(".json")
+        fresh_rec = json.loads(f.read_text())
+        failures += compare(json.loads(b.read_text()), fresh_rec,
+                            short, args.max_throughput_drop)
+        failures += check_profile(fresh_rec, short)
     if seen == 0:
         print("no benchmark records compared — refusing to pass vacuously")
         sys.exit(1)

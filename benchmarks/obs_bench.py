@@ -1,0 +1,114 @@
+"""Telemetry-overhead benchmark, persisted to BENCH_obs.json.
+
+Guards the two promises the observability layer makes:
+
+* ``telemetry=None`` costs NOTHING — the static branch compiles to the
+  pre-telemetry program.  The bench asserts the plain run's base stats
+  are *bitwise identical* with and without the telemetry code in the
+  tree, and gates the plain ``queries_per_s`` "higher" like every other
+  throughput metric;
+* default-bins telemetry (``TelemetrySpec()``, 64 bins) stays cheap —
+  ``telemetry_overhead_frac`` (relative slowdown of the telemetry run
+  over the plain run; interleaved passes, min of each, so scheduler
+  jitter cannot masquerade as overhead) is gated by an ABSOLUTE ceiling
+  in `benchmarks.check_regression` (<10%, the ISSUE's acceptance bar).
+
+The record also embeds kernel ProfileRecords (`profile_kernels`) so the
+roofline report can consume a committed baseline without recompiling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import _util
+
+_TIMING_PASSES = 5
+
+
+def bench_obs_telemetry(rows):
+    from repro.core import capacity, simulator
+    from repro.core.queueing import ServerParams
+    from repro.obs import profile as obs_profile
+    from repro.obs.timeline import DEFAULT_TIMELINE_BINS, TelemetrySpec
+
+    n_scen, p, chunk = 3, 8, 4096
+    n_q = _util.scale_queries(400_000, 100_000)
+    lam = jnp.asarray([10.0, 18.0, 25.0])
+    vec = ServerParams(**{
+        f.name: jnp.asarray(
+            [getattr(capacity.TABLE5_PARAMS, f.name)] * n_scen,
+            jnp.float32)
+        for f in dataclasses.fields(ServerParams)})
+    spec = TelemetrySpec()                    # default bins
+
+    def run(telemetry):
+        res = simulator.simulate_fork_join_batch(
+            jax.random.PRNGKey(0), lam, vec, n_q, p=p,
+            chunk_size=chunk, telemetry=telemetry)
+        jax.block_until_ready(res.sum_response)
+        return res
+
+    def once(telemetry):
+        t0 = time.perf_counter()
+        run(telemetry)
+        return time.perf_counter() - t0
+
+    res_plain = run(None)                     # compile + warm both
+    res_tel = run(spec)
+    t_plain, t_tel = [], []
+    for _ in range(_TIMING_PASSES):           # interleaved: drift hits
+        t_plain.append(once(None))            # both programs equally
+        t_tel.append(once(spec))
+    dt_plain, dt_tel = min(t_plain), min(t_tel)
+
+    # the zero-cost contract: telemetry=None and telemetry=spec draw the
+    # same RNG stream, so the base stats must agree BITWISE
+    for field in ("count", "sum_response", "sumsq_response"):
+        a = jnp.asarray(getattr(res_plain, field))
+        b = jnp.asarray(getattr(res_tel, field))
+        assert bool(jnp.all(a == b)), (
+            f"telemetry changed base stat {field!r}: {a} != {b}")
+    total = float(jnp.sum(res_tel.timeline.count))
+    assert total == float(n_scen * n_q), (
+        f"timeline lost queries: {total} != {n_scen * n_q}")
+
+    overhead = max(0.0, dt_tel / dt_plain - 1.0)
+    profile = _util.profile_block(
+        jax.jit(lambda key: simulator.simulate_fork_join_batch(
+            key, lam, vec, n_q, p=p, chunk_size=chunk, telemetry=spec)),
+        jax.random.PRNGKey(0),
+        name=f"obs_telemetry[{n_scen}x{n_q},{spec.n_bins}bins]", n_runs=0)
+
+    record = {
+        "bench": "obs_telemetry",
+        "n_scenarios": n_scen,
+        "p": p,
+        "n_queries": n_q,
+        "chunk_size": chunk,
+        "n_bins": spec.n_bins,
+        "default_bins": DEFAULT_TIMELINE_BINS,
+        "wall_seconds": dt_plain,
+        "wall_seconds_telemetry": dt_tel,
+        "queries_per_s": n_scen * n_q / dt_plain,
+        "queries_per_s_telemetry": n_scen * n_q / dt_tel,
+        "telemetry_overhead_frac": overhead,
+        "profile": profile,
+        "kernel_profiles": [r.to_json()
+                            for r in obs_profile.profile_kernels(n_runs=1)],
+    }
+    out = _util.bench_output_path("BENCH_obs.json")
+    out.write_text(json.dumps(record, indent=2) + "\n")
+
+    rows.append(("obs_telemetry", dt_tel * 1e6,
+                 f"{n_scen} scen x {n_q} queries; plain "
+                 f"{n_scen * n_q / dt_plain / 1e6:.2f}M q/s, "
+                 f"{spec.n_bins}-bin telemetry "
+                 f"{n_scen * n_q / dt_tel / 1e6:.2f}M q/s "
+                 f"(+{overhead:.1%} overhead); base stats bitwise "
+                 f"identical; -> {out}"))

@@ -96,6 +96,14 @@ def bench_replicated_sweep(rows):
     dt_xla, _ = timed("round_robin", "xla")
     dt_jsq, _ = timed("jsq", "xla")
 
+    # SimSweepResult carries the grid (not a pytree); profile the stats
+    profile = _util.profile_block(
+        jax.jit(lambda key: sweep.sweep_simulated(
+            grid, key, n_queries=n_q, chunk_size=chunk,
+            routing="round_robin", impl="pallas").stats),
+        jax.random.PRNGKey(0),
+        name=f"replicated_sweep[{n_scen}x{r}x{n_q}]", n_runs=0)
+
     queries_per_s = n_scen * n_q / dt
     events_per_s = n_scen * r * (p + 1) * n_q / dt
     # fused law: ONE S x p x chunk pass regardless of r, + S x r x p carries
@@ -153,6 +161,7 @@ def bench_replicated_sweep(rows):
         "peak_mem_slope_buffers_per_r": slope_per_r / unit,
         "mean_response_check": [float(x) for x in
                                 jnp.ravel(res.mean)[:3]],
+        "profile": profile,
     }
     out = _util.bench_output_path("BENCH_replicated.json")
     out.write_text(json.dumps(record, indent=2) + "\n")

@@ -17,8 +17,8 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (calibrate_bench, kernels_bench, paper_tables,
-                        partitioning_bench, replicated_bench,
+from benchmarks import (calibrate_bench, kernels_bench, obs_bench,
+                        paper_tables, partitioning_bench, replicated_bench,
                         sharded_bench, streaming_bench, sweep_bench)
 
 BENCHES = [
@@ -46,6 +46,7 @@ BENCHES = [
     replicated_bench.bench_replicated_sweep,
     sharded_bench.bench_sharded_sweep,
     calibrate_bench.bench_calibrate,
+    obs_bench.bench_obs_telemetry,
     partitioning_bench.bench_partitioning,
 ]
 

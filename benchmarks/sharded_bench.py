@@ -129,6 +129,17 @@ def _main() -> None:
         times.append(time.perf_counter() - t0)
     dt_sim = statistics.median(times)
 
+    # SweepResult carries the grid (not a pytree); profile the surfaces
+    def _surfaces():
+        res = sweep.sweep_analytical(big, mesh=mesh)
+        return {"response_lower": res.response_lower,
+                "response_upper": res.response_upper,
+                "utilization": res.utilization}
+
+    profile = _util.profile_block(
+        jax.jit(_surfaces),
+        name=f"sharded_analytical[{n_ana}x{_DEVICES}dev]", n_runs=0)
+
     record = {
         "bench": "sharded_sweep",
         "n_devices": _DEVICES,
@@ -142,6 +153,7 @@ def _main() -> None:
         "routing": "round_robin",
         "wall_seconds": dt_sim,
         "queries_per_s": n_sim * n_q / dt_sim,
+        "profile": profile,
     }
     out = _util.bench_output_path("BENCH_sharded.json")
     out.write_text(json.dumps(record, indent=2) + "\n")

@@ -55,6 +55,13 @@ def bench_streaming_sweep(rows):
     res = run()
     dt = time.perf_counter() - t0
 
+    # SimSweepResult carries the grid (not a pytree); profile the stats
+    profile = _util.profile_block(
+        jax.jit(lambda key: sweep.sweep_simulated(
+            grid, key, n_queries=n_q, chunk_size=chunk).stats),
+        jax.random.PRNGKey(0),
+        name=f"streaming_sweep[{n_scen}x{n_q}]", n_runs=0)
+
     queries_per_s = n_scen * n_q / dt
     events_per_s = n_scen * (p + 1) * n_q / dt
     peak_stream = n_scen * p * chunk * _F32
@@ -74,6 +81,7 @@ def bench_streaming_sweep(rows):
         "memory_reduction_x": peak_materialized / peak_stream,
         "mean_response_check": [float(x) for x in
                                 jnp.ravel(res.mean)[:3]],
+        "profile": profile,
     }
     out = _util.bench_output_path("BENCH_streaming.json")
     out.write_text(json.dumps(record, indent=2) + "\n")

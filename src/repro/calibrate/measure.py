@@ -94,6 +94,24 @@ class TraceRecord:
         span = jnp.maximum(self.arrival[-1] - self.arrival[0], 1e-9)
         return (self.n_queries - 1) / span
 
+    def to_timeline(self, spec=None):
+        """Bin this trace into a `repro.obs.timeline.Timeline`.
+
+        The TraceRecord <-> Timeline bridge: measured engines and
+        streaming-simulated ones render on the same dashboard
+        (``python -m repro.obs.report``) and obey the same per-bin
+        conservation checks.  ``spec`` is a
+        :class:`repro.obs.timeline.TelemetrySpec` (default: the default
+        bin count over the record's own span).
+        """
+        from repro.obs.timeline import TelemetrySpec, timeline_from_trace
+        if spec is None:
+            spec = TelemetrySpec()
+        return timeline_from_trace(
+            self.arrival - self.arrival[0], self.response, spec,
+            broker_busy=self.broker_busy, server_busy=self.server_busy,
+            server_hit=self.server_hit)
+
     def split(self, n_batches: int) -> list["TraceRecord"]:
         """Split into ``n_batches`` contiguous batches (last takes the
         remainder) — fitting is invariant to this chunking."""

@@ -104,6 +104,7 @@ import jax.numpy as jnp
 from repro.core import queueing
 from repro.core.arrivals import ArrivalProcess
 from repro.core.queueing import ServerParams, service_time_server
+from repro.obs.timeline import TelemetrySpec, Timeline
 
 Array = jax.Array
 
@@ -118,6 +119,8 @@ __all__ = [
     "simulate_mmc",
     "sample_service_times_batch",
     "chunk_random_draws",
+    "TelemetrySpec",
+    "Timeline",
     "DEFAULT_CHUNK",
     "DEFAULT_HIST_BINS",
     "ROUTING_POLICIES",
@@ -193,6 +196,11 @@ class SimResult:
     sample path.  Slots not yet filled hold NaN; ``tap_size=0`` (the
     default) disables the tap at zero cost.  `repro.calibrate.measure`
     consumes it as the trace source for simulated systems.
+
+    ``timeline`` is the opt-in per-time-bin telemetry of
+    `repro.obs.timeline`: None unless the run passed a
+    :class:`TelemetrySpec` (None contributes no pytree leaves, so every
+    existing consumer and the eval_shape contract see the same tree).
     """
 
     count: Array           # post-warmup samples per scenario
@@ -205,6 +213,7 @@ class SimResult:
     hist_log_lo: Array     # (...,) ln(lowest bin edge, seconds)
     hist_log_step: Array   # (...,) ln(bin edge ratio)
     tap_response: Array    # (..., tap_size) reservoir sample of responses
+    timeline: Optional[Timeline] = None  # per-bin telemetry (see obs)
 
     @property
     def _n(self) -> Array:
@@ -512,7 +521,8 @@ def fcfs_completion_times_routed(
 @functools.partial(
     jax.jit, static_argnames=("n_queries", "p", "mode", "impl", "chunk",
                               "warmup_fraction", "hist_bins", "tap_size",
-                              "r", "routing", "has_cache", "replica_impl"))
+                              "r", "routing", "has_cache", "replica_impl",
+                              "telemetry"))
 def _simulate_stream(
     key: Array,
     proc: ArrivalProcess,
@@ -531,6 +541,7 @@ def _simulate_stream(
     routing: str = "round_robin",
     has_cache: bool = False,
     replica_impl: str = "fused",
+    telemetry: Optional[TelemetrySpec] = None,
 ) -> SimResult:
     """The one chunked engine behind every fork-join entry point.
 
@@ -545,11 +556,31 @@ def _simulate_stream(
     the same routing choices and draws, so their sample paths agree
     query-for-query (exactly in exact arithmetic; see the equality tests
     in tests/test_replication.py).
+
+    ``telemetry`` (static) turns on the per-time-bin accumulators of
+    `repro.obs.timeline`.  It draws NO randomness and appends carry
+    elements only when present, so ``telemetry=None`` is the
+    bit-identical pre-telemetry program.  Timeline binning keys off an
+    UNWRAPPED absolute clock carried alongside the period-wrapped
+    ``t_origin`` (profiles wrap for rate lookups; telemetry must not).
     """
     n_scen = proc.rates.shape[0]
     n_chunks = -(-n_queries // chunk)
     n_warm = int(n_queries * warmup_fraction)
     dtype = jnp.result_type(float)
+
+    if telemetry is not None:
+        tl_bins = telemetry.n_bins
+        if telemetry.horizon_seconds is not None:
+            tl_horizon = jnp.full((n_scen,), telemetry.horizon_seconds,
+                                  dtype)
+        else:
+            tl_horizon = jnp.broadcast_to(
+                n_queries / jnp.maximum(
+                    proc.mean_rate.astype(dtype), 1e-30), (n_scen,))
+        tl_bin_w = tl_horizon / tl_bins
+        tl_slo = (jnp.inf if telemetry.slo_seconds is None
+                  else telemetry.slo_seconds)
 
     s_broker = jnp.broadcast_to(
         jnp.asarray(params.s_broker, dtype), (n_scen,))
@@ -603,7 +634,10 @@ def _simulate_stream(
     # eliminated by XLA.
     def body(carry, x):
         (t_origin, c_brk, c_srv, c_cache, w_jsq, count, s_resp, ss_resp,
-         s_br, s_cl, s_sv, hist, tap_pri, tap_val) = carry
+         s_br, s_cl, s_sv, hist, tap_pri, tap_val) = carry[:14]
+        if telemetry is not None:
+            (t_abs, tm_count, tm_resp, tm_bb, tm_bs, tm_rc, tm_hit,
+             tm_slo) = carry[14:]
         if has_trace:
             c_idx, trace_gaps_c = x
         else:
@@ -643,6 +677,16 @@ def _simulate_stream(
             miss_f = None
 
         s_broker_c = u_brk * s_broker[:, None]
+        if telemetry is not None:
+            # chunk-order captures BEFORE the fused branches permute or
+            # rescale anything: arrival offsets plus each query's
+            # EFFECTIVE demand (cache hits never reach broker/servers,
+            # so misses-only is the busy time conservation requires)
+            tm_arr = arrivals
+            tm_svc = (services * miss_f[:, None, :] if has_cache
+                      else services)
+            tm_brk = s_broker_c * miss_f if has_cache else s_broker_c
+            tm_hit_c = is_hit.astype(dtype) if has_cache else None
         # `perm` maps chunk-order (S, chunk) arrays into the layout the
         # fused branches compute in (replica-compacted); None = identity.
         # All streaming statistics are permutation-invariant (sums,
@@ -679,6 +723,9 @@ def _simulate_stream(
                                                live, r, dtype)
             else:
                 w_jsq_new = w_jsq
+
+        if telemetry is not None and r > 1:
+            tm_asg = assign          # replica of each chunk-order query
 
         if r == 1:
             pass
@@ -859,6 +906,109 @@ def _simulate_stream(
             tap_pri, idx = jax.lax.top_k(cat_pri, tap_size)
             tap_val = jnp.take_along_axis(cat_val, idx, axis=-1)
 
+        if telemetry is not None:
+            # Timeline tallies (no RNG, so the canonical draw plan is
+            # untouched).  Bin by arrival time on the UNWRAPPED absolute
+            # clock; warmup is included by design (transients are the
+            # signal), only the tail padding is excluded.  Arrivals are
+            # nondecreasing within a chunk, so each bin is a CONTIGUOUS
+            # run of queries: per-bin sums are differences of one
+            # prefix sum read at the bin-edge positions (vmapped
+            # searchsorted) — O(chunk) per channel, an order of
+            # magnitude cheaper than scatter-adds or one-hot
+            # contractions inside the scan, and the per-chunk total
+            # telescopes exactly (conservation is bit-exact).
+            t_arr = t_abs[:, None] + tm_arr          # (S, chunk), sorted
+            # padded tail queries (gidx >= n_queries) are a SUFFIX of
+            # the sorted chunk, so clamping the bin-edge positions at
+            # n_valid excludes them for free — no valid-mask multiply
+            # on any channel
+            n_valid = jnp.clip(n_queries - c_idx * chunk, 0, chunk)
+            edges = tl_bin_w[:, None] * jnp.arange(
+                tl_bins, dtype=dtype)[None, :]        # (S, B)
+            pos = jax.vmap(jnp.searchsorted)(t_arr, edges)
+            pos = jnp.minimum(
+                jnp.concatenate(
+                    [pos, jnp.full((n_scen, 1), chunk, pos.dtype)],
+                    axis=-1),
+                n_valid)                              # (S, B + 1)
+
+            # Two-level prefix sums: a full cumsum over the chunk is
+            # multi-pass under XLA, but prefixes are only ever READ at
+            # the B + 1 edge positions.  So: one pass of per-block
+            # partial sums, a tiny cumsum over the ~chunk/blk blocks,
+            # and a masked intra-block sum just at the edges — ~one
+            # read of the data per channel instead of a scan.
+            blk = 1
+            while (blk < 128 and chunk % (blk * 2) == 0
+                   and blk * (tl_bins + 1) < chunk):
+                blk *= 2
+            nb = chunk // blk
+            e_blk = pos // blk                        # (S, B + 1)
+            e_within = pos - e_blk * blk
+            e_blk_c = jnp.minimum(e_blk, nb - 1)
+            e_within = jnp.where(e_blk > e_blk_c, blk, e_within)
+            intra_mask = (jnp.arange(blk) < e_within[..., None]
+                          ).astype(dtype)             # (S, B + 1, blk)
+
+            def bin_sums(w):
+                """(S, ..., chunk) weights -> (S, ..., B) per-bin sums."""
+                lead = (1,) * (w.ndim - 2)
+                wb = w.reshape(w.shape[:-1] + (nb, blk))
+                blocks = jnp.cumsum(jnp.sum(wb, axis=-1), axis=-1)
+                eb = jnp.broadcast_to(
+                    e_blk_c.reshape((n_scen,) + lead + (tl_bins + 1,)),
+                    w.shape[:-1] + (tl_bins + 1,))
+                pre = jnp.where(
+                    eb > 0,
+                    jnp.take_along_axis(blocks, jnp.maximum(eb - 1, 0),
+                                        axis=-1),
+                    jnp.zeros_like(blocks[..., :1]))
+                wsel = jnp.take_along_axis(wb, eb[..., None], axis=-2)
+                take = pre + jnp.sum(
+                    wsel * intra_mask.reshape(
+                        (n_scen,) + lead + (tl_bins + 1, blk)),
+                    axis=-1)
+                return take[..., 1:] - take[..., :-1]
+
+            # counts need no cumsum at all: bins are contiguous runs, so
+            # the per-bin count IS the difference of the edge positions
+            cnt_inc = (pos[:, 1:] - pos[:, :-1]).astype(dtype)  # (S, B)
+            tm_count = tm_count + cnt_inc
+            if r == 1:
+                # single replica: every per-replica channel collapses to
+                # the plain one — skip the assignment mask entirely
+                tm_rc = tm_rc + cnt_inc[:, :, None]
+                tm_bb = tm_bb + bin_sums(tm_brk)[:, :, None]
+                tm_bs = tm_bs + jnp.moveaxis(
+                    bin_sums(tm_svc), -1, 1)[:, :, None, :]
+            else:
+                mask_a = (tm_asg[:, None, :]
+                          == jnp.arange(r, dtype=jnp.int32)[None, :, None]
+                          ).astype(dtype)             # (S, r, chunk)
+                tm_rc = tm_rc + jnp.swapaxes(bin_sums(mask_a), 1, 2)
+                tm_bb = tm_bb + jnp.swapaxes(
+                    bin_sums(mask_a * tm_brk[:, None, :]), 1, 2)
+                tm_bs = tm_bs + jnp.moveaxis(
+                    bin_sums(mask_a[:, :, None, :]
+                             * tm_svc[:, None, :, :]),
+                    -1, 1)                            # (S, B, r, p)
+            if has_cache:
+                tm_hit = tm_hit + bin_sums(tm_hit_c)
+            # response-side tallies live in the engine's layout — bring
+            # them BACK to (sorted) chunk order via the inverse permute
+            if perm is not None:
+                inv = jnp.argsort(
+                    perm(jnp.arange(chunk, dtype=jnp.int32)), axis=-1)
+                resp_c = jnp.take_along_axis(
+                    jnp.broadcast_to(response, (n_scen, chunk)), inv,
+                    axis=-1)
+            else:
+                resp_c = response
+            tm_resp = tm_resp + bin_sums(resp_c)
+            tm_slo = tm_slo + bin_sums((resp_c > tl_slo).astype(dtype))
+            t_abs = t_abs + last_arrival
+
         shift = last_arrival
         new_carry = ((t_origin + shift) % period,
                      c_brk_new - shift[:, None],
@@ -868,6 +1018,9 @@ def _simulate_stream(
                      w_jsq_new,
                      count, s_resp, ss_resp, s_br, s_cl, s_sv, hist,
                      tap_pri, tap_val)
+        if telemetry is not None:
+            new_carry = new_carry + (t_abs, tm_count, tm_resp, tm_bb,
+                                     tm_bs, tm_rc, tm_hit, tm_slo)
         return new_carry, None
 
     zeros = jnp.zeros((n_scen,), dtype)
@@ -880,14 +1033,31 @@ def _simulate_stream(
             jnp.zeros((n_scen, hist_bins), dtype),
             jnp.full((n_scen, tap_size), -jnp.inf, dtype),
             jnp.full((n_scen, tap_size), jnp.nan, dtype))
+    if telemetry is not None:
+        zb = jnp.zeros((n_scen, tl_bins), dtype)
+        init = init + (zeros, zb, zb,
+                       jnp.zeros((n_scen, tl_bins, r), dtype),
+                       jnp.zeros((n_scen, tl_bins, r, p), dtype),
+                       jnp.zeros((n_scen, tl_bins, r), dtype),
+                       zb, zb)
+    final, _ = jax.lax.scan(body, init, xs)
     (t_last, c_brk, c_srv, c_cache, w_jsq, count, s_resp, ss_resp, s_br,
-     s_cl, s_sv, hist, tap_pri, tap_val), _ = jax.lax.scan(body, init, xs)
+     s_cl, s_sv, hist, tap_pri, tap_val) = final[:14]
+
+    timeline = None
+    if telemetry is not None:
+        (_, tm_count, tm_resp, tm_bb, tm_bs, tm_rc, tm_hit,
+         tm_slo) = final[14:]
+        timeline = Timeline(
+            bin_seconds=tl_bin_w, count=tm_count, resp_sum=tm_resp,
+            busy_broker=tm_bb, busy_server=tm_bs, replica_count=tm_rc,
+            hit_count=tm_hit, slo_count=tm_slo)
 
     return SimResult(
         count=count, sum_response=s_resp, sumsq_response=ss_resp,
         sum_broker=s_br, sum_cluster=s_cl, sum_server=s_sv,
         hist=hist, hist_log_lo=hist_log_lo, hist_log_step=hist_log_step,
-        tap_response=tap_val)
+        tap_response=tap_val, timeline=timeline)
 
 
 def _cache_args(result_cache) -> tuple[Array, Array, bool]:
@@ -927,6 +1097,7 @@ def simulate_fork_join(
     routing: str = "round_robin",
     result_cache: Optional[tuple[float, float]] = None,
     replica_impl: str = "fused",
+    telemetry: Optional[TelemetrySpec] = None,
 ) -> SimResult:
     """Simulate the full broker + p-server fork-join network (Fig 8).
 
@@ -949,6 +1120,10 @@ def simulate_fork_join(
     never fork to its index servers.  ``replica_impl`` picks the
     replicated engine ("fused" default; "masked" is the re-scan oracle —
     see :func:`_simulate_stream`).
+
+    ``telemetry=TelemetrySpec(...)`` additionally streams the per-time-
+    bin `repro.obs.timeline.Timeline` onto the result (None, the
+    default, is the bit-identical pre-telemetry program).
     """
     p = int(params.p) if p is None else p  # static before tracing
     _check_topology(r, routing, replica_impl)
@@ -961,7 +1136,8 @@ def simulate_fork_join(
                            cache_service, n_queries, p,
                            mode, impl, chunk, warmup_fraction, hist_bins,
                            tap_size, r=r, routing=routing,
-                           has_cache=has_cache, replica_impl=replica_impl)
+                           has_cache=has_cache, replica_impl=replica_impl,
+                           telemetry=telemetry)
     return jax.tree_util.tree_map(lambda x: x[0], res)
 
 
@@ -982,6 +1158,7 @@ def simulate_fork_join_batch(
     routing: str = "round_robin",
     result_cache: Optional[tuple[float, float]] = None,
     replica_impl: str = "fused",
+    telemetry: Optional[TelemetrySpec] = None,
 ) -> SimResult:
     """S fork-join scenarios in one XLA program; all stats are (S,).
 
@@ -1010,7 +1187,7 @@ def simulate_fork_join_batch(
                             n_queries, p, mode, impl,
                             chunk, warmup_fraction, hist_bins, tap_size,
                             r=r, routing=routing, has_cache=has_cache,
-                            replica_impl=replica_impl)
+                            replica_impl=replica_impl, telemetry=telemetry)
 
 
 @functools.partial(jax.jit, static_argnames=("c",))

@@ -400,6 +400,7 @@ def sweep_simulated(
     profile_bin_seconds: float = 3600.0,
     routing: str = "round_robin",
     replica_impl: str = "fused",
+    telemetry: Optional[simulator.TelemetrySpec] = None,
     mesh=None,
 ) -> SimSweepResult:
     """Streaming-simulated response surfaces over the grid.
@@ -432,6 +433,12 @@ def sweep_simulated(
     ``replica_impl`` passes through to the simulator: "fused" (default)
     routes + compacts + segment-scans each chunk in one kernel pass with
     r-independent peak memory; "masked" is the r-times-the-work oracle.
+
+    ``telemetry=TelemetrySpec(...)`` streams the per-time-bin
+    `repro.obs.timeline.Timeline` through every dispatch: the
+    ``stats.timeline`` leaves come back with the full grid shape in
+    front (e.g. utilization is (L,P,C,D,H,R, n_bins, r, p)).  None (the
+    default) is the bit-identical pre-telemetry program.
 
     ``mesh`` — a 1-D device mesh from `repro.launch.mesh.make_sweep_mesh`
     — shards each dispatch's L*C*D*H scenario slab across devices via
@@ -489,7 +496,7 @@ def sweep_simulated(
             p=p, mode=mode, impl=impl, warmup_fraction=warmup_fraction,
             chunk_size=chunk, hist_bins=hist_bins, tap_size=tap_size,
             r=r, routing=routing, result_cache=grid.result_cache,
-            replica_impl=replica_impl)
+            replica_impl=replica_impl, telemetry=telemetry)
         if mesh is None:
             return run(k, arrival, params_ij)
         return _sharded_batch(run, mesh, k, arrival, params_ij)

@@ -1,0 +1,171 @@
+"""XLA-level profiling hooks: compile time, flops/bytes, peak memory.
+
+Every benchmark in this repo used to hand-roll its own
+``.lower().compile().memory_analysis()`` incantation (and each asserted
+a different subset).  This module is the one home for that dance:
+
+    rec = profile_jit(fn, *args, name="streaming")   # ProfileRecord
+    rec.to_json()                                    # BENCH_*.json block
+
+:func:`profile_jit` lowers + compiles the function (timing it), reads
+``cost_analysis()`` (flops, bytes accessed) and ``memory_analysis()``
+(argument/output/temp bytes) off the compiled artifact, then times a few
+executions and keeps the median.  Everything is best-effort across jax
+versions: older releases return ``[dict]`` from cost_analysis, some
+backends omit fields — missing numbers surface as 0.0, never as crashes.
+
+:func:`profile_kernels` profiles the Pallas kernel stack
+(`maxplus_scan` / `maxplus_segment_scan`) on a representative shape —
+the records `repro.roofline.report.kernel_roofline` places on a
+machine roofline, and the profile block CI embeds in BENCH_kernels runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ProfileRecord", "profile_jit", "profile_kernels"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileRecord:
+    """One compiled program's compile/run/cost/memory breakdown.
+
+    ``flops``/``bytes_accessed`` are XLA's per-device cost-analysis
+    numbers for ONE execution; ``peak_bytes`` is the standard
+    argument+output+temp proxy for the live working set.  ``run_s`` is
+    the median of the timed executions (0.0 if none were requested).
+    """
+
+    name: str
+    compile_s: float
+    run_s: float
+    flops: float
+    bytes_accessed: float
+    argument_bytes: float
+    output_bytes: float
+    temp_bytes: float
+
+    @property
+    def peak_bytes(self) -> float:
+        return self.argument_bytes + self.output_bytes + self.temp_bytes
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """flops per byte accessed — the roofline x-coordinate."""
+        return self.flops / max(self.bytes_accessed, 1.0)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "compile_s": self.compile_s,
+            "run_s": self.run_s,
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "argument_bytes": self.argument_bytes,
+            "output_bytes": self.output_bytes,
+            "temp_bytes": self.temp_bytes,
+            "peak_bytes": self.peak_bytes,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ProfileRecord":
+        return cls(**{f.name: d[f.name]
+                      for f in dataclasses.fields(cls)})
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:               # backend without cost analysis
+        return {}
+    if isinstance(cost, list):      # older jax returns [dict]
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+def _mem_field(compiled, field: str) -> float:
+    try:
+        return float(getattr(compiled.memory_analysis(), field, 0) or 0)
+    except Exception:               # backend without memory analysis
+        return 0.0
+
+
+def profile_jit(fn: Callable, *args: Any, name: Optional[str] = None,
+                n_runs: int = 3, **kwargs: Any) -> ProfileRecord:
+    """Compile ``fn(*args, **kwargs)`` and record its cost breakdown.
+
+    ``fn`` may be a plain callable (it is jitted here) or an
+    already-jitted function — anything with AOT ``.lower()``.  Compile
+    time covers lowering + compilation of a cold cache; ``n_runs`` timed
+    executions (after one untimed warmup that also validates the
+    program runs) yield the median ``run_s``.  ``n_runs=0`` skips
+    execution entirely — compile/cost/memory still come back, which is
+    how CI profiles programs too big to run on its workers.
+    """
+    if not hasattr(fn, "lower"):
+        fn = jax.jit(fn)
+    if name is None:
+        name = getattr(fn, "__name__", repr(fn))
+    t0 = time.perf_counter()
+    compiled = fn.lower(*args, **kwargs).compile()
+    compile_s = time.perf_counter() - t0
+
+    cost = _cost_dict(compiled)
+    run_s = 0.0
+    if n_runs > 0:
+        runner = compiled
+        try:
+            jax.block_until_ready(runner(*args, **kwargs))   # warmup
+        except TypeError:
+            # the AOT artifact rejects static kwargs; fall back to the
+            # jitted callable (the warmup absorbs its re-trace)
+            runner = fn
+            jax.block_until_ready(runner(*args, **kwargs))
+        times = []
+        for _ in range(n_runs):
+            t0 = time.perf_counter()
+            jax.block_until_ready(runner(*args, **kwargs))
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        run_s = times[len(times) // 2]
+
+    return ProfileRecord(
+        name=name,
+        compile_s=compile_s,
+        run_s=run_s,
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        argument_bytes=_mem_field(compiled, "argument_size_in_bytes"),
+        output_bytes=_mem_field(compiled, "output_size_in_bytes"),
+        temp_bytes=_mem_field(compiled, "temp_size_in_bytes"),
+    )
+
+
+def profile_kernels(rows: int = 64, cols: int = 4096,
+                    n_runs: int = 3) -> list[ProfileRecord]:
+    """Profile the (max, +) kernel stack on a representative shape.
+
+    rows x cols mirrors a streaming chunk's (S * r * (p + 1), chunk)
+    flattening.  Both the plain scan and the segmented variant (8-way
+    segments, the fused replicated engine's workhorse) are profiled
+    through the SAME dispatch the simulator uses, so the records
+    describe the kernels as deployed, not a synthetic microbenchmark.
+    """
+    from repro.kernels.maxplus_scan import ops as mp_ops
+
+    a = jnp.linspace(0.0, 1.0, rows * cols).reshape(rows, cols)
+    b = jnp.full((rows, cols), 0.01)
+    flags = (jnp.arange(cols)[None, :] % (cols // 8) == 0)
+    flags = jnp.broadcast_to(flags, (rows, cols))
+    return [
+        profile_jit(mp_ops.maxplus_scan, a, b,
+                    name="maxplus_scan", n_runs=n_runs),
+        profile_jit(mp_ops.maxplus_segment_scan, a, b, flags,
+                    name="maxplus_segment_scan", n_runs=n_runs),
+    ]

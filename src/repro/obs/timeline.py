@@ -1,0 +1,242 @@
+"""Streaming telemetry timelines for the fork-join simulator.
+
+The paper's methodology is *measurement*: per-server busy times, the
+broker's share, the Sec 3.4 service-time imbalance.  The streaming
+engine of `repro.core.simulator` emits end-of-run aggregates only, so a
+saturating replica, a JSQ-vs-round-robin gap, or a flash crowd blowing
+the SLO all vanish into one mean.  This module adds the time axis back
+— without giving up the streaming-memory guarantee.
+
+:class:`TelemetrySpec` is an opt-in *static* knob on
+``simulate_fork_join(_batch)`` / ``sweep_simulated``: it is a plain
+frozen dataclass (hashable, NOT a pytree) so it rides the jit cache key,
+and ``telemetry=None`` (the default) compiles to the bit-identical
+pre-telemetry program — the scan carry only grows the per-bin
+accumulators when a spec is present.
+
+:class:`Timeline` is what comes back, on ``SimResult.timeline``: per
+time-bin counts and busy-seconds accumulated *inside* the existing
+``lax.scan`` carry (the PR 2 streaming-stats pattern — O(n_bins) state,
+never O(horizon)).  Queries are binned by ARRIVAL time on the absolute
+simulation clock; warmup queries are included by design (the whole point
+is observing transients).  Derived views are the operational-analysis
+quantities, which obey exact laws the tests self-check:
+
+    utilization  U = busy / bin_width      (and U = X * S, Eq 3)
+    queue depth  L = resp_sum / bin_width  (Little: L = lambda * W)
+
+:func:`timeline_from_trace` bins a measured/tapped
+`repro.calibrate.measure.TraceRecord` with the same conventions, so
+measured engines and simulated ones render on one dashboard.  (It
+duck-types the record — arrays in, arrays out — so this module never
+imports the calibrate package and stays import-cycle-free below the
+simulator.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+__all__ = ["TelemetrySpec", "Timeline", "timeline_from_trace",
+           "DEFAULT_TIMELINE_BINS"]
+
+DEFAULT_TIMELINE_BINS = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Static description of the timeline a simulation should record.
+
+    n_bins: time bins over the horizon.  State and output are O(n_bins).
+    horizon_seconds: wall-clock span covered by the bins.  Default None
+        derives it per scenario as ``n_queries / mean_rate`` (the
+        expected makespan); arrivals past the horizon clamp into the
+        last bin.
+    slo_seconds: response-time objective for the per-bin violation
+        count.  None disables the SLO tally (the field stays zero).
+
+    Plain frozen dataclass on purpose: instances are hashable and feed
+    ``jax.jit`` static arguments directly.
+    """
+
+    n_bins: int = DEFAULT_TIMELINE_BINS
+    horizon_seconds: Optional[float] = None
+    slo_seconds: Optional[float] = None
+
+    def __post_init__(self):
+        if self.n_bins < 1:
+            raise ValueError(f"need at least one bin; got {self.n_bins}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Timeline:
+    """Per-time-bin telemetry of a fork-join run (a pytree of arrays).
+
+    Every field carries the run's scenario shape ``(...)`` in front,
+    then the bin axis B; replica-resolved fields add ``r`` (and ``p``).
+    Queries land in the bin of their ARRIVAL time; busy-seconds land in
+    the bin of the query that generated them (exact conservation: the
+    busy totals equal the summed service times, see tests).
+
+    bin_seconds:   (...,)          width of one bin
+    count:         (..., B)        arrivals per bin (warmup included)
+    resp_sum:      (..., B)        summed response seconds per bin
+    busy_broker:   (..., B, r)     broker busy-seconds per replica
+    busy_server:   (..., B, r, p)  index-server busy-seconds
+    replica_count: (..., B, r)     queries routed to each replica
+    hit_count:     (..., B)        result-cache hits (zeros, no cache)
+    slo_count:     (..., B)        responses above the SLO (zeros if
+                                   the spec carried no slo_seconds)
+    """
+
+    bin_seconds: Array
+    count: Array
+    resp_sum: Array
+    busy_broker: Array
+    busy_server: Array
+    replica_count: Array
+    hit_count: Array
+    slo_count: Array
+
+    @property
+    def n_bins(self) -> int:
+        return self.count.shape[-1]
+
+    @property
+    def _n(self) -> Array:
+        return jnp.maximum(self.count, 1.0)
+
+    @property
+    def throughput(self) -> Array:
+        """(..., B) arrivals per second — operational X per bin."""
+        return self.count / self.bin_seconds[..., None]
+
+    @property
+    def utilization(self) -> Array:
+        """(..., B, r, p) server utilization U = busy / bin width."""
+        return self.busy_server / self.bin_seconds[..., None, None, None]
+
+    @property
+    def broker_utilization(self) -> Array:
+        """(..., B, r) broker utilization per replica."""
+        return self.busy_broker / self.bin_seconds[..., None, None]
+
+    @property
+    def mean_response(self) -> Array:
+        """(..., B) mean response of the queries arriving in each bin."""
+        return self.resp_sum / self._n
+
+    @property
+    def queue_depth(self) -> Array:
+        """(..., B) time-average population by Little's law.
+
+        L = lambda * W = (count / bin) * (resp_sum / count)
+          = resp_sum / bin_seconds — response-seconds are
+        population-seconds, attributed to the arrival bin.
+        """
+        return self.resp_sum / self.bin_seconds[..., None]
+
+    @property
+    def hit_fraction(self) -> Array:
+        """(..., B) result-cache hit share of each bin's arrivals."""
+        return self.hit_count / self._n
+
+    @property
+    def slo_violation_fraction(self) -> Array:
+        """(..., B) share of each bin's arrivals breaking the SLO."""
+        return self.slo_count / self._n
+
+    @property
+    def imbalance_share(self) -> Array:
+        """(..., B) largest single-replica share of each bin's arrivals.
+
+        1/r is perfect balance; 1.0 means one replica took everything —
+        the routing-quality signal that separates JSQ from round-robin
+        under bursty load.
+        """
+        return jnp.max(self.replica_count, axis=-1) / self._n
+
+    @property
+    def mean_service_per_query(self) -> Array:
+        """(..., B) busy-seconds per arrival, summed over servers.
+
+        The S in the per-bin operational check U = X * S: utilization
+        summed over a replica's servers equals throughput times this.
+        """
+        return (jnp.sum(self.busy_server, axis=(-2, -1))
+                + jnp.sum(self.busy_broker, axis=-1)) / self._n
+
+
+def timeline_from_trace(
+    arrival: Array,
+    response: Array,
+    spec: TelemetrySpec,
+    *,
+    broker_busy: Optional[Array] = None,
+    server_busy: Optional[Array] = None,
+    server_hit: Optional[Array] = None,
+    assign: Optional[Array] = None,
+    r: int = 1,
+) -> Timeline:
+    """Bin a materialized sample path into a :class:`Timeline`.
+
+    arrival/response: (n,) per-query seconds; broker_busy: (n,) broker
+    service seconds; server_busy: (n, p) per-server service seconds;
+    server_hit: (n,) or (n, p) cache-hit indicator; assign: (n,) replica
+    of each query (defaults to replica 0).  Binning and conservation
+    conventions match the streaming engine exactly: bin by arrival time,
+    clamp past-horizon arrivals into the last bin, include everything.
+
+    The arguments duck-type `repro.calibrate.measure.TraceRecord` — see
+    ``TraceRecord.to_timeline`` for the one-call bridge.
+    """
+    arrival = jnp.asarray(arrival)
+    response = jnp.asarray(response)
+    dtype = response.dtype
+    n = arrival.shape[0]
+    B = spec.n_bins
+    horizon = (spec.horizon_seconds if spec.horizon_seconds is not None
+               else float(jnp.max(arrival)) * (1.0 + 1e-6) + 1e-30)
+    bin_w = jnp.asarray(horizon / B, dtype)
+    bins = jnp.clip((arrival / bin_w).astype(jnp.int32), 0, B - 1)
+    asg = (jnp.zeros((n,), jnp.int32) if assign is None
+           else jnp.asarray(assign, jnp.int32))
+    one = jnp.ones((n,), dtype)
+
+    count = jnp.zeros((B,), dtype).at[bins].add(one)
+    resp_sum = jnp.zeros((B,), dtype).at[bins].add(response)
+    replica_count = jnp.zeros((B, r), dtype).at[bins, asg].add(one)
+    if broker_busy is not None:
+        busy_broker = jnp.zeros((B, r), dtype).at[bins, asg].add(
+            jnp.asarray(broker_busy, dtype))
+    else:
+        busy_broker = jnp.zeros((B, r), dtype)
+    if server_busy is not None:
+        sb = jnp.asarray(server_busy, dtype)
+        p = sb.shape[-1]
+        busy_server = jnp.zeros((B, r, p), dtype).at[bins, asg].add(sb)
+    else:
+        busy_server = jnp.zeros((B, r, 0), dtype)
+    if server_hit is not None:
+        hit = jnp.asarray(server_hit, dtype)
+        if hit.ndim > 1:            # per-(query, server) -> per-query mean
+            hit = jnp.mean(hit, axis=-1)
+        hit_count = jnp.zeros((B,), dtype).at[bins].add(hit)
+    else:
+        hit_count = jnp.zeros((B,), dtype)
+    if spec.slo_seconds is not None:
+        slo_count = jnp.zeros((B,), dtype).at[bins].add(
+            (response > spec.slo_seconds).astype(dtype))
+    else:
+        slo_count = jnp.zeros((B,), dtype)
+    return Timeline(bin_seconds=bin_w, count=count, resp_sum=resp_sum,
+                    busy_broker=busy_broker, busy_server=busy_server,
+                    replica_count=replica_count, hit_count=hit_count,
+                    slo_count=slo_count)

@@ -1,0 +1,306 @@
+"""Span traces: a fork-join sample path as Chrome-trace/Perfetto JSON.
+
+Timelines (`repro.obs.timeline`) aggregate; span traces *show the
+queries*.  This module materializes a routed sample path — per query:
+dispatch, broker service (the paper lumps broadcast+merge there), each
+index server's service, the join — and renders it in the Trace Event
+Format that chrome://tracing and ui.perfetto.dev load natively:
+
+  * one *process* per replica (pid = replica index),
+  * one *thread* per FCFS queue (tid 0 = broker, tid 1..p = servers),
+  * ``ph: "X"`` complete spans for service intervals — FCFS makes them
+    provably disjoint per queue, which :func:`validate_chrome_trace`
+    checks,
+  * ``ph: "b"/"e"`` async events spanning each query's whole
+    arrival -> join lifetime (lifetimes overlap; async events may).
+
+Span export materializes O(n_queries) state by design — it is the
+microscope for bounded windows (thousands of queries around an
+incident), not the streaming telescope.  Use timelines for horizons.
+
+The exporter has two front doors: :func:`simulate_spans` re-runs the
+simulator's topology with full per-query recording (flash-crowd
+replays, any r/routing), and :func:`spans_from_trace` renders a
+measured `repro.calibrate.measure.TraceRecord` (single-replica, the
+instrumented toy engine's output) — same event schema either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arrivals import ArrivalProcess
+from repro.core.queueing import ServerParams, service_time_server
+from repro.core.simulator import (
+    ROUTING_POLICIES,
+    _jsq_route,
+    fcfs_completion_times_routed,
+)
+
+Array = jax.Array
+
+__all__ = ["SpanTrace", "simulate_spans", "spans_from_trace",
+           "export_chrome_trace", "validate_chrome_trace"]
+
+_US = 1e6                       # trace-event timestamps are microseconds
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanTrace:
+    """A materialized routed sample path, ready for event rendering.
+
+    arrival/response: (n,) seconds; broker_busy: (n,); server_busy
+    (n, p); broker_done: (n,) broker-queue completion; completions:
+    (p, n) server-queue completions; assign: (n,) replica per query.
+    """
+
+    arrival: np.ndarray
+    response: np.ndarray
+    broker_busy: np.ndarray
+    server_busy: np.ndarray
+    broker_done: np.ndarray
+    completions: np.ndarray
+    assign: np.ndarray
+    r: int
+
+    @property
+    def n_queries(self) -> int:
+        return self.arrival.shape[0]
+
+    @property
+    def p(self) -> int:
+        return self.server_busy.shape[1]
+
+    def to_events(self) -> list[dict]:
+        """Render as Trace Event Format event dicts (microseconds)."""
+        events = []
+        for k in range(self.r):
+            events.append({"ph": "M", "name": "process_name", "pid": k,
+                           "tid": 0,
+                           "args": {"name": f"replica {k}"}})
+            events.append({"ph": "M", "name": "thread_name", "pid": k,
+                           "tid": 0, "args": {"name": "broker"}})
+            for j in range(self.p):
+                events.append({"ph": "M", "name": "thread_name",
+                               "pid": k, "tid": 1 + j,
+                               "args": {"name": f"server {j}"}})
+        arr, resp = self.arrival, self.response
+        brk_b, brk_d = self.broker_busy, self.broker_done
+        srv_b, comp = self.server_busy, self.completions
+        asg = self.assign
+        for i in range(self.n_queries):
+            pid = int(asg[i])
+            events.append({"ph": "b", "cat": "query", "id": i,
+                           "name": f"q{i}", "pid": pid, "tid": 0,
+                           "ts": float(arr[i]) * _US})
+            events.append({"ph": "X", "name": "broker",
+                           "cat": "service", "pid": pid, "tid": 0,
+                           "ts": float(brk_d[i] - brk_b[i]) * _US,
+                           "dur": float(brk_b[i]) * _US,
+                           "args": {"query": i}})
+            for j in range(self.p):
+                events.append({"ph": "X", "name": f"server {j}",
+                               "cat": "service", "pid": pid,
+                               "tid": 1 + j,
+                               "ts": float(comp[j, i]
+                                           - srv_b[i, j]) * _US,
+                               "dur": float(srv_b[i, j]) * _US,
+                               "args": {"query": i}})
+            events.append({"ph": "e", "cat": "query", "id": i,
+                           "name": f"q{i}", "pid": pid, "tid": 0,
+                           "ts": float(arr[i] + resp[i]) * _US})
+        return events
+
+
+def simulate_spans(
+    key: Array,
+    arrival: Union[ArrivalProcess, float],
+    n_queries: int,
+    params: ServerParams,
+    *,
+    r: int = 1,
+    routing: str = "round_robin",
+    impl: str = "xla",
+) -> SpanTrace:
+    """Materialize a routed fork-join sample path for span export.
+
+    Same topology as the streaming engine — dispatcher routes each query
+    to one of ``r`` replicas (``routing`` in "round_robin" | "random" |
+    "jsq"), each a broker + p-server fork-join over exponential services
+    — but every interval is kept, because the whole point is looking at
+    them.  Arrival gaps come per-query from the profile (flash crowds
+    shorter than a streaming chunk still render).
+    """
+    from repro.calibrate.measure import _sample_arrivals
+
+    if routing not in ROUTING_POLICIES:
+        raise ValueError(f"unknown routing policy {routing!r}; choose "
+                         f"one of {ROUTING_POLICIES}")
+    p = int(params.p)
+    proc = (arrival if isinstance(arrival, ArrivalProcess)
+            else ArrivalProcess.stationary(float(arrival)))
+    dtype = jnp.result_type(float)
+    k_arr, k_brk, k_srv, k_route = jax.random.split(key, 4)
+
+    arr = _sample_arrivals(k_arr, proc, n_queries).astype(dtype)
+    brk = (jax.random.exponential(k_brk, (n_queries,), dtype)
+           * jnp.asarray(params.s_broker, dtype))
+    srv = (jax.random.exponential(k_srv, (n_queries, p), dtype)
+           * jnp.asarray(service_time_server(params), dtype))
+
+    if r == 1 or routing == "round_robin":
+        asg = jnp.arange(n_queries, dtype=jnp.int32) % r
+    elif routing == "random":
+        asg = jax.random.randint(k_route, (n_queries,), 0, r,
+                                 jnp.int32)
+    else:                                            # jsq
+        gaps = jnp.diff(arr, prepend=arr[:1] * 0.0)
+        asg, _ = _jsq_route(
+            jnp.zeros((1, r, p), dtype), gaps[None, :],
+            jnp.moveaxis(srv, -1, 0)[None], jnp.ones((1, n_queries),
+                                                     dtype), r, dtype)
+        asg = asg[0].astype(jnp.int32)
+
+    broker_done, _ = fcfs_completion_times_routed(
+        arr, brk, asg, r, impl=impl)
+    fork = jnp.broadcast_to(broker_done[None, :], (p, n_queries))
+    asg_p = jnp.broadcast_to(asg[None, :], (p, n_queries))
+    completions, _ = fcfs_completion_times_routed(
+        fork, srv.T, asg_p, r, impl=impl)
+    response = jnp.max(completions, axis=0) - arr
+
+    return SpanTrace(
+        arrival=np.asarray(arr), response=np.asarray(response),
+        broker_busy=np.asarray(brk), server_busy=np.asarray(srv),
+        broker_done=np.asarray(broker_done),
+        completions=np.asarray(completions),
+        assign=np.asarray(asg), r=r)
+
+
+def spans_from_trace(trace, *, impl: str = "xla") -> SpanTrace:
+    """Span-render a measured `TraceRecord` (single replica).
+
+    The record carries arrivals, responses and busy times; the queue
+    completions are the max-plus replay of the busy times — the same
+    replay `measure_engine_trace` used to derive the responses, so the
+    spans are exactly the measured system's reconstruction.
+    """
+    from repro.core.simulator import fcfs_completion_times
+
+    arr = trace.arrival - trace.arrival[0]
+    brk = trace.broker_busy
+    srv = trace.server_busy
+    n, p = srv.shape
+    broker_done = fcfs_completion_times(arr, brk, impl=impl)
+    fork = jnp.broadcast_to(broker_done[None, :], (p, n))
+    completions = fcfs_completion_times(fork, srv.T, impl=impl)
+    return SpanTrace(
+        arrival=np.asarray(arr), response=np.asarray(trace.response),
+        broker_busy=np.asarray(brk), server_busy=np.asarray(srv),
+        broker_done=np.asarray(broker_done),
+        completions=np.asarray(completions),
+        assign=np.zeros((n,), np.int32), r=1)
+
+
+def export_chrome_trace(
+    spans_or_events: Union[SpanTrace, list],
+    path: Union[str, pathlib.Path],
+) -> pathlib.Path:
+    """Write Trace Event Format JSON loadable by chrome://tracing.
+
+    The JSON object form (``{"traceEvents": [...]}``) with
+    ``displayTimeUnit: "ms"`` — Perfetto and Chrome both accept it.
+    """
+    events = (spans_or_events.to_events()
+              if isinstance(spans_or_events, SpanTrace)
+              else list(spans_or_events))
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+    return path
+
+
+def validate_chrome_trace(
+    source: Union[str, pathlib.Path, dict],
+    *,
+    check_overlap: bool = True,
+) -> dict:
+    """Schema-check a Chrome-trace JSON; raise ValueError on violations.
+
+    Checks the Trace Event Format contract this exporter relies on:
+    the ``traceEvents`` envelope; per-phase required keys; nonnegative
+    durations; balanced ``b``/``e`` async pairs per (cat, id); and —
+    because FCFS queues serve one query at a time — that no two ``X``
+    spans on the same (pid, tid) lane overlap (``check_overlap``).
+    Returns summary counts for dashboards/CI logs.
+    """
+    if isinstance(source, (str, pathlib.Path)):
+        with open(source) as f:
+            obj = json.load(f)
+    else:
+        obj = source
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        raise ValueError("not a Chrome trace: missing 'traceEvents'")
+    events = obj["traceEvents"]
+    if not isinstance(events, list) or not events:
+        raise ValueError("'traceEvents' must be a non-empty list")
+
+    counts: dict = {"X": 0, "b": 0, "e": 0, "M": 0}
+    lanes: dict = {}
+    asyncs: dict = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or "ph" not in ev:
+            raise ValueError(f"event {i}: not a dict with 'ph'")
+        ph = ev["ph"]
+        if ph not in counts:
+            raise ValueError(f"event {i}: unsupported phase {ph!r}")
+        counts[ph] += 1
+        if "pid" not in ev:
+            raise ValueError(f"event {i}: missing 'pid'")
+        if ph == "M":
+            continue
+        if not isinstance(ev.get("ts"), (int, float)):
+            raise ValueError(f"event {i}: 'ts' must be a number")
+        if ph == "X":
+            if "name" not in ev:
+                raise ValueError(f"event {i}: X span missing 'name'")
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                raise ValueError(f"event {i}: X span needs dur >= 0")
+            lanes.setdefault((ev["pid"], ev.get("tid")), []).append(
+                (float(ev["ts"]), float(dur)))
+        else:                                          # "b" / "e"
+            if "id" not in ev or "cat" not in ev:
+                raise ValueError(
+                    f"event {i}: async {ph!r} needs 'cat' and 'id'")
+            asyncs[(ev["cat"], ev["id"])] = \
+                asyncs.get((ev["cat"], ev["id"]), 0) + (
+                    1 if ph == "b" else -1)
+    unbalanced = {k: v for k, v in asyncs.items() if v != 0}
+    if unbalanced:
+        raise ValueError(f"unbalanced async b/e pairs: "
+                         f"{sorted(unbalanced)[:5]}")
+    if check_overlap:
+        for (pid, tid), spans in lanes.items():
+            spans.sort()
+            end = -np.inf
+            for ts, dur in spans:
+                # FCFS lanes are disjoint up to float32 rounding of the
+                # absolute clock (ulp grows with ts)
+                tol = 0.5 + 4e-7 * abs(ts)
+                if ts < end - tol:
+                    raise ValueError(
+                        f"overlapping X spans on lane pid={pid} "
+                        f"tid={tid} at ts={ts}")
+                end = max(end, ts + dur)
+    counts["lanes"] = len(lanes)
+    counts["async_pairs"] = len(asyncs)
+    return counts

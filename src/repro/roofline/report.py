@@ -1,4 +1,17 @@
-"""Render the §Roofline table + §Dry-run summary from the JSON records."""
+"""Render the §Roofline table + §Dry-run summary from the JSON records.
+
+Two consumers share this module:
+
+* the dry-run experiment records (``experiments/*/*.json``) — the
+  original §Roofline table over (arch, shape, mesh) cells;
+* :func:`kernel_roofline` — the observability layer's
+  `repro.obs.profile.ProfileRecord`s (the Pallas (max, +) kernel stack
+  and the benchmark entry points) placed on a machine roofline:
+  compute_s = flops / peak_flops, memory_s = bytes / HBM bandwidth,
+  bound = the slower engine.  CI embeds the records in
+  ``BENCH_obs.json``, so the table renders from a committed baseline
+  without recompiling anything.
+"""
 
 from __future__ import annotations
 
@@ -43,6 +56,40 @@ def _advice(r) -> str:
     return "compute-bound: already near the MXU roofline; check MODEL/HLO"
 
 
+def kernel_roofline(records, hw=None) -> str:
+    """Place ProfileRecords on ``hw``'s roofline; return the table.
+
+    ``records`` are `repro.obs.profile.ProfileRecord`s (or their
+    ``to_json()`` dicts, e.g. read back from ``BENCH_obs.json``'s
+    ``kernel_profiles``).  For each, the roofline terms come straight
+    from XLA's cost analysis: compute_s = flops / peak_flops and
+    memory_s = bytes_accessed / hbm_bandwidth; the larger term names the
+    bound, and ``balance`` compares the record's arithmetic intensity to
+    the machine's ridge point (flops/byte at which both engines tie).
+    """
+    from repro.core.planner import TPU_V5E, RooflineTerms
+    from repro.obs.profile import ProfileRecord
+
+    hw = TPU_V5E if hw is None else hw
+    ridge = hw.peak_flops / hw.hbm_bandwidth
+    out = [f"| kernel | compute_s | memory_s | bound | F/B "
+           f"| ridge {ridge:.0f} | peak MiB |",
+           "|---|---|---|---|---|---|---|"]
+    for rec in records:
+        r = (ProfileRecord.from_json(rec) if isinstance(rec, dict)
+             else rec)
+        terms = RooflineTerms(
+            compute_s=r.flops / hw.peak_flops,
+            memory_s=r.bytes_accessed / hw.hbm_bandwidth,
+            collective_s=0.0)
+        ai = r.arithmetic_intensity
+        out.append(
+            f"| {r.name} | {terms.compute_s:.3e} | {terms.memory_s:.3e} "
+            f"| {terms.bound} | {ai:.2f} | {ai / ridge:.1%} of ridge "
+            f"| {r.peak_bytes / 2**20:.1f} |")
+    return "\n".join(out)
+
+
 def dryrun_summary(recs) -> str:
     single = [r for r in recs.values() if r["mesh"] == "single"]
     multi = [r for r in recs.values() if r["mesh"] == "multi"]
@@ -61,8 +108,13 @@ def dryrun_summary(recs) -> str:
 
 if __name__ == "__main__":
     import sys
+    if os.path.exists("BENCH_obs.json"):
+        obs = json.load(open("BENCH_obs.json"))
+        print(kernel_roofline(obs.get("kernel_profiles", [])))
+        print()
     dirs = sys.argv[1:] or ["experiments/dryrun_v2", "experiments/perf"]
     recs = load_records(*dirs)
-    print(dryrun_summary(recs))
-    print()
-    print(roofline_table(recs))
+    if recs:
+        print(dryrun_summary(recs))
+        print()
+        print(roofline_table(recs))

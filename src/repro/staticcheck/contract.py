@@ -94,6 +94,14 @@ def _probes() -> dict[str, Callable[[], dict[str, str]]]:
                 routing="jsq", result_cache=(0.3, 0.001)),
             key))
 
+    def p_sim_telemetry():
+        from repro.obs.timeline import TelemetrySpec
+        return _tree_specs(jax.eval_shape(
+            lambda k: simulator.simulate_fork_join(
+                k, 120.0, 256, params, chunk_size=128, r=2,
+                telemetry=TelemetrySpec(n_bins=8, slo_seconds=0.7)),
+            key))
+
     def p_sim_batch():
         lam = jax.ShapeDtypeStruct((3,), jnp.float32)
         batch_params = jax.tree_util.tree_map(
@@ -154,6 +162,7 @@ def _probes() -> dict[str, Callable[[], dict[str, str]]]:
     return {
         "simulate_fork_join": p_sim,
         "simulate_fork_join[r=3,cache]": p_sim_replicated,
+        "simulate_fork_join[telemetry]": p_sim_telemetry,
         "simulate_fork_join_batch": p_sim_batch,
         "sweep_analytical": p_sweep_analytical,
         "sweep_simulated": p_sweep_simulated,

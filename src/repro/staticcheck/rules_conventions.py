@@ -9,7 +9,10 @@ These subsume (and extend) the old 34-line grep guard that used to live in
   * RPR003 — no raw arrays fed to the calibration fitters (trace
     ingestion goes through ``TraceRecord``);
   * RPR004 — no hand-wired multi-``simulate_fork_join`` replica modeling
-    (replication goes through the dispatcher layer's ``r=``).
+    (replication goes through the dispatcher layer's ``r=``);
+  * RPR005 — measurement taps go through the observability layer
+    (``telemetry=`` takes a ``TelemetrySpec``; ``Timeline`` objects are
+    engine output, never hand-built).
 """
 
 from __future__ import annotations
@@ -228,3 +231,48 @@ def check_handwired_replicas(mod: Module) -> Iterator[Finding]:
                     f"arrival rate divided by `{arg.right.id}` by hand; "
                     "pass the TOTAL rate with r= so routing imbalance "
                     "is modeled (ROADMAP replica-topology convention)")
+
+
+# --------------------------------------------------------------------------
+# RPR005: telemetry-tap convention (PR 8)
+# --------------------------------------------------------------------------
+
+_TELEMETRY_ENTRY_LEAVES = {"simulate_fork_join", "simulate_fork_join_batch",
+                           "sweep_simulated"}
+
+
+@rule("RPR005", "telemetry-via-spec", "convention",
+      "measurement taps go through the observability layer: telemetry= "
+      "takes a repro.obs.TelemetrySpec (or None), and Timeline objects "
+      "are engine output, never hand-built",
+      scope=["src/**/*.py", "examples/**/*.py"],
+      exclude=["src/repro/obs/*.py", "src/repro/core/simulator.py"])
+def check_telemetry_spec(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        qn = resolve_call(mod, node)
+        leaf = qn.rsplit(".", 1)[-1] if qn else None
+        if leaf == "Timeline":
+            yield Finding(
+                "RPR005", mod.rel, node.lineno, node.col_offset,
+                "Timeline constructed by hand; timelines are engine "
+                "output — pass telemetry=TelemetrySpec(...) to the "
+                "simulator, or use timeline_from_trace for measured "
+                "traces")
+            continue
+        if leaf not in _TELEMETRY_ENTRY_LEAVES:
+            continue
+        for kw in node.keywords:
+            if kw.arg != "telemetry" or kw.value is None:
+                continue
+            v = kw.value
+            if isinstance(v, ast.Constant) and v.value is None:
+                continue
+            if isinstance(v, (ast.Constant, ast.Tuple, ast.List,
+                              ast.Dict)):
+                yield Finding(
+                    "RPR005", mod.rel, node.lineno, node.col_offset,
+                    "raw literal passed as telemetry=; construct a "
+                    "repro.obs.TelemetrySpec (bin count, horizon and "
+                    "SLO live in ONE validated place)")

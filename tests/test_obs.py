@@ -1,0 +1,403 @@
+"""Tests for the observability layer (ISSUE 8).
+
+Four contracts, each mapped to an acceptance criterion:
+
+* zero-cost opt-out — ``telemetry=None`` leaves every base statistic
+  BITWISE identical (telemetry draws no RNG and adds carry state only
+  when a spec is present);
+* conservation — per-bin tallies telescope exactly: counts sum to
+  n_queries, trace-binned busy-seconds sum to the trace's totals,
+  independent of n_bins and chunking;
+* operational laws — U = X * S and L = lambda * W hold per bin as
+  identities (float rounding only) and statistically against the
+  analytic service time on a stationary M/M/c-style scenario;
+* span traces — Chrome-trace JSON round-trips the schema validator,
+  which in turn rejects tampered traces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import capacity, simulator, sweep
+from repro.core.arrivals import ArrivalProcess
+from repro.core.queueing import ServerParams, service_time_server
+from repro.obs import DEFAULT_TIMELINE_BINS, TelemetrySpec, Timeline
+from repro.obs import profile as obs_profile
+from repro.obs import report as obs_report
+from repro.obs import trace_export
+from repro.obs.timeline import timeline_from_trace
+
+PARAMS = capacity.TABLE5_PARAMS
+KEY = jax.random.PRNGKey(0)
+
+
+def _base_stats(res):
+    return {f: np.asarray(getattr(res, f))
+            for f in ("count", "sum_response", "sumsq_response",
+                      "sum_broker", "sum_cluster", "sum_server", "hist",
+                      "tap_response")}
+
+
+# --------------------------------------------------------------------------
+# zero-cost opt-out
+# --------------------------------------------------------------------------
+
+def test_telemetry_none_returns_no_timeline():
+    res = simulator.simulate_fork_join(KEY, 20.0, 2_000, PARAMS)
+    assert res.timeline is None
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(),
+    dict(r=3, routing="jsq", result_cache=(0.2, 2e-3)),
+    dict(r=2, routing="round_robin", tap_size=8),
+])
+def test_telemetry_leaves_base_stats_bitwise_identical(kwargs):
+    """The acceptance criterion: telemetry on/off draws the same RNG
+    stream and produces bit-identical base statistics."""
+    plain = simulator.simulate_fork_join(KEY, 24.0, 12_000, PARAMS,
+                                         chunk_size=1024, **kwargs)
+    teled = simulator.simulate_fork_join(
+        KEY, 24.0, 12_000, PARAMS, chunk_size=1024,
+        telemetry=TelemetrySpec(n_bins=16, slo_seconds=0.5), **kwargs)
+    for f, a in _base_stats(plain).items():
+        b = np.asarray(getattr(teled, f))
+        np.testing.assert_array_equal(a, b, err_msg=f)
+    assert teled.timeline is not None
+
+
+# --------------------------------------------------------------------------
+# conservation
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [64, 1000, 4096])
+def test_counts_conserved_across_chunkings(chunk):
+    n_q = 9_000
+    res = simulator.simulate_fork_join(
+        KEY, 30.0, n_q, PARAMS, chunk_size=chunk, r=2,
+        telemetry=TelemetrySpec(n_bins=12))
+    tl = res.timeline
+    assert float(jnp.sum(tl.count)) == float(n_q)
+    assert float(jnp.sum(tl.replica_count)) == float(n_q)
+
+
+def test_totals_independent_of_n_bins():
+    """Same chunking, different bin counts: the per-chunk prefix sums
+    telescope, so every total is conserved (f32 re-summation only)."""
+    def totals(n_bins):
+        tl = simulator.simulate_fork_join(
+            KEY, 24.0, 10_000, PARAMS, chunk_size=1024, r=2,
+            routing="jsq", result_cache=(0.2, 2e-3),
+            telemetry=TelemetrySpec(n_bins=n_bins, slo_seconds=0.3),
+        ).timeline
+        return {f: float(jnp.sum(getattr(tl, f)))
+                for f in ("count", "resp_sum", "busy_broker",
+                          "busy_server", "replica_count", "hit_count",
+                          "slo_count")}
+
+    a, b = totals(4), totals(64)
+    for f in a:
+        np.testing.assert_allclose(a[f], b[f], rtol=1e-5, err_msg=f)
+
+
+def test_trace_binned_busy_equals_trace_totals():
+    """timeline_from_trace conservation: per-bin busy sums equal the
+    TraceRecord's busy totals for any bin count."""
+    from repro.calibrate.measure import simulate_trace
+
+    true = dataclasses.replace(PARAMS, p=4)
+    tr = simulate_trace(jax.random.PRNGKey(3), 15.0, 4_000, true)
+    for n_bins in (1, 7, 64):
+        tl = tr.to_timeline(TelemetrySpec(n_bins=n_bins))
+        assert isinstance(tl, Timeline)
+        np.testing.assert_allclose(
+            float(jnp.sum(tl.busy_server)),
+            float(jnp.sum(tr.server_busy)), rtol=1e-5)
+        np.testing.assert_allclose(
+            float(jnp.sum(tl.busy_broker)),
+            float(jnp.sum(tr.broker_busy)), rtol=1e-5)
+        np.testing.assert_allclose(
+            float(jnp.sum(tl.resp_sum)),
+            float(jnp.sum(tr.response)), rtol=1e-5)
+        assert float(jnp.sum(tl.count)) == float(tr.n_queries)
+
+
+def test_fused_and_masked_engines_agree_on_timelines():
+    spec = TelemetrySpec(n_bins=8, slo_seconds=0.4)
+    kw = dict(r=2, chunk_size=512, telemetry=spec)
+    tf = simulator.simulate_fork_join(KEY, 20.0, 6_000, PARAMS,
+                                      replica_impl="fused", **kw).timeline
+    tm = simulator.simulate_fork_join(KEY, 20.0, 6_000, PARAMS,
+                                      replica_impl="masked", **kw).timeline
+    for f in ("count", "resp_sum", "busy_broker", "busy_server",
+              "replica_count", "slo_count"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(tf, f)), np.asarray(getattr(tm, f)),
+            rtol=1e-4, atol=1e-4, err_msg=f)
+
+
+def test_slo_zero_counts_everything():
+    tl = simulator.simulate_fork_join(
+        KEY, 20.0, 4_000, PARAMS,
+        telemetry=TelemetrySpec(n_bins=8, slo_seconds=0.0)).timeline
+    np.testing.assert_allclose(np.asarray(tl.slo_count),
+                               np.asarray(tl.count))
+
+
+# --------------------------------------------------------------------------
+# operational laws
+# --------------------------------------------------------------------------
+
+def _stationary_timeline(lam, n_q=30_000, n_bins=16):
+    return simulator.simulate_fork_join(
+        KEY, lam, n_q, PARAMS, chunk_size=2048,
+        telemetry=TelemetrySpec(n_bins=n_bins)).timeline
+
+
+def test_oplaw_identities_per_bin():
+    """U = X*S and L = lambda*W recomputed from the accumulators are
+    identities — float rounding only (the dashboard's self-check)."""
+    tl = _stationary_timeline(lam=24.0)
+    report, worst = obs_report.oplaw_check(tl)
+    assert worst < 1e-6, report
+
+
+def test_utilization_law_statistical_mmc():
+    """On a stationary scenario, mid-horizon per-server utilization must
+    match the analytic U = lambda * S / 1 (each query visits every
+    server) within sampling tolerance."""
+    s_server = float(service_time_server(PARAMS))
+    lam = 0.6 / s_server                      # target utilization 0.6
+    tl = _stationary_timeline(lam=lam)
+    util = np.asarray(tl.utilization)[..., 0, :]       # (B, p)
+    mid = util[3:-3].mean()
+    np.testing.assert_allclose(mid, 0.6, rtol=0.15)
+
+
+def test_littles_law_statistical():
+    """L = lambda * W with L and W measured independently per bin."""
+    tl = _stationary_timeline(lam=24.0)
+    depth = np.asarray(tl.queue_depth)[3:-3]
+    lam_w = (np.asarray(tl.throughput)
+             * np.asarray(tl.mean_response))[3:-3]
+    np.testing.assert_allclose(depth, lam_w, rtol=1e-5)
+    # and against the configured arrival rate * mean response
+    w = np.asarray(tl.mean_response)[3:-3].mean()
+    np.testing.assert_allclose(depth.mean(), 24.0 * w, rtol=0.2)
+
+
+def test_sweep_simulated_threads_telemetry():
+    grid = sweep.SweepGrid.build(
+        lam=jnp.asarray([15.0, 25.0]), p=jnp.asarray([4.0]),
+        base=dataclasses.replace(PARAMS, p=4), broker_from_p=False)
+    res = sweep.sweep_simulated(grid, KEY, n_queries=2_000,
+                                chunk_size=512,
+                                telemetry=TelemetrySpec(n_bins=6))
+    tl = res.stats.timeline
+    assert tl is not None
+    # leaves carry the full (L,P,C,D,H,R) grid shape in front
+    assert tl.count.shape == (2, 1, 1, 1, 1, 1, 6)
+    assert tl.busy_server.shape == (2, 1, 1, 1, 1, 1, 6, 1, 4)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(tl.count, axis=-1)).ravel(),
+        [2_000.0, 2_000.0])
+    # without a spec the sweep stays timeline-free
+    plain = sweep.sweep_simulated(grid, KEY, n_queries=500,
+                                  chunk_size=512)
+    assert plain.stats.timeline is None
+
+
+# --------------------------------------------------------------------------
+# span traces
+# --------------------------------------------------------------------------
+
+def _flash_spans(n=400, r=3):
+    proc = ArrivalProcess.flash_crowd(
+        20.0, burst_starts=5.0, burst_seconds=4.0, burst_multiplier=4.0,
+        period_seconds=20.0, bin_seconds=1.0)
+    return trace_export.simulate_spans(KEY, proc, n, PARAMS, r=r,
+                                       routing="jsq")
+
+
+def test_chrome_trace_roundtrip_validates(tmp_path):
+    spans = _flash_spans()
+    path = trace_export.export_chrome_trace(spans, tmp_path / "t.json")
+    counts = trace_export.validate_chrome_trace(path)
+    # every query: 1 broker span + p server spans, one b/e pair
+    p = int(PARAMS.p)
+    assert counts["X"] == spans.n_queries * (p + 1)
+    assert counts["b"] == counts["e"] == spans.n_queries
+    assert counts["async_pairs"] == spans.n_queries
+    assert counts["lanes"] <= 3 * (p + 1)
+    obj = json.loads((tmp_path / "t.json").read_text())
+    assert obj["displayTimeUnit"] == "ms"
+
+
+def test_validator_rejects_tampered_traces():
+    events = _flash_spans(n=50, r=1).to_events()
+    # unbalanced async pair
+    broken = [e for e in events if not (e["ph"] == "e"
+                                        and e.get("id") == 0)]
+    with pytest.raises(ValueError, match="unbalanced"):
+        trace_export.validate_chrome_trace({"traceEvents": broken})
+    # overlapping spans on one FCFS lane
+    lanes = [e for e in events if e["ph"] == "X"]
+    clone = dict(lanes[0])
+    clone["ts"] = lanes[0]["ts"] - (lanes[0]["dur"] + 10_000.0)
+    clone["dur"] = 10 * (lanes[0]["dur"] + 10_000.0)
+    with pytest.raises(ValueError, match="overlap"):
+        trace_export.validate_chrome_trace(
+            {"traceEvents": events + [clone]})
+    with pytest.raises(ValueError, match="traceEvents"):
+        trace_export.validate_chrome_trace({"events": []})
+
+
+def test_spans_from_trace_bridges_measured_records():
+    from repro.calibrate.measure import simulate_trace
+
+    true = dataclasses.replace(PARAMS, p=4)
+    tr = simulate_trace(jax.random.PRNGKey(5), 12.0, 300, true)
+    spans = trace_export.spans_from_trace(tr)
+    assert spans.n_queries == tr.n_queries and spans.p == 4
+    trace_export.validate_chrome_trace(
+        {"traceEvents": spans.to_events()})
+
+
+# --------------------------------------------------------------------------
+# profiling hooks + roofline
+# --------------------------------------------------------------------------
+
+def test_profile_jit_records_cost_and_memory():
+    rec = obs_profile.profile_jit(
+        lambda a, b: a @ b, jnp.ones((64, 64)), jnp.ones((64, 64)),
+        name="matmul", n_runs=2)
+    assert rec.name == "matmul"
+    assert rec.compile_s > 0.0 and rec.run_s > 0.0
+    assert rec.flops > 0.0 and rec.peak_bytes > 0.0
+    d = rec.to_json()
+    rt = obs_profile.ProfileRecord.from_json(d)
+    assert rt == rec and d["peak_bytes"] == rec.peak_bytes
+
+
+def test_profile_jit_n_runs_zero_skips_execution():
+    rec = obs_profile.profile_jit(lambda x: x * 2.0, jnp.ones((8,)),
+                                  n_runs=0)
+    assert rec.run_s == 0.0 and rec.compile_s > 0.0
+
+
+def test_profile_kernels_and_roofline_table():
+    from repro.roofline.report import kernel_roofline
+
+    recs = obs_profile.profile_kernels(rows=8, cols=256, n_runs=0)
+    names = {r.name for r in recs}
+    assert names == {"maxplus_scan", "maxplus_segment_scan"}
+    table = kernel_roofline(recs)
+    for name in names:
+        assert name in table
+    assert "memory" in table or "compute" in table
+    # dict form (as read back from BENCH_obs.json) renders identically
+    assert kernel_roofline([r.to_json() for r in recs]) == table
+
+
+# --------------------------------------------------------------------------
+# dashboard helpers
+# --------------------------------------------------------------------------
+
+def test_report_renders_and_sparkline_handles_nan():
+    assert obs_report.sparkline([0.0, float("nan"), 1.0]) == "▁ █"
+    tl = simulator.simulate_fork_join(
+        KEY, 20.0, 3_000, PARAMS, r=2, result_cache=(0.3, 1e-3),
+        telemetry=TelemetrySpec(n_bins=8, slo_seconds=0.2)).timeline
+    panel = obs_report.render_timeline(tl, "unit")
+    for needle in ("throughput", "imbalance", "cache hits",
+                   "SLO viol frac"):
+        assert needle in panel
+    prof = obs_report.render_profiles(
+        [obs_profile.ProfileRecord("k", 1.0, 0.1, 1e6, 1e6, 1.0, 2.0,
+                                   3.0)])
+    assert "k" in prof
+
+
+def test_telemetry_spec_validation_and_defaults():
+    assert TelemetrySpec().n_bins == DEFAULT_TIMELINE_BINS
+    with pytest.raises(ValueError, match="at least one bin"):
+        TelemetrySpec(n_bins=0)
+    # hashable => usable as a jit static argument
+    assert hash(TelemetrySpec()) == hash(TelemetrySpec())
+
+
+def test_telemetry_horizon_override():
+    spec = TelemetrySpec(n_bins=10, horizon_seconds=100.0)
+    tl = simulator.simulate_fork_join(KEY, 20.0, 1_000, PARAMS,
+                                      telemetry=spec).timeline
+    np.testing.assert_allclose(float(tl.bin_seconds), 10.0)
+    assert float(jnp.sum(tl.count)) == 1_000.0
+
+
+# --------------------------------------------------------------------------
+# hypothesis properties (guarded like tests/test_calibrate.py so the
+# rest of the module runs without hypothesis)
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @given(n_bins=st.integers(1, 97), seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_property_binned_totals_conserved(n_bins, seed):
+        """PROPERTY: binning is a partition — per-bin sums of any
+        per-query quantity add back to the trace total, for ANY bin
+        count."""
+        rng = np.random.default_rng(seed)
+        n, p = 257, 3
+        arrival = np.cumsum(rng.random(n).astype(np.float32) * 0.1)
+        response = rng.random(n).astype(np.float32)
+        server_busy = rng.random((n, p)).astype(np.float32) * 0.05
+        broker_busy = rng.random(n).astype(np.float32) * 0.01
+        tl = timeline_from_trace(
+            arrival - arrival[0], response, TelemetrySpec(n_bins=n_bins),
+            broker_busy=broker_busy, server_busy=server_busy)
+        assert float(jnp.sum(tl.count)) == float(n)
+        np.testing.assert_allclose(float(jnp.sum(tl.resp_sum)),
+                                   response.sum(), rtol=1e-4)
+        np.testing.assert_allclose(float(jnp.sum(tl.busy_server)),
+                                   server_busy.sum(), rtol=1e-4)
+        np.testing.assert_allclose(float(jnp.sum(tl.busy_broker)),
+                                   broker_busy.sum(), rtol=1e-4)
+
+    @given(n_bins=st.integers(2, 64), seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_property_oplaws_hold_for_any_binning(n_bins, seed):
+        """PROPERTY: U = X*S and L = lambda*W are identities of the
+        binned accumulators regardless of bin count."""
+        rng = np.random.default_rng(seed)
+        n = 211
+        arrival = np.cumsum(rng.random(n).astype(np.float32) * 0.2)
+        response = rng.random(n).astype(np.float32)
+        server_busy = rng.random((n, 2)).astype(np.float32) * 0.05
+        tl = timeline_from_trace(
+            arrival - arrival[0], response, TelemetrySpec(n_bins=n_bins),
+            broker_busy=np.zeros(n, np.float32), server_busy=server_busy)
+        _, worst = obs_report.oplaw_check(tl)
+        assert worst < 1e-5
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis (see "
+                      "pyproject [project.optional-dependencies].test)")
+    def test_property_binned_totals_conserved():
+        pass
+
+    @pytest.mark.skip(reason="property tests need hypothesis (see "
+                      "pyproject [project.optional-dependencies].test)")
+    def test_property_oplaws_hold_for_any_binning():
+        pass

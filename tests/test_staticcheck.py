@@ -177,6 +177,50 @@ def test_rpr004_handwired_replicas():
                "    return outs\n"))
 
 
+def test_rpr005_telemetry_literal():
+    assert_triple(
+        "RPR005", "src/repro/core/x.py",
+        bad=("from repro.core.simulator import simulate_fork_join\n"
+             "def f(key, params):\n"
+             "    return simulate_fork_join(key, 50.0, 256, params,\n"
+             "                              telemetry=64)\n"),
+        # the sanctioned shapes: a TelemetrySpec, None, or a variable
+        clean=("from repro.core.simulator import simulate_fork_join\n"
+               "from repro.obs import TelemetrySpec\n"
+               "def f(key, params, spec):\n"
+               "    a = simulate_fork_join(key, 50.0, 256, params,\n"
+               "                           telemetry=TelemetrySpec())\n"
+               "    b = simulate_fork_join(key, 50.0, 256, params,\n"
+               "                           telemetry=None)\n"
+               "    c = simulate_fork_join(key, 50.0, 256, params,\n"
+               "                           telemetry=spec)\n"
+               "    return a, b, c\n"))
+
+
+def test_rpr005_handbuilt_timeline():
+    assert_triple(
+        "RPR005", "src/repro/core/x.py",
+        bad=("from repro.obs import Timeline\n"
+             "def f(xs):\n"
+             "    return Timeline(bin_seconds=xs, count=xs, resp_sum=xs,\n"
+             "                    busy_broker=xs, busy_server=xs,\n"
+             "                    replica_count=xs, hit_count=xs,\n"
+             "                    slo_count=xs)\n"),
+        clean=("def f(trace):\n"
+               "    return trace.to_timeline()\n"))
+
+
+def test_rpr005_silent_in_obs_package():
+    src = ("from repro.obs.timeline import Timeline\n"
+           "def f(xs):\n"
+           "    return Timeline(bin_seconds=xs, count=xs, resp_sum=xs,\n"
+           "                    busy_broker=xs, busy_server=xs,\n"
+           "                    replica_count=xs, hit_count=xs,\n"
+           "                    slo_count=xs)\n")
+    assert "RPR005" not in ids_of(src, "src/repro/obs/timeline.py")
+    assert "RPR005" not in ids_of(src, "src/repro/core/simulator.py")
+
+
 # --------------------------------------------------------------------------
 # tracer rules
 # --------------------------------------------------------------------------
