@@ -164,8 +164,9 @@ def bench_fig14_result_cache(rows):
     r65 = queueing.response_time_with_result_cache(65.0, p4, 0.5, 0.069e-3)
     rows.append(("fig14_scenario6", 0.0,
                  f"R(65qps)={float(r65) * 1e3:.0f}ms paper=282ms"))
-    plan = capacity.plan_capacity(p4, 195.0, 0.300,
-                                  result_cache=(0.5, 0.069e-3))
+    from repro.core.cluster import ClusterSpec
+    plan = capacity.plan_capacity(
+        p4, 195.0, 0.300, cluster=ClusterSpec(result_cache=(0.5, 0.069e-3)))
     rows.append(("fig14_replication", 0.0,
                  f"replicas={plan.n_replicas}x100 paper=3x100 (@195qps)"))
 

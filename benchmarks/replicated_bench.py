@@ -12,7 +12,10 @@ floats — INDEPENDENT of r (only the S x r x p carries grow with r):
 * the fused program's footprint is strictly below the masked oracle's
   (which keeps the old S x r x p x chunk law);
 * measured temp memory is INDEPENDENT of n_queries (streaming: a 4x
-  longer horizon must not grow the program's footprint).
+  longer horizon must not grow the program's footprint);
+* the elastic autoscaling scenario (``ClusterSpec(autoscale=...)``)
+  obeys the SAME slope and n-invariance laws — the controller carry is
+  O(S) scalars, so autoscale= must not re-introduce an r-scaled buffer.
 
 All are checked against XLA's own ``memory_analysis()`` of the lowered
 streaming program, not a hand-waved proxy.  Timing is a median of 3
@@ -48,7 +51,7 @@ _TIMING_PASSES = 3
 
 
 def _compiled_temp_bytes(lam, params, n_queries, p, r, chunk,
-                         replica_impl="fused"):
+                         replica_impl="fused", autoscale=None):
     from repro.core import simulator
     proc = simulator._as_batch_process(lam)
     compiled = simulator._simulate_stream.lower(
@@ -56,13 +59,16 @@ def _compiled_temp_bytes(lam, params, n_queries, p, r, chunk,
         jnp.asarray(0.0), n_queries=n_queries, p=p, mode="exponential",
         impl="xla", chunk=chunk, warmup_fraction=0.1, hist_bins=256,
         tap_size=0, r=r, routing="round_robin",
-        has_cache=False, replica_impl=replica_impl).compile()
+        has_cache=False, replica_impl=replica_impl,
+        autoscale=autoscale).compile()
     return int(compiled.memory_analysis().temp_size_in_bytes)
 
 
 def bench_replicated_sweep(rows):
     from repro.core import capacity, sweep
+    from repro.core.cluster import ClusterSpec
     from repro.core.queueing import ServerParams
+    from repro.launch.elastic import AutoscalePolicy
 
     grid = sweep.SweepGrid.build(
         lam=jnp.asarray([30.0, 60.0, 90.0]),
@@ -76,31 +82,32 @@ def bench_replicated_sweep(rows):
     n_scen, p, r, chunk = 3, 8, 4, 4096
     n_q = _util.scale_queries(400_000, 100_000)
 
-    def run(routing, impl):
-        res = sweep.sweep_simulated(grid, jax.random.PRNGKey(0),
+    def run(bench_grid, spec, impl):
+        res = sweep.sweep_simulated(bench_grid, jax.random.PRNGKey(0),
                                     n_queries=n_q, chunk_size=chunk,
-                                    routing=routing, impl=impl)
+                                    cluster=spec, impl=impl)
         jax.block_until_ready(res.mean)
         return res
 
-    def timed(routing, impl):
-        res = run(routing, impl)               # compile + warm
+    def timed(bench_grid, spec, impl):
+        res = run(bench_grid, spec, impl)      # compile + warm
         times = []
         for _ in range(_TIMING_PASSES):
             t0 = time.perf_counter()
-            run(routing, impl)
+            run(bench_grid, spec, impl)
             times.append(time.perf_counter() - t0)
         return statistics.median(times), res
 
-    dt, res = timed("round_robin", "pallas")   # the fused kernel path
-    dt_xla, _ = timed("round_robin", "xla")
-    dt_jsq, _ = timed("jsq", "xla")
+    rr = ClusterSpec(routing="round_robin")
+    dt, res = timed(grid, rr, "pallas")        # the fused kernel path
+    dt_xla, _ = timed(grid, rr, "xla")
+    dt_jsq, _ = timed(grid, ClusterSpec(routing="jsq"), "xla")
 
     # SimSweepResult carries the grid (not a pytree); profile the stats
     profile = _util.profile_block(
         jax.jit(lambda key: sweep.sweep_simulated(
             grid, key, n_queries=n_q, chunk_size=chunk,
-            routing="round_robin", impl="pallas").stats),
+            cluster=rr, impl="pallas").stats),
         jax.random.PRNGKey(0),
         name=f"replicated_sweep[{n_scen}x{r}x{n_q}]", n_runs=0)
 
@@ -137,6 +144,34 @@ def bench_replicated_sweep(rows):
         f"peak temp moved with n_queries ({temp_r4} -> {temp_r4_long}); "
         "the engine is no longer streaming")
 
+    # --- elastic autoscaling scenario: the controller carry is O(S)
+    # scalars, so the fused r-free law must survive autoscale= — the
+    # same slope/streaming assertions, lowered with a live policy -------
+    pol = AutoscalePolicy(min_r=1, max_r=r, decision_interval_seconds=0.5)
+    as_grid = dataclasses.replace(
+        grid, r=jnp.ones((1,), jnp.float32), autoscale=(pol,))
+    dt_as, res_as = timed(as_grid, ClusterSpec(routing="jsq"), "xla")
+    mean_active = float(jnp.mean(
+        res_as.stats.replica_seconds
+        / jnp.maximum(res_as.stats.elapsed_seconds, 1e-30)))
+
+    pol_r1 = AutoscalePolicy(min_r=1, max_r=1,
+                             decision_interval_seconds=0.5)
+    temp_as_r1 = _compiled_temp_bytes(lam, vec, probe_q, p, 1, chunk,
+                                      autoscale=pol_r1)
+    temp_as = _compiled_temp_bytes(lam, vec, probe_q, p, r, chunk,
+                                   autoscale=pol)
+    temp_as_long = _compiled_temp_bytes(lam, vec, 4 * probe_q, p, r,
+                                        chunk, autoscale=pol)
+    slope_as_per_r = (temp_as - temp_as_r1) / (r - 1)
+    assert slope_as_per_r <= _MAX_BUFFERS_PER_R * unit, (
+        f"autoscaled peak temp grows {slope_as_per_r / unit:.1f} "
+        f"S*p*chunk buffers per replica — above {_MAX_BUFFERS_PER_R}; "
+        "the elastic controller broke the fused r-free streaming law")
+    assert abs(temp_as_long - temp_as) <= 0.02 * temp_as, (
+        f"autoscaled peak temp moved with n_queries ({temp_as} -> "
+        f"{temp_as_long}); the elastic engine is no longer streaming")
+
     record = {
         "bench": "replicated_sweep",
         "n_scenarios": n_scen,
@@ -150,15 +185,22 @@ def bench_replicated_sweep(rows):
         "wall_seconds": dt,
         "wall_seconds_xla": dt_xla,
         "wall_seconds_jsq": dt_jsq,
+        "wall_seconds_autoscale": dt_as,
         "queries_per_s": queries_per_s,
         "queries_per_s_xla": n_scen * n_q / dt_xla,
         "queries_per_s_jsq": n_scen * n_q / dt_jsq,
+        "queries_per_s_autoscale": n_scen * n_q / dt_as,
         "events_per_s": events_per_s,
         "peak_mem_streaming_bytes": peak_state,
         "peak_mem_measured_bytes": temp_r4,
         "peak_mem_measured_r1_bytes": temp_r1,
         "peak_mem_measured_masked_bytes": temp_r4_masked,
         "peak_mem_slope_buffers_per_r": slope_per_r / unit,
+        "peak_mem_autoscale_bytes": temp_as,
+        "peak_mem_autoscale_slope_buffers_per_r": slope_as_per_r / unit,
+        "autoscale_policy": f"{pol.min_r}..{pol.max_r}"
+                            f"@{pol.target_utilization:g}",
+        "mean_active_replicas": mean_active,
         "mean_response_check": [float(x) for x in
                                 jnp.ravel(res.mean)[:3]],
         "profile": profile,
@@ -170,8 +212,11 @@ def bench_replicated_sweep(rows):
                  f"{n_scen} scen x {r} replicas x {n_q} queries; "
                  f"{queries_per_s / 1e6:.2f}M queries/s fused-pallas "
                  f"(xla {n_scen * n_q / dt_xla / 1e6:.2f}M, jsq "
-                 f"{n_scen * n_q / dt_jsq / 1e6:.2f}M); peak temp "
+                 f"{n_scen * n_q / dt_jsq / 1e6:.2f}M, autoscale "
+                 f"{n_scen * n_q / dt_as / 1e6:.2f}M @ mean "
+                 f"{mean_active:.2f} active); peak temp "
                  f"{temp_r4 / 2**20:.1f} MiB vs masked "
                  f"{temp_r4_masked / 2**20:.1f} MiB, "
-                 f"{slope_per_r / unit:.1f} SxPxChunk buffers/replica, "
+                 f"{slope_per_r / unit:.1f} SxPxChunk buffers/replica "
+                 f"(autoscaled {slope_as_per_r / unit:.1f}), "
                  f"n-invariant; -> {out}"))

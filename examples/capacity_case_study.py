@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import capacity, queueing
+from repro.core.cluster import ClusterSpec
 
 SLO = 0.300
 TARGET_QPS = 200.0
@@ -47,8 +48,8 @@ print("\n== Scenario 6: application-level result caching (Eq 8) ==")
 r65 = queueing.response_time_with_result_cache(65.0, p4, 0.5, 0.069e-3)
 print(f"  R(65 qps | hit_r=0.5) = {float(r65) * 1e3:.0f} ms "
       f"(paper: 282 ms)")
-plan6 = capacity.plan_capacity(p4, 195.0, SLO,
-                               result_cache=(0.5, 0.069e-3))
+plan6 = capacity.plan_capacity(
+    p4, 195.0, SLO, cluster=ClusterSpec(result_cache=(0.5, 0.069e-3)))
 print(f"  plan for 195 qps: {plan6.n_replicas} x 100 "
       f"(paper: 3 x 100 at 65 qps each)")
 

@@ -34,6 +34,7 @@ import jax
 
 from repro.core import capacity, simulator
 from repro.core.arrivals import ArrivalProcess
+from repro.core.cluster import ClusterSpec
 from repro.obs import TelemetrySpec
 from repro.obs import profile as obs_profile
 from repro.obs import report as obs_report
@@ -66,7 +67,7 @@ print(f"== scenario: flash crowd (lam {LAM:g} qps x4 burst), "
 spec = TelemetrySpec(n_bins=BINS, slo_seconds=SLO)
 res = simulator.simulate_fork_join(
     jax.random.PRNGKey(0), flash, N_QUERIES, params,
-    r=R, routing=ROUTING, telemetry=spec)
+    cluster=ClusterSpec(r=R, routing=ROUTING), telemetry=spec)
 print(obs_report.render_timeline(res.timeline, "flash crowd replay"))
 print()
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import capacity, planner, simulator, sweep
 from repro.core.arrivals import ArrivalProcess
+from repro.core.cluster import ClusterSpec
 
 # The H_100 join tax puts the memory-1x cluster's latency FLOOR at
 # ~520 ms (the paper's "baseline is infeasible even at very low rates"),
@@ -61,7 +62,8 @@ print("\n== Mechanistic cross-check of the analytical plan ==")
 target, slo = 40.0, SLO
 params = capacity.scenario_params(memory=4, p=100)
 plan = capacity.plan_capacity(params, target, slo, simulate=True,
-                              routing="jsq", key=jax.random.PRNGKey(0))
+                              cluster=ClusterSpec(routing="jsq"),
+                              key=jax.random.PRNGKey(0))
 print(f"  replicas_needed -> {plan.n_replicas} replicas x "
       f"{plan.servers_per_replica} servers "
       f"(util {plan.utilization:.2f}); Eq 7 upper "
@@ -78,8 +80,8 @@ crowd = ArrivalProcess.flash_crowd(
     burst_multiplier=3.0, period_seconds=1800.0, bin_seconds=60.0)
 for r in (plan.n_replicas, 3 * plan.n_replicas):
     res = simulator.simulate_fork_join(
-        jax.random.PRNGKey(1), crowd, 150_000, params, r=r,
-        routing="jsq", chunk_size=1024)
+        jax.random.PRNGKey(1), crowd, 150_000, params,
+        cluster=ClusterSpec(r=r, routing="jsq"), chunk_size=1024)
     tag = "planned" if r == plan.n_replicas else "peak-provisioned"
     print(f"  r={r} ({tag}): mean {float(res.mean_response) * MS:6.0f} ms,"
           f" p95 {float(res.quantile(0.95)) * MS:6.0f} ms "

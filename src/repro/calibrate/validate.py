@@ -28,7 +28,9 @@ from repro.calibrate import fit, measure
 from repro.calibrate.fit import CalibratedParams
 from repro.calibrate.measure import TraceRecord
 from repro.core import simulator
+from repro.core.cluster import ClusterSpec, resolve_cluster
 from repro.core.queueing import ServerParams
+from repro.launch.elastic import AutoscalePolicy
 
 Array = jax.Array
 
@@ -47,13 +49,16 @@ class ValidationReport:
     r_calibrated: Array   # calibrated analytical prediction (s)
     r_simulated: Array    # calibrated-simulator mean response (s)
     calibrated: CalibratedParams
-    # Replicated cross-check (``validate(..., replicas=r > 1)``): the
-    # calibrated cluster simulated as r dispatcher-routed copies at
+    # Replicated cross-check (``validate(..., cluster=ClusterSpec(r=...))``):
+    # the calibrated cluster simulated as r dispatcher-routed copies at
     # r x the window rate — per-replica load is unchanged, so deviations
     # from ``r_simulated`` isolate routing/imbalance effects that the
     # analytical even-split assumption cannot see.  None when r == 1.
+    # Under an autoscale policy ``replicas`` is the policy's max_r (the
+    # provisioned fleet) and ``autoscale`` records the policy itself.
     r_sim_replicated: Optional[Array] = None
     replicas: int = 1
+    autoscale: Optional[AutoscalePolicy] = None
 
     @property
     def rel_err_observed(self) -> Array:
@@ -148,8 +153,9 @@ def validate(
     key: Optional[Array] = None,
     simulator_queries: int = 40_000,
     impl: str = "xla",
-    replicas: int = 1,
-    routing: str = "round_robin",
+    cluster: Optional[ClusterSpec] = None,
+    replicas: Optional[int] = None,
+    routing: Optional[str] = None,
     result_cache=None,
 ) -> ValidationReport:
     """Score a calibrated model on (held-out) trace windows.
@@ -162,14 +168,21 @@ def validate(
     each held-out window's observed rate under the calibrated parameters
     (mode="cache", one batched dispatch for all windows).
 
-    ``replicas > 1`` adds the simulated-replicated column: the same
-    calibrated cluster deployed as ``replicas`` dispatcher-routed copies
-    (optionally with a broker-level ``result_cache``) at ``replicas`` x
-    each window's observed rate.  Per-replica load matches the measured
+    ``cluster=ClusterSpec(r > 1)`` adds the simulated-replicated column:
+    the same calibrated cluster deployed as r dispatcher-routed copies
+    (with the spec's routing/result cache/replica engine) at r x each
+    window's observed rate.  Per-replica load matches the measured
     system, so this column scores the scale-out story the single-cluster
     trace cannot measure directly: does calibrated + replicated still
-    behave like calibrated x 1 under the chosen ``routing``?
+    behave like calibrated x 1 under the chosen routing?  With
+    ``autoscale=`` on the spec the column runs the elastic fleet at
+    ``max_r`` x the window rate (peak per-replica load matches when
+    fully scaled out).  The loose ``replicas=`` / ``routing=`` /
+    ``result_cache=`` keywords keep working through the
+    `repro.core.cluster.resolve_cluster` deprecation shim.
     """
+    spec = resolve_cluster(cluster, r=replicas, routing=routing,
+                           result_cache=result_cache, caller="validate")
     lam_w, r_obs_w, _ = measure.window_stats(traces, n_windows)
     n_hold = max(1, int(round(lam_w.shape[0] * holdout_fraction)))
     lam_h, r_obs_h = lam_w[-n_hold:], r_obs_w[-n_hold:]
@@ -184,12 +197,12 @@ def validate(
     r_sim = sim.mean_response
 
     r_rep = None
-    if replicas > 1:
+    rep_r = spec.engine_r
+    if rep_r > 1 or spec.autoscale is not None:
         rep = simulator.simulate_fork_join_batch(
-            jax.random.fold_in(key, replicas), lam_h * replicas,
+            jax.random.fold_in(key, rep_r), lam_h * rep_r,
             _vec_params(params, n_hold), simulator_queries,
-            p=int(params.p), mode="cache", impl=impl, r=replicas,
-            routing=routing, result_cache=result_cache)
+            p=int(params.p), mode="cache", impl=impl, cluster=spec)
         r_rep = rep.mean_response
 
     order = jnp.argsort(lam_h)
@@ -198,7 +211,7 @@ def validate(
         r_calibrated=r_cal[order], r_simulated=r_sim[order],
         calibrated=calibrated,
         r_sim_replicated=None if r_rep is None else r_rep[order],
-        replicas=replicas)
+        replicas=rep_r, autoscale=spec.autoscale)
 
 
 def calibrate_and_validate(

@@ -17,7 +17,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import queueing
+from repro.core.cluster import ClusterSpec, resolve_cluster
 from repro.core.queueing import ServerParams
+from repro.launch.elastic import AutoscalePolicy
 
 Array = jax.Array
 
@@ -166,6 +168,13 @@ class CapacityPlan:
     (``plan_capacity(..., simulate=True)``): the planned topology —
     ``n_replicas`` dispatcher-routed copies of the p-server cluster,
     result cache included — run at the full target rate.
+
+    ``autoscale``/``mean_active_replicas`` are filled when the cross
+    check ran an elastic fleet (``cluster=ClusterSpec(autoscale=...)``):
+    the policy that was simulated and the time-averaged active replica
+    count it actually used — comparing it to ``n_replicas`` (the static
+    Sec-6 answer, which stays the provisioning headline) quantifies the
+    elastic saving.
     """
 
     n_replicas: int
@@ -178,6 +187,8 @@ class CapacityPlan:
     response_simulated_ms: Optional[float] = None
     response_simulated_p95_ms: Optional[float] = None
     routing: Optional[str] = None
+    autoscale: Optional[AutoscalePolicy] = None
+    mean_active_replicas: Optional[float] = None
 
 
 def plan_capacity(
@@ -185,10 +196,11 @@ def plan_capacity(
     target_rate: float,
     slo_seconds: float,
     *,
+    cluster: Optional[ClusterSpec] = None,
     result_cache: Optional[tuple[float, float]] = None,
     simulate: bool = False,
     key=None,
-    routing: str = "round_robin",
+    routing: Optional[str] = None,
     n_queries: int = 60_000,
     mode: str = "exponential",
 ) -> CapacityPlan:
@@ -198,38 +210,69 @@ def plan_capacity(
     cluster off the Eq 7/Eq 8 upper bound.  ``simulate=True``
     additionally runs the replicated streaming simulator
     (`repro.core.simulator.simulate_fork_join` with ``r=n_replicas`` and
-    the same ``result_cache``) at the FULL target rate, so the plan's
+    the same result cache) at the FULL target rate, so the plan's
     headline numbers carry a mechanistic sanity check of the even-split
-    assumption under an actual ``routing`` policy.
+    assumption under an actual routing policy.
+
+    ``cluster=ClusterSpec(...)`` supplies the topology knobs (routing,
+    result cache, replica engine, autoscale policy); its ``r`` must stay
+    at the default — sizing the fleet is this function's job.  The loose
+    ``routing=`` / ``result_cache=`` keywords keep working through the
+    `repro.core.cluster.resolve_cluster` deprecation shim.
+
+    With ``autoscale=AutoscalePolicy(...)`` on the spec the simulated
+    cross-check runs THAT elastic fleet instead of ``n_replicas`` static
+    copies (the policy's ``max_r`` sets provisioning), and the plan
+    reports the policy plus its time-averaged ``mean_active_replicas``
+    — the replica-seconds integral that makes "elastic vs static" a
+    like-for-like cost comparison.  Policies need the simulator, so
+    ``simulate=False`` with an autoscale policy is an error.
     """
+    spec = resolve_cluster(cluster, routing=routing,
+                           result_cache=result_cache,
+                           caller="plan_capacity")
+    if spec.r != 1:
+        raise ValueError(
+            "plan_capacity sizes the fleet itself; leave ClusterSpec.r "
+            "at its default")
+    if spec.autoscale is not None and not simulate:
+        raise ValueError(
+            "an autoscale policy only affects the simulated cross-check "
+            "(the Eq 7/8 sizing is static); pass simulate=True")
+    cache = spec.result_cache
     n, per_replica = replicas_needed(
-        params, target_rate, slo_seconds, result_cache=result_cache)
+        params, target_rate, slo_seconds, result_cache=cache)
     n_i = int(n)
     rate = float(target_rate) / max(n_i, 1)
     lo, hi = queueing.response_time_bounds(rate, params)
-    if result_cache is not None:
+    if cache is not None:
         hi = queueing.response_time_with_result_cache(
-            rate, params, *result_cache)
+            rate, params, *cache)
     p = int(jnp.asarray(params.p))
     util = queueing.utilization(rate, queueing.service_time_server(params))
-    sim_ms = sim_p95_ms = None
+    sim_ms = sim_p95_ms = mean_active = None
     _SIM_REPLICA_CAP = 256
-    feasible = float(per_replica) > 1e-9
-    if simulate and feasible and n_i <= _SIM_REPLICA_CAP:
+    sim_r = (spec.autoscale.max_r if spec.autoscale is not None else n_i)
+    feasible = float(per_replica) > 1e-9 or spec.autoscale is not None
+    if simulate and feasible and sim_r <= _SIM_REPLICA_CAP:
         from repro.core import simulator  # deferred: planner-only dep
         key = jax.random.PRNGKey(0) if key is None else key
+        sim_spec = (spec if spec.autoscale is not None
+                    else dataclasses.replace(spec, r=n_i))
         sim = simulator.simulate_fork_join(
             key, float(target_rate), n_queries, params, mode=mode,
-            r=n_i, routing=routing, result_cache=result_cache)
+            cluster=sim_spec)
         sim_ms = float(sim.mean_response) * 1e3
         sim_p95_ms = float(sim.quantile(0.95)) * 1e3
+        if spec.autoscale is not None:
+            mean_active = float(sim.mean_active_replicas)
     elif simulate:
         import warnings
-        reason = ("infeasible SLO" if not feasible
+        reason = ("infeasible SLO" if float(per_replica) <= 1e-9
                   else f"above the {_SIM_REPLICA_CAP}-replica simulation "
                        "cap")
         warnings.warn(
-            f"skipping the simulated cross-check: the plan needs {n_i} "
+            f"skipping the simulated cross-check: the plan needs {sim_r} "
             f"replicas ({reason}); run simulate_fork_join directly with "
             "a smaller chunk_size if you really want this",
             UserWarning, stacklevel=2)
@@ -243,7 +286,9 @@ def plan_capacity(
         utilization=float(util),
         response_simulated_ms=sim_ms,
         response_simulated_p95_ms=sim_p95_ms,
-        routing=routing if sim_ms is not None else None,
+        routing=spec.routing if sim_ms is not None else None,
+        autoscale=spec.autoscale if sim_ms is not None else None,
+        mean_active_replicas=mean_active,
     )
 
 

@@ -1,0 +1,146 @@
+"""ClusterSpec: the one static description of the simulated topology.
+
+The engine entry points historically grew one keyword per topology
+feature — ``r=``, ``routing=``, ``result_cache=``, ``replica_impl=`` —
+each re-threaded by hand through ``sweep_simulated``, ``plan_capacity``
+and ``calibrate.validate``.  :class:`ClusterSpec` consolidates them
+(plus the autoscaler, the feature that forced the redesign) into ONE
+frozen, hashable object that rides the jit cache as a single static
+argument:
+
+    from repro.core.cluster import ClusterSpec
+    from repro.launch.elastic import AutoscalePolicy
+
+    spec = ClusterSpec(r=4, routing="jsq", result_cache=(0.3, 2e-3))
+    res = simulate_fork_join(key, lam, n, params, cluster=spec)
+
+    elastic = ClusterSpec(routing="jsq",
+                          autoscale=AutoscalePolicy(min_r=1, max_r=6))
+
+The loose keywords keep working through :func:`resolve_cluster` — a
+deprecation shim that builds the spec and warns once per process — and
+``repro.staticcheck`` rule RPR006 flags in-repo use of them outside
+this shim.  ``ClusterSpec()`` (all defaults) resolves to exactly the
+old defaults, so ``cluster=None`` call sites compile the bit-identical
+pre-redesign program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+from repro.launch.elastic import AutoscalePolicy
+
+__all__ = ["ClusterSpec", "ROUTING_POLICIES", "REPLICA_IMPLS",
+           "resolve_cluster"]
+
+ROUTING_POLICIES = ("round_robin", "random", "jsq")
+REPLICA_IMPLS = ("fused", "masked")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Static topology of the simulated search cluster.
+
+    r:            replica count (each replica = broker + p servers).
+                  With ``autoscale`` set, leave at the default — the
+                  engine provisions ``autoscale.max_r`` and the policy
+                  decides how many are active.
+    routing:      dispatcher policy, one of ``ROUTING_POLICIES``.
+    result_cache: ``(hit_r, s_cache)`` broker-level result cache of
+                  Eq 8, or None.
+    replica_impl: "fused" (segment-compacted scan, default) or
+                  "masked" (full-stream re-scan oracle).
+    autoscale:    optional :class:`AutoscalePolicy` making the active
+                  replica count time-varying inside the scan.
+
+    Instances are frozen and hashable (``result_cache`` is coerced to a
+    float tuple) so a spec is a valid ``jax.jit`` static argument.
+    """
+
+    r: int = 1
+    routing: str = "round_robin"
+    result_cache: Optional[tuple[float, float]] = None
+    replica_impl: str = "fused"
+    autoscale: Optional[AutoscalePolicy] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "r", int(self.r))
+        if self.result_cache is not None:
+            hit_r, s_cache = self.result_cache
+            object.__setattr__(self, "result_cache",
+                               (float(hit_r), float(s_cache)))
+        if self.r < 1:
+            raise ValueError(f"need at least one replica; got r={self.r}")
+        if self.routing not in ROUTING_POLICIES:
+            raise ValueError(f"unknown routing policy {self.routing!r}; "
+                             f"choose one of {ROUTING_POLICIES}")
+        if self.replica_impl not in REPLICA_IMPLS:
+            raise ValueError(
+                f"unknown replica_impl {self.replica_impl!r}; choose "
+                f"one of {REPLICA_IMPLS}")
+        if self.autoscale is not None:
+            if not isinstance(self.autoscale, AutoscalePolicy):
+                raise TypeError("autoscale must be an AutoscalePolicy; "
+                                f"got {type(self.autoscale).__name__}")
+            if self.r != 1:
+                raise ValueError(
+                    "with autoscale= the engine provisions "
+                    "autoscale.max_r replicas; leave r at its default "
+                    f"(got r={self.r})")
+
+    @property
+    def engine_r(self) -> int:
+        """Replicas the engine provisions (max_r under autoscaling)."""
+        return (self.autoscale.max_r if self.autoscale is not None
+                else self.r)
+
+
+# the shim warns ONCE per process (not per call site): legacy keywords
+# are everywhere in downstream code and a warning storm helps nobody.
+# Tests reset this flag to assert the warning fires.
+_warned_legacy = False
+
+
+def resolve_cluster(cluster: Optional[ClusterSpec] = None, *,
+                    r: Optional[int] = None,
+                    routing: Optional[str] = None,
+                    result_cache: Optional[tuple[float, float]] = None,
+                    replica_impl: Optional[str] = None,
+                    caller: str = "simulate_fork_join") -> ClusterSpec:
+    """Deprecation shim: legacy loose keywords -> one ClusterSpec.
+
+    Entry points declare the old keywords with ``None`` sentinels and
+    funnel them here.  Passing both ``cluster=`` and a legacy keyword
+    is an error (no silent precedence); legacy keywords alone build the
+    equivalent spec and emit a single process-wide DeprecationWarning.
+    """
+    legacy = {k: v for k, v in (("r", r), ("routing", routing),
+                                ("result_cache", result_cache),
+                                ("replica_impl", replica_impl))
+              if v is not None}
+    if cluster is not None:
+        if legacy:
+            raise TypeError(
+                f"{caller}() got both cluster= and deprecated keyword(s) "
+                f"{sorted(legacy)}; move them onto the ClusterSpec")
+        if not isinstance(cluster, ClusterSpec):
+            raise TypeError("cluster must be a ClusterSpec; got "
+                            f"{type(cluster).__name__}")
+        return cluster
+    if not legacy:
+        return ClusterSpec()
+    global _warned_legacy
+    if not _warned_legacy:
+        warnings.warn(
+            f"{caller}({'/'.join(sorted(legacy))}=...) is deprecated; "
+            "pass cluster=ClusterSpec(...) instead (the loose topology "
+            "keywords will be removed)", DeprecationWarning, stacklevel=3)
+        _warned_legacy = True
+    return ClusterSpec(
+        r=1 if r is None else r,
+        routing="round_robin" if routing is None else routing,
+        result_cache=result_cache,
+        replica_impl="fused" if replica_impl is None else replica_impl)

@@ -231,8 +231,16 @@ def plan_over_grid(
     (and optionally ``result_cache=(hit_r, s_cache)``) and both paths
     price r dispatcher-routed replicas per cell — analytically at
     ``lam / r`` via Eq 7/8, simulated under a real routing policy
-    (``routing="jsq"`` etc. passes through ``sim_kwargs``).  The frontier
-    then answers "replicate, upgrade, or cache?" in one extraction.
+    (``cluster=ClusterSpec(routing="jsq")`` etc. passes through
+    ``sim_kwargs``).  The frontier then answers "replicate, upgrade, or
+    cache?" in one extraction.
+
+    Elastic fleets ride the grid the same way: build it with
+    ``autoscale=(AutoscalePolicy(...), ...)`` — the replica axis becomes
+    a POLICY axis — and with ``simulate=True`` the frontier prices each
+    policy by its observed replica-seconds, answering "which autoscaler
+    config is cheapest under the p95 SLO over this load profile".
+    Policy grids are simulation-only; the analytic path raises.
 
     ``mesh`` (a 1-D mesh from `repro.launch.mesh.make_sweep_mesh`) shards
     the scenario axis of either surface across devices — the

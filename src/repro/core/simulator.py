@@ -75,6 +75,25 @@ simulated cache queue describe the same system).  Unlike the paper's
 conservative bound the simulator DOES thin the index-server load, so
 simulated means sit at or below the Eq 8 bound.
 
+Topology lives on ONE static argument: ``cluster=ClusterSpec(r=...,
+routing=..., result_cache=..., replica_impl=..., autoscale=...)`` (see
+`repro.core.cluster`).  The loose keywords of the same names keep
+working through a once-warning deprecation shim.
+
+Elastic autoscaling (``ClusterSpec(autoscale=AutoscalePolicy(...))``)
+makes the ACTIVE replica count time-varying: the engine provisions
+``max_r`` replicas, and the HPA-shaped controller of
+`repro.launch.elastic` rides the scan carry — per query it drains a
+fluid backlog, accumulates utilization feedback, and at each decision
+interval steps the active count inside [min_r, max_r].  Routing only
+targets active replicas (round-robin wraps at n_active, random thins
+over n_active, JSQ masks inactive candidates); scale-out replicas start
+cold (their carries sit at the drained state) and scale-in replicas
+drain in-flight work before going quiet.  The run additionally
+accumulates the cost integral ``SimResult.replica_seconds`` (and
+``elapsed_seconds``), which is what the policy sweeps in
+`repro.core.sweep` price.
+
 Service-time generators cover three regimes:
 
   * "exponential" — iid Exp(S_server) per (query, server): the model's
@@ -103,7 +122,11 @@ import jax.numpy as jnp
 
 from repro.core import queueing
 from repro.core.arrivals import ArrivalProcess
+from repro.core.cluster import ClusterSpec, ROUTING_POLICIES, \
+    resolve_cluster
 from repro.core.queueing import ServerParams, service_time_server
+from repro.launch.elastic import AutoscalePolicy, autoscale_init, \
+    autoscale_scan
 from repro.obs.timeline import TelemetrySpec, Timeline
 
 Array = jax.Array
@@ -113,6 +136,8 @@ __all__ = [
     "fcfs_completion_times",
     "fcfs_completion_times_routed",
     "ArrivalProcess",
+    "ClusterSpec",
+    "AutoscalePolicy",
     "SimResult",
     "simulate_fork_join",
     "simulate_fork_join_batch",
@@ -128,7 +153,6 @@ __all__ = [
 
 DEFAULT_CHUNK = 4096
 DEFAULT_HIST_BINS = 256
-ROUTING_POLICIES = ("round_robin", "random", "jsq")
 # salts for auxiliary RNG streams: folded on top of the per-chunk key
 # AFTER chunk_random_draws' fold, so enabling the tap, random routing, or
 # the result cache never perturbs the canonical gap/broker/service draws
@@ -201,6 +225,13 @@ class SimResult:
     `repro.obs.timeline`: None unless the run passed a
     :class:`TelemetrySpec` (None contributes no pytree leaves, so every
     existing consumer and the eval_shape contract see the same tree).
+
+    ``replica_seconds`` / ``elapsed_seconds`` are the autoscaler's cost
+    integral — provisioned replica-seconds and simulated wall seconds
+    over the whole run (warmup included; provisioning is paid for from
+    t=0).  None unless the run carried an
+    :class:`~repro.launch.elastic.AutoscalePolicy`, following the
+    timeline convention.
     """
 
     count: Array           # post-warmup samples per scenario
@@ -214,6 +245,8 @@ class SimResult:
     hist_log_step: Array   # (...,) ln(bin edge ratio)
     tap_response: Array    # (..., tap_size) reservoir sample of responses
     timeline: Optional[Timeline] = None  # per-bin telemetry (see obs)
+    replica_seconds: Optional[Array] = None  # integral of active r dt
+    elapsed_seconds: Optional[Array] = None  # integral of dt (valid)
 
     @property
     def _n(self) -> Array:
@@ -235,6 +268,15 @@ class SimResult:
     @property
     def tap_size(self) -> int:
         return self.tap_response.shape[-1]
+
+    @property
+    def mean_active_replicas(self) -> Array:
+        """Time-average active replica count of an autoscaled run."""
+        if self.replica_seconds is None:
+            raise ValueError("no autoscaler ran: replica_seconds is only "
+                             "recorded under ClusterSpec(autoscale=...)")
+        return self.replica_seconds / jnp.maximum(self.elapsed_seconds,
+                                                  1e-30)
 
     @property
     def mean_broker_residence(self) -> Array:
@@ -398,25 +440,37 @@ def _clamp_chunk_for_profile(proc: ArrivalProcess, chunk: int) -> int:
 
 
 def _routing_assign(routing: str, r: int, key: Array, c_idx, gidx,
-                    n_scen: int, chunk: int) -> Optional[Array]:
+                    n_scen: int, chunk: int,
+                    n_act: Optional[Array] = None) -> Optional[Array]:
     """(S, chunk) integer replica assignment for oblivious policies.
 
     Returns None for "jsq" (its choice needs the carried work state and
     is computed inside the scan body).  Round-robin assigns by GLOBAL
     query index, so the assignment is invariant to how the stream is
     chunked.
+
+    ``n_act`` (autoscaling): per-query active replica count (S, chunk).
+    Oblivious policies then target only the active fleet — round-robin
+    wraps the global index at n_active, random thins uniformly over
+    n_active — so inactive replicas receive no new work and drain.
     """
     if routing == "round_robin":
+        if n_act is not None:
+            return gidx[None, :].astype(jnp.int32) % n_act
         return jnp.broadcast_to((gidx % r)[None, :], (n_scen, chunk))
     if routing == "random":
         k_route = jax.random.fold_in(
             jax.random.fold_in(key, c_idx), _ROUTE_SALT)
+        if n_act is not None:
+            u = jax.random.uniform(k_route, (n_scen, chunk))
+            return jnp.minimum((u * n_act).astype(jnp.int32), n_act - 1)
         return jax.random.randint(k_route, (n_scen, chunk), 0, r)
     return None
 
 
 def _jsq_route(w: Array, gaps: Array, services: Array, live: Array,
-               r: int, dtype) -> tuple[Array, Array]:
+               r: int, dtype,
+               n_act: Optional[Array] = None) -> tuple[Array, Array]:
     """Join-shortest-queue on carried per-replica work (fluid backlog).
 
     w: (S, r, p) remaining seconds of work per replica server, measured
@@ -426,22 +480,34 @@ def _jsq_route(w: Array, gaps: Array, services: Array, live: Array,
     frees first (the join is what the query waits for), and add the
     query's drawn per-server service times to that replica's trackers.
     ``live`` zeroes the work deposit for queries that never reach a
-    replica (result-cache hits).  Returns ((S, chunk) integer replica
-    choice, updated work state) — the work state rides in the outer scan
-    carry, so JSQ pressure persists across chunks; both the masked and
-    the fused replicated paths consume the same choice stream.
+    replica (result-cache hits).  ``n_act`` (autoscaling): per-query
+    active replica count (S, chunk); inactive replicas are masked out
+    of the argmin — no new work — but their trackers keep draining,
+    which is exactly the scale-in semantics (in-flight work finishes).
+    Returns ((S, chunk) integer replica choice, updated work state) —
+    the work state rides in the outer scan carry, so JSQ pressure
+    persists across chunks; both the masked and the fused replicated
+    paths consume the same choice stream.
     """
 
     def step(w, inp):
-        gap, svc, lv = inp                       # (S,), (S, p), (S,)
+        if n_act is None:
+            gap, svc, lv = inp                   # (S,), (S, p), (S,)
+        else:
+            gap, svc, lv, act = inp
         w = jnp.maximum(w - gap[:, None, None], 0.0)
         backlog = jnp.max(w, axis=-1)            # (S, r) slowest server
+        if n_act is not None:
+            active = jnp.arange(r)[None, :] < act[:, None]
+            backlog = jnp.where(active, backlog, jnp.inf)
         choice = jnp.argmin(backlog, axis=-1)    # (S,)
         oh = (choice[:, None] == jnp.arange(r)[None, :]).astype(dtype)
         w = w + (oh * lv[:, None])[:, :, None] * svc[:, None, :]
         return w, choice
 
     xs = (gaps.T, jnp.moveaxis(services, -1, 0), live.T)
+    if n_act is not None:
+        xs = xs + (n_act.T,)
     w, choice_seq = jax.lax.scan(step, w, xs)    # choice_seq: (chunk, S)
     return choice_seq.T, w
 
@@ -522,7 +588,7 @@ def fcfs_completion_times_routed(
     jax.jit, static_argnames=("n_queries", "p", "mode", "impl", "chunk",
                               "warmup_fraction", "hist_bins", "tap_size",
                               "r", "routing", "has_cache", "replica_impl",
-                              "telemetry"))
+                              "autoscale", "telemetry"))
 def _simulate_stream(
     key: Array,
     proc: ArrivalProcess,
@@ -541,6 +607,7 @@ def _simulate_stream(
     routing: str = "round_robin",
     has_cache: bool = False,
     replica_impl: str = "fused",
+    autoscale: Optional[AutoscalePolicy] = None,
     telemetry: Optional[TelemetrySpec] = None,
 ) -> SimResult:
     """The one chunked engine behind every fork-join entry point.
@@ -563,8 +630,17 @@ def _simulate_stream(
     bit-identical pre-telemetry program.  Timeline binning keys off an
     UNWRAPPED absolute clock carried alongside the period-wrapped
     ``t_origin`` (profiles wrap for rate lookups; telemetry must not).
+
+    ``autoscale`` (static) makes the ACTIVE replica count time-varying
+    inside [min_r, max_r] (callers provision r = max_r): the
+    `repro.launch.elastic` controller scan runs per chunk on the
+    carried feedback state, and the per-query active counts feed the
+    routing policies.  Like telemetry it appends carry slots only when
+    present — ``autoscale=None`` compiles the exact static-r program —
+    and draws no randomness, so the canonical chunk plan is untouched.
     """
     n_scen = proc.rates.shape[0]
+    elastic = autoscale is not None
     n_chunks = -(-n_queries // chunk)
     n_warm = int(n_queries * warmup_fraction)
     dtype = jnp.result_type(float)
@@ -635,9 +711,16 @@ def _simulate_stream(
     def body(carry, x):
         (t_origin, c_brk, c_srv, c_cache, w_jsq, count, s_resp, ss_resp,
          s_br, s_cl, s_sv, hist, tap_pri, tap_val) = carry[:14]
+        off = 14
+        if elastic:
+            as_carry = carry[off:off + 5]
+            rep_secs, elapsed = carry[off + 5:off + 7]
+            off += 7
         if telemetry is not None:
             (t_abs, tm_count, tm_resp, tm_bb, tm_bs, tm_rc, tm_hit,
-             tm_slo) = carry[14:]
+             tm_slo) = carry[off:off + 8]
+            if elastic:
+                tm_act = carry[off + 8]
         if has_trace:
             c_idx, trace_gaps_c = x
         else:
@@ -677,6 +760,25 @@ def _simulate_stream(
             miss_f = None
 
         s_broker_c = u_brk * s_broker[:, None]
+        if elastic:
+            # Controller feedback in chunk (arrival) order, BEFORE any
+            # routing permutation: each query's server-seconds of demand
+            # (misses only — hits never reach the index servers) plus
+            # the valid-query mask, so the padded tail advances neither
+            # the decision clock nor the cost integral.
+            vf = (gidx < n_queries).astype(dtype)[None, :]
+            dem = jnp.sum(services, axis=1)
+            if has_cache:
+                dem = dem * miss_f
+            gaps_v = gaps * vf
+            as_carry, n_act = autoscale_scan(autoscale, p, as_carry,
+                                             gaps_v, dem * vf)
+            n_act_f = n_act.astype(dtype)
+            # the cost integral the policy sweeps price: provisioned
+            # replica-seconds and wall seconds (warmup included — the
+            # fleet is paid for from t=0)
+            rep_secs = rep_secs + jnp.sum(n_act_f * gaps_v, axis=-1)
+            elapsed = elapsed + jnp.sum(gaps_v, axis=-1)
         if telemetry is not None:
             # chunk-order captures BEFORE the fused branches permute or
             # rescale anything: arrival offsets plus each query's
@@ -717,10 +819,12 @@ def _simulate_stream(
         else:
             live = miss_f if has_cache else jnp.ones_like(gaps)
             assign = _routing_assign(routing, r, key, c_idx, gidx,
-                                     n_scen, chunk)
+                                     n_scen, chunk,
+                                     n_act=n_act if elastic else None)
             if assign is None:  # jsq: needs the carried work state
-                assign, w_jsq_new = _jsq_route(w_jsq, gaps, services,
-                                               live, r, dtype)
+                assign, w_jsq_new = _jsq_route(
+                    w_jsq, gaps, services, live, r, dtype,
+                    n_act=n_act if elastic else None)
             else:
                 w_jsq_new = w_jsq
 
@@ -762,10 +866,12 @@ def _simulate_stream(
             server0 = jnp.sum(completions[:, :, 0, :] * mask_srv, axis=1)
             c_brk_new = broker_done_r[:, :, -1]
             c_srv_new = completions[:, :, :, -1]
-        elif routing == "round_robin" and chunk % r == 0:
+        elif routing == "round_robin" and chunk % r == 0 and not elastic:
             # Fused fast path: with chunk % r == 0 the round-robin
             # assignment is col % r every chunk, so compaction into
             # per-replica contiguous runs is a pure reshape — no sort.
+            # (Autoscaled round-robin wraps at the time-varying active
+            # count, so it rides the general sorted path below.)
             # Each query is scanned ONCE on its own replica's queues:
             # chunk broker elements + p * chunk server elements total,
             # r x less work than the masked oracle.
@@ -1007,20 +1113,40 @@ def _simulate_stream(
                 resp_c = response
             tm_resp = tm_resp + bin_sums(resp_c)
             tm_slo = tm_slo + bin_sums((resp_c > tl_slo).astype(dtype))
+            if elastic:
+                # the autoscaler trajectory: active fleet size summed
+                # over each bin's arrivals (n_act is in chunk order)
+                tm_act = tm_act + bin_sums(n_act_f)
             t_abs = t_abs + last_arrival
 
         shift = last_arrival
+        c_brk_s = c_brk_new - shift[:, None]
+        c_srv_s = c_srv_new - shift[:, None, None]
+        c_cache_s = (c_cache_new - shift[:, None] if has_cache
+                     else c_cache_new)
+        if elastic:
+            # An inactive replica receives no work, so its rebased carry
+            # would drift toward -inf chunk after chunk.  Clamping at
+            # the chunk origin is EXACT — seeding max(a, c + b) is
+            # unchanged for any c <= the segment head's arrival, and
+            # arrivals are positive — and pins a fully drained replica
+            # at 0, the same cold state a scale-out replica starts from.
+            c_brk_s = jnp.maximum(c_brk_s, 0.0)
+            c_srv_s = jnp.maximum(c_srv_s, 0.0)
+            if has_cache:
+                c_cache_s = jnp.maximum(c_cache_s, 0.0)
         new_carry = ((t_origin + shift) % period,
-                     c_brk_new - shift[:, None],
-                     c_srv_new - shift[:, None, None],
-                     c_cache_new - shift[:, None] if has_cache
-                     else c_cache_new,
+                     c_brk_s, c_srv_s, c_cache_s,
                      w_jsq_new,
                      count, s_resp, ss_resp, s_br, s_cl, s_sv, hist,
                      tap_pri, tap_val)
+        if elastic:
+            new_carry = new_carry + tuple(as_carry) + (rep_secs, elapsed)
         if telemetry is not None:
             new_carry = new_carry + (t_abs, tm_count, tm_resp, tm_bb,
                                      tm_bs, tm_rc, tm_hit, tm_slo)
+            if elastic:
+                new_carry = new_carry + (tm_act,)
         return new_carry, None
 
     zeros = jnp.zeros((n_scen,), dtype)
@@ -1033,6 +1159,9 @@ def _simulate_stream(
             jnp.zeros((n_scen, hist_bins), dtype),
             jnp.full((n_scen, tap_size), -jnp.inf, dtype),
             jnp.full((n_scen, tap_size), jnp.nan, dtype))
+    if elastic:
+        init = init + autoscale_init(autoscale, n_scen, dtype) \
+            + (zeros, zeros)
     if telemetry is not None:
         zb = jnp.zeros((n_scen, tl_bins), dtype)
         init = init + (zeros, zb, zb,
@@ -1040,24 +1169,33 @@ def _simulate_stream(
                        jnp.zeros((n_scen, tl_bins, r, p), dtype),
                        jnp.zeros((n_scen, tl_bins, r), dtype),
                        zb, zb)
+        if elastic:
+            init = init + (zb,)
     final, _ = jax.lax.scan(body, init, xs)
     (t_last, c_brk, c_srv, c_cache, w_jsq, count, s_resp, ss_resp, s_br,
      s_cl, s_sv, hist, tap_pri, tap_val) = final[:14]
+    off = 14
+    rep_secs = elapsed = None
+    if elastic:
+        rep_secs, elapsed = final[off + 5:off + 7]
+        off += 7
 
     timeline = None
     if telemetry is not None:
         (_, tm_count, tm_resp, tm_bb, tm_bs, tm_rc, tm_hit,
-         tm_slo) = final[14:]
+         tm_slo) = final[off:off + 8]
         timeline = Timeline(
             bin_seconds=tl_bin_w, count=tm_count, resp_sum=tm_resp,
             busy_broker=tm_bb, busy_server=tm_bs, replica_count=tm_rc,
-            hit_count=tm_hit, slo_count=tm_slo)
+            hit_count=tm_hit, slo_count=tm_slo,
+            active_sum=final[off + 8] if elastic else None)
 
     return SimResult(
         count=count, sum_response=s_resp, sumsq_response=ss_resp,
         sum_broker=s_br, sum_cluster=s_cl, sum_server=s_sv,
         hist=hist, hist_log_lo=hist_log_lo, hist_log_step=hist_log_step,
-        tap_response=tap_val, timeline=timeline)
+        tap_response=tap_val, timeline=timeline,
+        replica_seconds=rep_secs, elapsed_seconds=elapsed)
 
 
 def _cache_args(result_cache) -> tuple[Array, Array, bool]:
@@ -1066,18 +1204,6 @@ def _cache_args(result_cache) -> tuple[Array, Array, bool]:
         return jnp.asarray(0.0), jnp.asarray(0.0), False
     hit_r, s_cache = result_cache
     return jnp.asarray(hit_r), jnp.asarray(s_cache), True
-
-
-def _check_topology(r: int, routing: str,
-                    replica_impl: str = "fused") -> None:
-    if r < 1:
-        raise ValueError(f"need at least one replica; got r={r}")
-    if routing not in ROUTING_POLICIES:
-        raise ValueError(f"unknown routing policy {routing!r}; choose "
-                         f"one of {ROUTING_POLICIES}")
-    if replica_impl not in ("fused", "masked"):
-        raise ValueError(f"unknown replica_impl {replica_impl!r}; choose "
-                         "'fused' or 'masked'")
 
 
 def simulate_fork_join(
@@ -1093,10 +1219,11 @@ def simulate_fork_join(
     chunk_size: int = DEFAULT_CHUNK,
     hist_bins: int = DEFAULT_HIST_BINS,
     tap_size: int = 0,
-    r: int = 1,
-    routing: str = "round_robin",
+    cluster: Optional[ClusterSpec] = None,
+    r: Optional[int] = None,
+    routing: Optional[str] = None,
     result_cache: Optional[tuple[float, float]] = None,
-    replica_impl: str = "fused",
+    replica_impl: Optional[str] = None,
     telemetry: Optional[TelemetrySpec] = None,
 ) -> SimResult:
     """Simulate the full broker + p-server fork-join network (Fig 8).
@@ -1111,23 +1238,37 @@ def simulate_fork_join(
     additionally carries a bounded reservoir sample of per-query response
     times (see :class:`SimResult`).
 
-    ``r > 1`` grows the network to the replicated topology (Sec 6): a
-    front-end dispatcher routes each query to one of ``r`` full replicas
-    under ``routing`` ("round_robin" | "random" | "jsq"); ``lam`` stays
-    the TOTAL arrival rate.  ``result_cache=(hit_r, s_cache)`` adds the
-    broker-level result cache of Eq 8: hits are served by their routed
-    replica's broker-cache FCFS queue with mean service ``s_cache`` and
-    never fork to its index servers.  ``replica_impl`` picks the
-    replicated engine ("fused" default; "masked" is the re-scan oracle —
-    see :func:`_simulate_stream`).
+    Topology rides ONE static argument, ``cluster=ClusterSpec(...)``:
+
+    * ``r > 1`` grows the network to the replicated topology (Sec 6): a
+      front-end dispatcher routes each query to one of ``r`` full
+      replicas under ``routing`` ("round_robin" | "random" | "jsq");
+      ``lam`` stays the TOTAL arrival rate.
+    * ``result_cache=(hit_r, s_cache)`` adds the broker-level result
+      cache of Eq 8: hits are served by their routed replica's
+      broker-cache FCFS queue with mean service ``s_cache`` and never
+      fork to its index servers.
+    * ``replica_impl`` picks the replicated engine ("fused" default;
+      "masked" is the re-scan oracle — see :func:`_simulate_stream`).
+    * ``autoscale=AutoscalePolicy(...)`` makes the active replica count
+      time-varying; the result gains ``replica_seconds`` /
+      ``elapsed_seconds`` and (with telemetry) the active-replica
+      trajectory.
+
+    The loose keywords ``r=`` / ``routing=`` / ``result_cache=`` /
+    ``replica_impl=`` are DEPRECATED shims for the same fields (warn
+    once; see `repro.core.cluster.resolve_cluster`).
 
     ``telemetry=TelemetrySpec(...)`` additionally streams the per-time-
     bin `repro.obs.timeline.Timeline` onto the result (None, the
     default, is the bit-identical pre-telemetry program).
     """
+    spec = resolve_cluster(cluster, r=r, routing=routing,
+                           result_cache=result_cache,
+                           replica_impl=replica_impl,
+                           caller="simulate_fork_join")
     p = int(params.p) if p is None else p  # static before tracing
-    _check_topology(r, routing, replica_impl)
-    cache_hit, cache_service, has_cache = _cache_args(result_cache)
+    cache_hit, cache_service, has_cache = _cache_args(spec.result_cache)
     proc = _as_batch_process(lam)
     _check_trace(proc, n_queries)
     chunk = _clamp_chunk_for_profile(
@@ -1135,9 +1276,10 @@ def simulate_fork_join(
     res = _simulate_stream(key, proc, _vec_params(params), cache_hit,
                            cache_service, n_queries, p,
                            mode, impl, chunk, warmup_fraction, hist_bins,
-                           tap_size, r=r, routing=routing,
-                           has_cache=has_cache, replica_impl=replica_impl,
-                           telemetry=telemetry)
+                           tap_size, r=spec.engine_r, routing=spec.routing,
+                           has_cache=has_cache,
+                           replica_impl=spec.replica_impl,
+                           autoscale=spec.autoscale, telemetry=telemetry)
     return jax.tree_util.tree_map(lambda x: x[0], res)
 
 
@@ -1154,22 +1296,25 @@ def simulate_fork_join_batch(
     chunk_size: int = DEFAULT_CHUNK,
     hist_bins: int = DEFAULT_HIST_BINS,
     tap_size: int = 0,
-    r: int = 1,
-    routing: str = "round_robin",
+    cluster: Optional[ClusterSpec] = None,
+    r: Optional[int] = None,
+    routing: Optional[str] = None,
     result_cache: Optional[tuple[float, float]] = None,
-    replica_impl: str = "fused",
+    replica_impl: Optional[str] = None,
     telemetry: Optional[TelemetrySpec] = None,
 ) -> SimResult:
     """S fork-join scenarios in one XLA program; all stats are (S,).
 
     ``lam`` is an (S,) rate vector or an :class:`ArrivalProcess` with
     (S, n_bins) rates; every ``params`` field is (S,).  All scenarios
-    share the SAME static server count ``p`` and replica count ``r``
-    (grids over p or r dispatch one batch per distinct (p, r) — see
-    `repro.core.sweep`).  With ``impl="pallas"`` the per-chunk
-    (S, r, p, chunk) and (S, r, chunk) FCFS recurrences flatten onto the
-    row axis of `maxplus_scan`, so all S * r * (p + 1) sample paths run
-    as a single Pallas grid.
+    share the SAME static topology ``cluster=ClusterSpec(...)`` and
+    server count ``p`` (grids over p, r or autoscale policies dispatch
+    one batch per distinct static config — see `repro.core.sweep`); the
+    loose ``r=`` / ``routing=`` / ``result_cache=`` / ``replica_impl=``
+    keywords are the deprecated shim.  With ``impl="pallas"`` the
+    per-chunk (S, r, p, chunk) and (S, r, chunk) FCFS recurrences
+    flatten onto the row axis of `maxplus_scan`, so all S * r * (p + 1)
+    sample paths run as a single Pallas grid.
 
     Peak memory of the fused replicated engine is S * p * chunk_size
     floats — independent of ``n_queries`` AND of ``r`` (each query is
@@ -1177,8 +1322,11 @@ def simulate_fork_join_batch(
     S * r * p scalars.  The "masked" oracle keeps the original
     S * r * p * chunk_size law.
     """
-    _check_topology(r, routing, replica_impl)
-    cache_hit, cache_service, has_cache = _cache_args(result_cache)
+    spec = resolve_cluster(cluster, r=r, routing=routing,
+                           result_cache=result_cache,
+                           replica_impl=replica_impl,
+                           caller="simulate_fork_join_batch")
+    cache_hit, cache_service, has_cache = _cache_args(spec.result_cache)
     proc = _as_batch_process(lam)
     _check_trace(proc, n_queries)
     chunk = _clamp_chunk_for_profile(
@@ -1186,8 +1334,10 @@ def simulate_fork_join_batch(
     return _simulate_stream(key, proc, params, cache_hit, cache_service,
                             n_queries, p, mode, impl,
                             chunk, warmup_fraction, hist_bins, tap_size,
-                            r=r, routing=routing, has_cache=has_cache,
-                            replica_impl=replica_impl, telemetry=telemetry)
+                            r=spec.engine_r, routing=spec.routing,
+                            has_cache=has_cache,
+                            replica_impl=spec.replica_impl,
+                            autoscale=spec.autoscale, telemetry=telemetry)
 
 
 @functools.partial(jax.jit, static_argnames=("c",))

@@ -6,7 +6,9 @@ Cartesian grid
 
     lambda x p x cpu-speedup x disk-speedup x cache-hit-ratio x replicas
 
-as a SINGLE XLA program, two ways:
+(the replica axis optionally swapped for a tuple of elastic
+`AutoscalePolicy` values — a POLICY axis, simulation-only) as a SINGLE
+XLA program, two ways:
 
   * analytical — the Eq 7 bounds from `repro.core.queueing`, which already
     broadcast, evaluated over the broadcasted grid.  Tens of thousands of
@@ -41,7 +43,9 @@ from jax.sharding import PartitionSpec
 from repro import compat
 from repro.core import capacity, queueing, simulator
 from repro.core.arrivals import ArrivalProcess
+from repro.core.cluster import ClusterSpec, resolve_cluster
 from repro.core.queueing import ServerParams
+from repro.launch.elastic import AutoscalePolicy
 
 Array = jax.Array
 ArrayLike = Union[Array, Sequence[float], float]
@@ -78,6 +82,14 @@ class SweepGrid:
     the Eq 8 broker-level result cache through both evaluation paths
     (conservative un-thinned mixture analytically; a mechanistic
     dispatcher cache queue in the simulator).
+
+    ``autoscale`` replaces the replica axis with a POLICY axis: a tuple
+    of `repro.launch.elastic.AutoscalePolicy` values becomes the grid's
+    6th dimension (``r`` must stay at its default — each policy's
+    ``max_r`` sets provisioning).  Policy grids are simulation-only
+    (the Eq 7/8 bounds have no notion of a time-varying fleet), and
+    :func:`extract_frontier` prices their cells by observed
+    replica-seconds instead of a static replica count.
     """
 
     lam: Array
@@ -90,6 +102,27 @@ class SweepGrid:
     r: Array = dataclasses.field(
         default_factory=lambda: jnp.ones((1,), jnp.float32))
     result_cache: Optional[tuple[float, float]] = None
+    autoscale: Optional[tuple[AutoscalePolicy, ...]] = None
+
+    def __post_init__(self):
+        if self.autoscale is None:
+            return
+        pols = (tuple(self.autoscale)
+                if isinstance(self.autoscale, (tuple, list))
+                else (self.autoscale,))
+        if not pols:
+            raise ValueError("autoscale= needs at least one policy "
+                             "(or None for a static grid)")
+        for pol in pols:
+            if not isinstance(pol, AutoscalePolicy):
+                raise TypeError(
+                    "autoscale must hold AutoscalePolicy values; got "
+                    f"{type(pol).__name__}")
+        if self.r.shape[0] != 1 or float(self.r[0]) != 1.0:
+            raise ValueError(
+                "a policy grid replaces the replica axis; leave r at "
+                "its default (each policy's max_r sets provisioning)")
+        object.__setattr__(self, "autoscale", pols)
 
     @classmethod
     def build(cls, *, lam: ArrayLike, p: ArrayLike = 100.0,
@@ -99,6 +132,7 @@ class SweepGrid:
               broker_from_p: bool = True,
               r: ArrayLike = 1.0,
               result_cache: Optional[tuple[float, float]] = None,
+              autoscale=None,
               ) -> "SweepGrid":
         """Grid from explicit axes; defaults come from Table 6 ``memory``."""
         if base is None:
@@ -111,12 +145,14 @@ class SweepGrid:
         return cls(lam=_axis(lam), p=_axis(p), cpu=_axis(cpu),
                    disk=_axis(disk), hit=_axis(hit), base=base,
                    broker_from_p=broker_from_p, r=_axis(r),
-                   result_cache=result_cache)
+                   result_cache=result_cache, autoscale=autoscale)
 
     @property
     def shape(self) -> tuple[int, ...]:
+        last = (len(self.autoscale) if self.autoscale is not None
+                else self.r.shape[0])
         return (self.lam.shape[0], self.p.shape[0], self.cpu.shape[0],
-                self.disk.shape[0], self.hit.shape[0], self.r.shape[0])
+                self.disk.shape[0], self.hit.shape[0], last)
 
     @property
     def n_scenarios(self) -> int:
@@ -152,6 +188,10 @@ class SweepGrid:
 
     def lam_replica(self) -> Array:
         """Per-replica arrival rate, broadcastable over `shape`."""
+        if self.autoscale is not None:
+            raise ValueError(
+                "per-replica rates are undefined on a policy grid: the "
+                "active replica count varies over time (simulate instead)")
         lam, _ = self.broadcast()
         return lam / self.r.reshape(1, 1, 1, 1, 1, -1)
 
@@ -260,6 +300,10 @@ def sweep_analytical(grid: SweepGrid, *, mesh=None) -> SweepResult:
     how the million-scenario planning surfaces in
     ``examples/global_sweep.py`` are evaluated.
     """
+    if grid.autoscale is not None:
+        raise ValueError(
+            "sweep_analytical cannot evaluate a policy grid: the Eq 7/8 "
+            "bounds assume a fixed replica count (use sweep_simulated)")
     lam_rep = grid.lam_replica()
     _, params = grid.broadcast()
     shape = grid.shape
@@ -398,8 +442,9 @@ def sweep_simulated(
     tap_size: int = 0,
     profile: Optional[Array] = None,
     profile_bin_seconds: float = 3600.0,
-    routing: str = "round_robin",
-    replica_impl: str = "fused",
+    cluster: Optional[ClusterSpec] = None,
+    routing: Optional[str] = None,
+    replica_impl: Optional[str] = None,
     telemetry: Optional[simulator.TelemetrySpec] = None,
     mesh=None,
 ) -> SimSweepResult:
@@ -412,12 +457,29 @@ def sweep_simulated(
     so `n_queries` can be 10-100x what the old materializing path could
     hold.
 
+    ``cluster=ClusterSpec(...)`` supplies the per-dispatch topology
+    (routing policy, result cache, replica engine); the grid's own axes
+    supply what varies, so ``ClusterSpec.r`` must stay at its default
+    (the ``grid.r`` axis is the replica sweep) and
+    ``ClusterSpec.autoscale`` must be None (policies go on
+    ``SweepGrid(autoscale=...)`` so they form a sweep axis).  The loose
+    ``routing=`` / ``replica_impl=`` keywords keep working through the
+    `repro.core.cluster.resolve_cluster` deprecation shim.  A
+    ``result_cache`` may live on the spec or on the grid but not both.
+
     Replicated cells (``grid.r``) run the dispatcher topology under
-    ``routing`` ("round_robin" | "random" | "jsq"); each scenario's lam
-    stays the total rate, so the surface directly cross-checks the
-    analytical ``lam / r`` splitting assumption, imbalance included.
-    ``grid.result_cache`` switches on the simulator's mechanistic Eq 8
-    dispatcher cache in every dispatch.
+    the spec's routing ("round_robin" | "random" | "jsq"); each
+    scenario's lam stays the total rate, so the surface directly
+    cross-checks the analytical ``lam / r`` splitting assumption,
+    imbalance included.  The effective ``result_cache`` switches on the
+    simulator's mechanistic Eq 8 dispatcher cache in every dispatch.
+
+    ``grid.autoscale`` swaps the replica axis for a POLICY axis: one
+    dispatch per `AutoscalePolicy`, each provisioning ``max_r`` replicas
+    with the policy deciding how many are active per chunk.  Every cell
+    then carries ``stats.replica_seconds`` / ``stats.elapsed_seconds``
+    (the autoscaler's cost integral), which `extract_frontier` uses to
+    price policies by time-averaged fleet size.
 
     ``profile`` makes the load non-stationary: a (n_bins,) relative-rate
     curve (e.g. `repro.workloadgen.loadgen.diurnal_rates`) that tiles with
@@ -448,6 +510,31 @@ def sweep_simulated(
     so sharded surfaces are statistically equivalent, not bit-identical,
     to unsharded ones.
     """
+    spec = resolve_cluster(cluster, routing=routing,
+                           replica_impl=replica_impl,
+                           caller="sweep_simulated")
+    if spec.r != 1:
+        raise ValueError(
+            "sweep_simulated takes replica counts from the grid's r "
+            "axis; leave ClusterSpec.r at its default")
+    if spec.autoscale is not None:
+        raise ValueError(
+            "autoscale policies form a sweep axis: put them on "
+            "SweepGrid(autoscale=...) rather than the ClusterSpec")
+    if spec.result_cache is not None and grid.result_cache is not None:
+        raise ValueError(
+            "result_cache given on both the ClusterSpec and the grid; "
+            "keep exactly one")
+    cache = (spec.result_cache if spec.result_cache is not None
+             else grid.result_cache)
+    policies = grid.autoscale
+    if telemetry is not None and policies is not None:
+        max_rs = {pol.max_r for pol in policies}
+        if len(max_rs) > 1:
+            raise ValueError(
+                "telemetry timelines stack a per-replica axis across "
+                "policy cells, so every policy needs the same max_r; "
+                f"got {sorted(max_rs)}")
     shape = grid.shape
     lam_full, params_full = grid.broadcast_full()
 
@@ -465,21 +552,22 @@ def sweep_simulated(
         base_proc = ArrivalProcess.piecewise(
             jnp.asarray(profile), profile_bin_seconds).normalized()
 
-    n_p, n_r = grid.p.shape[0], grid.r.shape[0]
+    n_p, n_cfg = grid.p.shape[0], shape[5]
     # host-side reads of the static axes: np.asarray on the concrete
     # grid arrays stays concrete even under an ambient trace, whereas
     # grid.p[i] would become a tracer and break float() — this keeps
     # sweep_simulated runnable under jax.eval_shape (the staticcheck
     # shape contract) with an abstract lam axis
-    p_axis, r_axis = np.asarray(grid.p), np.asarray(grid.r)
+    p_axis = np.asarray(grid.p)
+    r_axis = None if policies is not None else np.asarray(grid.r)
     # flat indexing (no reshape) keeps both legacy uint32 and new-style
     # typed PRNG keys working: split always yields a 1-D sequence of keys
-    keys = jax.random.split(key, n_p * n_r)
+    keys = jax.random.split(key, n_p * n_cfg)
 
-    def dispatch(k, lam_ij, params_ij, p: int, r: int):
-        """The single batch entry shared by every (p, r) cell.
+    def dispatch(k, lam_ij, params_ij, p: int, cell: ClusterSpec):
+        """The single batch entry shared by every (p, config) cell.
 
-        All cells with equal static (p, r) and slab shape reuse one
+        All cells with equal static (p, cell) and slab shape reuse one
         compiled program (jit caches on statics + avals); sharding wraps
         the SAME bound entry in `_sharded_batch`, so the mesh path and
         the local path cannot drift apart.
@@ -495,8 +583,7 @@ def sweep_simulated(
             simulator.simulate_fork_join_batch, n_queries=n_queries,
             p=p, mode=mode, impl=impl, warmup_fraction=warmup_fraction,
             chunk_size=chunk, hist_bins=hist_bins, tap_size=tap_size,
-            r=r, routing=routing, result_cache=grid.result_cache,
-            replica_impl=replica_impl, telemetry=telemetry)
+            cluster=cell, telemetry=telemetry)
         if mesh is None:
             return run(k, arrival, params_ij)
         return _sharded_batch(run, mesh, k, arrival, params_ij)
@@ -504,19 +591,28 @@ def sweep_simulated(
     p_slabs = []
     for i in range(n_p):
         p = _static_count(p_axis[i], "server")
-        r_slabs = []
-        for j in range(n_r):
-            r = _static_count(r_axis[j], "replica")
+        cfg_slabs = []
+        for j in range(n_cfg):
+            if policies is not None:
+                cell = ClusterSpec(routing=spec.routing,
+                                   result_cache=cache,
+                                   replica_impl=spec.replica_impl,
+                                   autoscale=policies[j])
+            else:
+                cell = ClusterSpec(r=_static_count(r_axis[j], "replica"),
+                                   routing=spec.routing,
+                                   result_cache=cache,
+                                   replica_impl=spec.replica_impl)
             params_ij = ServerParams(
                 **{n: v[i, j] for n, v in field_slabs.items()})
-            res = dispatch(keys[i * n_r + j], lam_slabs[i, j],
-                           params_ij, p, r)
+            res = dispatch(keys[i * n_cfg + j], lam_slabs[i, j],
+                           params_ij, p, cell)
             slab_shape = (shape[0], shape[2], shape[3], shape[4])
-            r_slabs.append(jax.tree_util.tree_map(
+            cfg_slabs.append(jax.tree_util.tree_map(
                 lambda x: x.reshape(slab_shape + x.shape[1:]), res))
-        # stack the replica axis behind (L,C,D,H) -> axis 4
+        # stack the replica/policy axis behind (L,C,D,H) -> axis 4
         p_slabs.append(jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs, axis=4), *r_slabs))
+            lambda *xs: jnp.stack(xs, axis=4), *cfg_slabs))
     # stack the p axis into position 1 -> (L,P,C,D,H,R)
     stats = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs, axis=1), *p_slabs)
@@ -539,7 +635,13 @@ def default_config_cost(p: Array, cpu: Array, disk: Array,
 
 @dataclasses.dataclass(frozen=True)
 class Frontier:
-    """Per-lambda cheapest feasible configuration (all arrays (L,))."""
+    """Per-lambda cheapest feasible configuration (all arrays (L,)).
+
+    On a policy grid ``r`` is the chosen policy's MEAN ACTIVE replica
+    count (``replica_seconds / elapsed_seconds`` — generally fractional)
+    and ``autoscale`` holds the chosen `AutoscalePolicy` per rate;
+    otherwise ``autoscale`` is None and ``r`` is the static count.
+    """
 
     lam: Array
     feasible: Array    # bool: any config meets the SLO at this rate
@@ -550,13 +652,20 @@ class Frontier:
     hit: Array
     response: Array    # targeted-surface response of the chosen config (s)
     r: Array = None    # replicas of the chosen config ((L,); 1s pre-grid)
+    autoscale: Optional[tuple[AutoscalePolicy, ...]] = None
 
     def describe(self, i: int) -> str:
         if not bool(self.feasible[i]):
             return (f"lam={float(self.lam[i]):g} qps: INFEASIBLE "
                     f"anywhere on the grid")
-        reps = 1 if self.r is None else int(round(float(self.r[i])))
-        rep_s = f" x{reps} replicas" if reps != 1 else ""
+        if self.autoscale is not None:
+            pol = self.autoscale[i]
+            rep_s = (f" autoscale {pol.min_r}..{pol.max_r}"
+                     f" @{pol.target_utilization:.0%}"
+                     f" (mean active {float(self.r[i]):.2f})")
+        else:
+            reps = 1 if self.r is None else int(round(float(self.r[i])))
+            rep_s = f" x{reps} replicas" if reps != 1 else ""
         return (f"lam={float(self.lam[i]):g} qps: p={float(self.p[i]):g} "
                 f"cpu x{float(self.cpu[i]):g} disk x{float(self.disk[i]):g} "
                 f"hit={float(self.hit[i]):.2f}{rep_s} -> "
@@ -584,6 +693,13 @@ def extract_frontier(
     feasibility surface and argmin-reduced per arrival rate.  ``cost_fn``
     prices ONE replica's hardware (p, cpu, disk, hit); replication
     multiplies it — r copies of the cluster cost r times as much.
+
+    On a policy grid the replica multiplier is not a grid constant: each
+    cell is priced by its OBSERVED time-averaged fleet size
+    ``replica_seconds / elapsed_seconds`` (the autoscaler's cost
+    integral), so "cheapest" means fewest replica-seconds per second —
+    directly comparable to a static-r plan's ``cost * r`` at the same
+    SLO compliance.
     """
     grid = result.grid
     if surface is None:
@@ -597,10 +713,23 @@ def extract_frontier(
         grid.hit.reshape(1, 1, 1, -1),
     )
     costs = jnp.broadcast_to(costs, grid.shape[1:5])
-    costs = costs[..., None] * grid.r.reshape(1, 1, 1, 1, -1)
+    if grid.autoscale is not None:
+        stats = getattr(result, "stats", None)
+        if stats is None or stats.replica_seconds is None:
+            raise ValueError(
+                "a policy grid prices configurations by simulated "
+                "replica-seconds; extract the frontier from a "
+                "sweep_simulated result")
+        eff_r = stats.replica_seconds / jnp.maximum(
+            stats.elapsed_seconds, 1e-30)             # (L,P,C,D,H,A)
+        costs_full = costs[None, :, :, :, :, None] * eff_r
+    else:
+        eff_r = None
+        costs_full = (costs[..., None]
+                      * grid.r.reshape(1, 1, 1, 1, -1))[None]
 
     feasible = surface <= slo_seconds                     # (L,P,C,D,H,R)
-    masked = jnp.where(feasible, costs[None], jnp.inf)
+    masked = jnp.where(feasible, costs_full, jnp.inf)
     flat = masked.reshape(grid.shape[0], -1)
     best = jnp.argmin(flat, axis=1)
     best_cost = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
@@ -610,6 +739,13 @@ def extract_frontier(
         surface.reshape(grid.shape[0], -1),
         best[:, None], axis=1)[:, 0]
     any_feasible = jnp.isfinite(best_cost)
+    if grid.autoscale is not None:
+        chosen_r = jnp.take_along_axis(
+            eff_r.reshape(grid.shape[0], -1), best[:, None], axis=1)[:, 0]
+        chosen_pol = tuple(grid.autoscale[int(t)] for t in np.asarray(ir))
+    else:
+        chosen_r = grid.r[ir]
+        chosen_pol = None
     return Frontier(
         lam=grid.lam,
         feasible=any_feasible,
@@ -619,5 +755,6 @@ def extract_frontier(
         disk=grid.disk[id_],
         hit=grid.hit[ih],
         response=chosen_resp,
-        r=grid.r[ir],
+        r=chosen_r,
+        autoscale=chosen_pol,
     )

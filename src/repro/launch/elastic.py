@@ -1,32 +1,45 @@
-"""Elastic scaling + straggler mitigation.
+"""Elasticity: serving autoscaler policy + training-mesh resizing.
 
-Node failure at scale is routine; the framework's contract is:
-  1. training state is checkpointed every N steps (async, atomic);
-  2. on failure, surviving hosts form a SMALLER mesh (same axis names,
-     reduced ``data``/``pod`` extent), `restore` re-shards the checkpoint
-     onto it, and the pure-function data pipeline replays from the saved
-     step — bitwise-identical semantics, fewer chips;
-  3. when capacity returns, the same path scales back up.
+Two consumers share this module's mathematics:
 
-Straggler mitigation uses the paper's own mathematics: a synchronous
-fork-join step waits for the slowest of p participants, and with iid
-exponential tails the expected straggler tax is H_p (queueing.Eq 6).
-`hedge_threshold` converts that into when to fire a hedged duplicate
-(serving) or re-dispatch a microbatch (training): wait until the
-conditional expected remaining time of the laggard exceeds the cost of a
-duplicate, i.e. the (1 - 1/p)-quantile of the residence distribution.
+* **Serving** (the paper's capacity story, grown time-varying): a search
+  cluster sized by `repro.core.capacity` holds r replicas *forever*,
+  but real diurnal load only needs the peak count for a few hours a day.
+  :class:`AutoscalePolicy` is the HPA-shaped feedback controller —
+  min/max replicas, a target utilization trigger, step-limited scale
+  up/down, a stabilization window — and :func:`autoscale_scan` is its
+  pure per-query recurrence, carried inside the streaming simulator's
+  scan (``ClusterSpec(autoscale=...)``) so policies can be *simulated
+  and swept* like any other capacity knob.  Scale-out replicas start
+  cold (empty queues); scale-in stops routing new queries to a replica
+  but lets its in-flight work drain.
+* **Training** (`survivor_mesh_shape` / `ElasticPlan` / `plan_downsize`):
+  on host failure the surviving chips form a smaller mesh (same axis
+  names, reduced ``data``/``pod`` extent) and checkpointed state is
+  re-sharded onto it; when capacity returns, the same path scales back
+  up.  `plan_downsize` quantifies the throughput/step-time trade of a
+  candidate shrink.
+
+Straggler mitigation ties the two together with the paper's own Eq 6:
+a synchronous fork-join step waits for the slowest of p participants,
+and with iid exponential tails the expected straggler tax is H_p.
+`hedge_threshold` converts that into when to fire a hedged duplicate;
+:meth:`AutoscalePolicy.for_slo` converts it into the autoscaler's
+utilization trigger (scale-out sizing must leave headroom for the H_p
+synchronization tax, not just the mean service time).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core import queueing
 
-__all__ = ["survivor_mesh_shape", "expected_straggler_tax",
+__all__ = ["AutoscalePolicy", "autoscale_init", "autoscale_scan",
+           "survivor_mesh_shape", "expected_straggler_tax",
            "hedge_threshold", "ElasticPlan", "plan_downsize"]
 
 
@@ -36,9 +49,181 @@ def expected_straggler_tax(p: int) -> float:
     This is the paper's Eq 6 synchronization factor H_p — the mean
     slowdown a synchronous fork-join step (training microbatch or
     serving fan-out) pays for waiting on p participants.  It is the
-    quantity `hedge_threshold` trades against the cost of a duplicate.
+    quantity `hedge_threshold` trades against the cost of a duplicate
+    and :meth:`AutoscalePolicy.for_slo` budgets against the SLO.
     """
     return float(queueing.harmonic_number(max(int(p), 1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalePolicy:
+    """HPA-shaped feedback controller for the replica count.
+
+    The controller observes the fleet once per ``decision_interval``
+    of *simulated* time: utilization is the server-seconds of work that
+    arrived during the interval divided by the server-seconds of
+    capacity (``n_active * p * interval``), and the desired count is
+    the usual horizontal-pod-autoscaler rule
+
+        desired = ceil(n_active * utilization / target_utilization)
+
+    clipped to ``[min_r, max_r]``.  Scale-up applies immediately, at
+    most ``scale_up_step`` replicas per decision; scale-down waits for
+    ``stabilization_intervals`` *consecutive* low decisions before
+    removing at most ``scale_down_step`` (the HPA stabilization window,
+    so a flash crowd's trailing edge cannot thrash the fleet).
+    ``queue_trigger_seconds`` optionally adds a backlog override: if
+    the fluid backlog would take longer than this to drain at current
+    capacity, a scale-up step fires regardless of utilization.
+
+    Replicas above the active count receive no new queries but keep
+    draining in-flight work; a replica scaled back in before it fully
+    drained resumes with its remaining backlog (nothing is dropped).
+    Scale-out replicas start cold — empty queues, no carried work.
+
+    The policy object is hashable and rides the simulator's jit cache
+    as a static argument, exactly like ``TelemetrySpec``.
+    """
+
+    min_r: int
+    max_r: int
+    target_utilization: float = 0.7
+    scale_up_step: int = 1
+    scale_down_step: int = 1
+    decision_interval_seconds: float = 15.0
+    stabilization_intervals: int = 4
+    queue_trigger_seconds: Optional[float] = None
+    init_r: Optional[int] = None
+
+    def __post_init__(self):
+        if not 1 <= int(self.min_r) <= int(self.max_r):
+            raise ValueError(
+                f"need 1 <= min_r <= max_r; got ({self.min_r}, "
+                f"{self.max_r})")
+        if not 0.0 < float(self.target_utilization) < 1.0:
+            raise ValueError("target_utilization must be in (0, 1); got "
+                             f"{self.target_utilization}")
+        if int(self.scale_up_step) < 1 or int(self.scale_down_step) < 1:
+            raise ValueError("scale steps must be >= 1")
+        if not float(self.decision_interval_seconds) > 0.0:
+            raise ValueError("decision_interval_seconds must be > 0")
+        if int(self.stabilization_intervals) < 1:
+            raise ValueError("stabilization_intervals must be >= 1")
+        if (self.queue_trigger_seconds is not None
+                and not float(self.queue_trigger_seconds) > 0.0):
+            raise ValueError("queue_trigger_seconds must be > 0 or None")
+        if (self.init_r is not None
+                and not self.min_r <= int(self.init_r) <= self.max_r):
+            raise ValueError(
+                f"init_r={self.init_r} outside [{self.min_r}, "
+                f"{self.max_r}]")
+
+    @property
+    def start_r(self) -> int:
+        """Replica count at t=0 (``init_r``, defaulting to ``min_r``)."""
+        return int(self.min_r if self.init_r is None else self.init_r)
+
+    @classmethod
+    def for_slo(cls, min_r: int, max_r: int, *, p: int,
+                mean_service: float, slo_seconds: float,
+                **kwargs) -> "AutoscalePolicy":
+        """Derive the utilization trigger from the SLO and Eq 6.
+
+        A fork-join replica's response is roughly the synchronized
+        service H_p * S inflated by queueing, R ~= H_p * S / (1 - rho)
+        (the Eq 7 bounds collapse to this at the extremes), so keeping
+        R <= SLO needs rho <= 1 - H_p * S / SLO.  Sizing scale-out
+        against bare utilization ignores the straggler tax and runs the
+        fleet too hot; this constructor wires
+        :func:`expected_straggler_tax` into the trigger.
+        """
+        tax = expected_straggler_tax(p)
+        target = 1.0 - tax * float(mean_service) / float(slo_seconds)
+        target = min(max(target, 0.05), 0.95)
+        return cls(min_r=min_r, max_r=max_r,
+                   target_utilization=target, **kwargs)
+
+
+def autoscale_init(policy: AutoscalePolicy, n_scen: int, dtype):
+    """Initial controller carry: (n_active, t_epoch, w_epoch, stab, bklg).
+
+    ``n_active`` (int32) is the live replica count, ``t_epoch`` /
+    ``w_epoch`` accumulate seconds and server-seconds of demand since
+    the last decision, ``stab`` (int32) counts consecutive scale-down
+    votes, ``bklg`` is the fluid backlog (server-seconds of admitted
+    but unfinished work) behind the queue trigger.
+    """
+    import jax.numpy as jnp
+    return (jnp.full((n_scen,), policy.start_r, jnp.int32),
+            jnp.zeros((n_scen,), dtype),
+            jnp.zeros((n_scen,), dtype),
+            jnp.zeros((n_scen,), jnp.int32),
+            jnp.zeros((n_scen,), dtype))
+
+
+def autoscale_scan(policy: AutoscalePolicy, p: int, carry,
+                   gaps, demand):
+    """Run the controller over one block of queries; returns per-query n.
+
+    gaps: (S, n) interarrival seconds; demand: (S, n) server-seconds of
+    work each query brings (its summed per-server service times).  The
+    recurrence is strictly per-query with the carry threaded through,
+    so splitting a stream into blocks and chaining the carry gives the
+    SAME per-query active counts as one monolithic call — the policy is
+    chunking-invariant by construction (property-tested in
+    tests/test_autoscale.py).  Zero-gap, zero-demand entries (the
+    streaming engine's padded tail) advance nothing.
+
+    Returns ``(new_carry, n_active (S, n) int32)`` where ``n_active[i]``
+    is the count in force when query i is routed (decisions at interval
+    boundaries apply from the query that crosses them).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    interval = float(policy.decision_interval_seconds)
+    target = float(policy.target_utilization)
+    up = int(policy.scale_up_step)
+    down = int(policy.scale_down_step)
+    stab_n = int(policy.stabilization_intervals)
+    lo, hi = int(policy.min_r), int(policy.max_r)
+    trigger = policy.queue_trigger_seconds
+
+    def step(c, inp):
+        n, te, we, st, bk = c
+        gap, dem = inp                         # (S,), (S,)
+        nf = n.astype(gap.dtype)
+        cap_rate = nf * p                      # server-seconds per second
+        bk = jnp.maximum(bk - cap_rate * gap, 0.0) + dem
+        te = te + gap
+        we = we + dem
+        decide = te >= interval
+        # HPA: desired = ceil(n * util / target) with
+        # util = we / (n * p * te) — the n cancels into offered load
+        desired = jnp.ceil(
+            we / jnp.maximum(p * te * target, 1e-30)).astype(jnp.int32)
+        if trigger is not None:
+            hot = bk > cap_rate * float(trigger)
+            desired = jnp.where(hot, jnp.maximum(desired, n + up), desired)
+        desired = jnp.clip(desired, lo, hi)
+        want_up = desired > n
+        want_dn = desired < n
+        n_up = jnp.minimum(n + up, desired)
+        st_next = jnp.where(want_dn, st + 1, 0)
+        fire_dn = want_dn & (st_next >= stab_n)
+        n_next = jnp.where(want_up, n_up,
+                           jnp.where(fire_dn, jnp.maximum(n - down, desired),
+                                     n))
+        st_next = jnp.where(fire_dn, 0, st_next)
+        n = jnp.where(decide, n_next, n)
+        st = jnp.where(decide, st_next, st)
+        te = jnp.where(decide, 0.0, te)
+        we = jnp.where(decide, 0.0, we)
+        return (n, te, we, st, bk), n
+
+    xs = (gaps.T, demand.T)
+    carry, n_seq = jax.lax.scan(step, carry, xs)   # n_seq: (n, S)
+    return carry, n_seq.T
 
 
 def survivor_mesh_shape(original: Sequence[int], failed_hosts: int,
@@ -65,6 +250,15 @@ def survivor_mesh_shape(original: Sequence[int], failed_hosts: int,
 
 @dataclasses.dataclass(frozen=True)
 class ElasticPlan:
+    """Throughput/step-time consequences of resizing a training mesh.
+
+    The training-side counterpart of :class:`AutoscalePolicy`: where the
+    serving autoscaler varies the replica count against load, this plan
+    quantifies what a *forced* resize (host failure, capacity return)
+    costs — ``throughput_fraction`` of the old mesh's examples/s and the
+    matching ``step_time_factor`` slowdown at fixed global batch.
+    """
+
     old_shape: tuple
     new_shape: tuple
     throughput_fraction: float
@@ -73,6 +267,15 @@ class ElasticPlan:
 
 def plan_downsize(old_shape: Sequence[int], new_shape: Sequence[int]
                   ) -> ElasticPlan:
+    """Quantify a mesh shrink (chips removed -> linear throughput loss).
+
+    Assumes compute-bound steps: a mesh with new_n of old_n chips runs
+    at new_n / old_n the throughput and old_n / new_n the step time.
+    Checkpointed state re-shards onto the survivor mesh (same axis
+    names), so the trade is purely this ratio — the serving analogue is
+    a scale-in decision by :class:`AutoscalePolicy`, which likewise
+    removes capacity without losing in-flight work.
+    """
     old_n = int(np.prod(old_shape))
     new_n = int(np.prod(new_shape))
     return ElasticPlan(

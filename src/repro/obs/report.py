@@ -158,6 +158,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     from repro.core import capacity, simulator
     from repro.core.arrivals import ArrivalProcess
+    from repro.core.cluster import ClusterSpec
     from repro.obs import profile as obs_profile
     from repro.obs.timeline import TelemetrySpec
 
@@ -177,7 +178,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     spec = TelemetrySpec(n_bins=args.bins, slo_seconds=args.slo)
     res = simulator.simulate_fork_join(
         jax.random.PRNGKey(0), proc, args.n_queries, params,
-        r=args.r, routing=args.routing, telemetry=spec)
+        cluster=ClusterSpec(r=args.r, routing=args.routing),
+        telemetry=spec)
     print(render_timeline(res.timeline, label))
     print()
     report, worst = oplaw_check(res.timeline)

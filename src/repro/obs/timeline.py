@@ -94,6 +94,11 @@ class Timeline:
     hit_count:     (..., B)        result-cache hits (zeros, no cache)
     slo_count:     (..., B)        responses above the SLO (zeros if
                                    the spec carried no slo_seconds)
+    active_sum:    (..., B)        summed active-replica counts of each
+                                   bin's arrivals (autoscaled runs only;
+                                   None otherwise — like
+                                   ``SimResult.timeline`` itself, a None
+                                   field contributes no pytree leaves)
     """
 
     bin_seconds: Array
@@ -104,6 +109,7 @@ class Timeline:
     replica_count: Array
     hit_count: Array
     slo_count: Array
+    active_sum: Optional[Array] = None
 
     @property
     def n_bins(self) -> int:
@@ -162,6 +168,20 @@ class Timeline:
         under bursty load.
         """
         return jnp.max(self.replica_count, axis=-1) / self._n
+
+    @property
+    def active_replicas(self) -> Array:
+        """(..., B) mean active replica count over each bin's arrivals.
+
+        The autoscaler trajectory: ``active_sum`` is the per-arrival
+        active count summed per bin, so dividing by the bin's arrivals
+        gives the arrival-weighted mean fleet size.  Only present on
+        autoscaled runs (``ClusterSpec(autoscale=...)``).
+        """
+        if self.active_sum is None:
+            raise ValueError("no active-replica channel: this timeline "
+                             "came from a run without autoscale")
+        return self.active_sum / self._n
 
     @property
     def mean_service_per_query(self) -> Array:

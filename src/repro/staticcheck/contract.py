@@ -75,7 +75,9 @@ def _probes() -> dict[str, Callable[[], dict[str, str]]]:
 
     from repro.calibrate import fit, measure
     from repro.core import capacity, simulator, sweep
+    from repro.core.cluster import ClusterSpec
     from repro.core.queueing import ServerParams
+    from repro.launch.elastic import AutoscalePolicy
 
     params = ServerParams(p=4, s_broker=0.004, s_hit=0.0125, s_miss=0.05,
                           s_disk=0.04, hit=0.5)
@@ -90,16 +92,29 @@ def _probes() -> dict[str, Callable[[], dict[str, str]]]:
     def p_sim_replicated():
         return _tree_specs(jax.eval_shape(
             lambda k: simulator.simulate_fork_join(
-                k, 120.0, 256, params, chunk_size=128, r=3,
-                routing="jsq", result_cache=(0.3, 0.001)),
+                k, 120.0, 256, params, chunk_size=128,
+                cluster=ClusterSpec(r=3, routing="jsq",
+                                    result_cache=(0.3, 0.001))),
             key))
 
     def p_sim_telemetry():
         from repro.obs.timeline import TelemetrySpec
         return _tree_specs(jax.eval_shape(
             lambda k: simulator.simulate_fork_join(
-                k, 120.0, 256, params, chunk_size=128, r=2,
+                k, 120.0, 256, params, chunk_size=128,
+                cluster=ClusterSpec(r=2),
                 telemetry=TelemetrySpec(n_bins=8, slo_seconds=0.7)),
+            key))
+
+    def p_sim_autoscale():
+        from repro.obs.timeline import TelemetrySpec
+        pol = AutoscalePolicy(min_r=1, max_r=3,
+                              decision_interval_seconds=0.25)
+        return _tree_specs(jax.eval_shape(
+            lambda k: simulator.simulate_fork_join(
+                k, 120.0, 256, params, chunk_size=128,
+                cluster=ClusterSpec(routing="jsq", autoscale=pol),
+                telemetry=TelemetrySpec(n_bins=8)),
             key))
 
     def p_sim_batch():
@@ -163,6 +178,7 @@ def _probes() -> dict[str, Callable[[], dict[str, str]]]:
         "simulate_fork_join": p_sim,
         "simulate_fork_join[r=3,cache]": p_sim_replicated,
         "simulate_fork_join[telemetry]": p_sim_telemetry,
+        "simulate_fork_join[autoscale]": p_sim_autoscale,
         "simulate_fork_join_batch": p_sim_batch,
         "sweep_analytical": p_sweep_analytical,
         "sweep_simulated": p_sweep_simulated,

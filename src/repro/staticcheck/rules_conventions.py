@@ -12,7 +12,10 @@ These subsume (and extend) the old 34-line grep guard that used to live in
     (replication goes through the dispatcher layer's ``r=``);
   * RPR005 — measurement taps go through the observability layer
     (``telemetry=`` takes a ``TelemetrySpec``; ``Timeline`` objects are
-    engine output, never hand-built).
+    engine output, never hand-built);
+  * RPR006 — topology goes through ``cluster=ClusterSpec(...)``: the
+    loose ``r=``/``routing=``/``result_cache=``/``replica_impl=``
+    keywords on engine entry points are deprecated shims.
 """
 
 from __future__ import annotations
@@ -194,7 +197,8 @@ _REPLICA_NAMES = {"r", "replicas", "n_replicas", "n_rep", "num_replicas"}
 
 @rule("RPR004", "replicas-via-dispatcher", "convention",
       "hand-wired replica modeling around simulate_fork_join; use the "
-      "engine's r=/routing= dispatcher layer instead",
+      "engine's dispatcher layer (cluster=ClusterSpec(r=..., "
+      "routing=...)) instead",
       scope=["src/**/*.py"])
 def check_handwired_replicas(mod: Module) -> Iterator[Finding]:
     loops = [n for n in ast.walk(mod.tree)
@@ -210,13 +214,15 @@ def check_handwired_replicas(mod: Module) -> Iterator[Finding]:
         if qn is None or qn.rsplit(".", 1)[-1] not in _SIM_ENTRY_LEAVES:
             continue
         kwargs = {kw.arg for kw in node.keywords}
+        has_topology = bool({"r", "cluster"} & kwargs)
         # (a) a per-replica loop that never tells the engine about r
-        if "r" not in kwargs and _enclosing_loop(node):
+        if not has_topology and _enclosing_loop(node):
             yield Finding(
                 "RPR004", mod.rel, node.lineno, node.col_offset,
-                "simulate_fork_join called in a loop without r=; "
-                "modeling replicas by repeated simulator calls assumes "
-                "perfect splitting — pass r=/routing= instead")
+                "simulate_fork_join called in a loop without a replica "
+                "topology; modeling replicas by repeated simulator calls "
+                "assumes perfect splitting — pass "
+                "cluster=ClusterSpec(r=..., routing=...) instead")
             continue
         # (b) lam divided by a replica count by hand (perfect-split
         # assumption smuggled into the arrival rate)
@@ -225,12 +231,13 @@ def check_handwired_replicas(mod: Module) -> Iterator[Finding]:
             if (isinstance(arg, ast.BinOp) and isinstance(arg.op, ast.Div)
                     and isinstance(arg.right, ast.Name)
                     and arg.right.id in _REPLICA_NAMES
-                    and "r" not in kwargs):
+                    and not has_topology):
                 yield Finding(
                     "RPR004", mod.rel, node.lineno, node.col_offset,
                     f"arrival rate divided by `{arg.right.id}` by hand; "
-                    "pass the TOTAL rate with r= so routing imbalance "
-                    "is modeled (ROADMAP replica-topology convention)")
+                    "pass the TOTAL rate with cluster=ClusterSpec(r=...) "
+                    "so routing imbalance is modeled (ROADMAP "
+                    "replica-topology convention)")
 
 
 # --------------------------------------------------------------------------
@@ -276,3 +283,45 @@ def check_telemetry_spec(mod: Module) -> Iterator[Finding]:
                     "raw literal passed as telemetry=; construct a "
                     "repro.obs.TelemetrySpec (bin count, horizon and "
                     "SLO live in ONE validated place)")
+
+
+# --------------------------------------------------------------------------
+# RPR006: ClusterSpec convention (PR 9)
+# --------------------------------------------------------------------------
+
+# entry point leaf -> the loose keywords its resolve_cluster shim accepts
+_CLUSTER_DEPRECATED = {
+    "simulate_fork_join": {"r", "routing", "result_cache", "replica_impl"},
+    "simulate_fork_join_batch": {"r", "routing", "result_cache",
+                                 "replica_impl"},
+    "sweep_simulated": {"routing", "replica_impl"},
+    "plan_capacity": {"routing", "result_cache"},
+    "validate": {"replicas", "routing", "result_cache"},
+}
+
+
+@rule("RPR006", "topology-via-cluster-spec", "convention",
+      "deprecated loose topology keywords (r=/routing=/result_cache=/"
+      "replica_impl=/replicas=) on engine entry points; consolidate "
+      "them onto cluster=ClusterSpec(...)",
+      # fnmatch `*` crosses `/`, so one `*.py` per root covers nesting
+      # (a `tests/**/*.py` scope would skip files directly under tests/)
+      scope=["src/*.py", "tests/*.py", "examples/*.py",
+             "benchmarks/*.py"],
+      exclude=["src/repro/core/cluster.py"])
+def check_cluster_spec(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        qn = resolve_call(mod, node)
+        leaf = qn.rsplit(".", 1)[-1] if qn else None
+        deprecated = _CLUSTER_DEPRECATED.get(leaf)
+        if not deprecated:
+            continue
+        bad = sorted(deprecated & {kw.arg for kw in node.keywords})
+        if bad:
+            yield Finding(
+                "RPR006", mod.rel, node.lineno, node.col_offset,
+                f"deprecated loose keyword(s) {', '.join(bad)} on "
+                f"{leaf}(); move them onto cluster=ClusterSpec(...) "
+                "(ROADMAP ClusterSpec convention)")

@@ -1,0 +1,339 @@
+"""Elastic autoscaling + the ClusterSpec API redesign (ISSUE 9).
+
+Five contracts:
+
+* degenerate-policy equivalence — ``min_r == max_r == r`` pins the
+  controller at r, so the elastic engine reproduces the static one
+  (fused and masked, compaction and load-aware routing);
+* impl-independence — under an ACTIVE policy the fused engine still
+  matches the masked oracle in x64 (the replica-active mask commutes
+  with route-compaction);
+* chunking invariance — `autoscale_scan`'s carry threads through
+  arbitrary block splits with identical per-query counts
+  (hypothesis-property, mirroring tests/test_calibrate.py's guard);
+* ClusterSpec-vs-legacy equivalence — the deprecation shim builds the
+  same program as the loose keywords, warns once, and rejects
+  ambiguous/invalid combinations;
+* cost accounting — ``replica_seconds`` integrates the active count
+  (bounded by min_r/max_r x elapsed) and telemetry exposes the
+  active-replica trajectory.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import capacity, simulator, sweep
+from repro.core import cluster as cluster_mod
+from repro.core.cluster import ClusterSpec
+from repro.launch import elastic
+from repro.launch.elastic import AutoscalePolicy, autoscale_init, \
+    autoscale_scan
+from repro.obs import TelemetrySpec
+
+T5 = capacity.TABLE5_PARAMS
+
+
+@pytest.fixture
+def x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", old)
+
+
+def _pinned(r, **kw):
+    """A policy that can never move: min_r == max_r == r."""
+    return AutoscalePolicy(min_r=r, max_r=r,
+                           decision_interval_seconds=0.5, **kw)
+
+
+# --------------------------------------------------------- degenerate policy
+
+@pytest.mark.parametrize("routing,r", [
+    ("round_robin", 3),   # chunk % r != 0: compaction path (the reshape
+                          # fast path is gated OFF under elastic)
+    ("jsq", 3),
+])
+@pytest.mark.parametrize("impl", ["fused", "masked"])
+def test_pinned_policy_matches_static_engine(routing, r, impl):
+    """ACCEPTANCE: min_r == max_r == r reproduces the static-r engine's
+    statistics exactly — the controller runs but every decision is a
+    no-op, and the active-mask multiplies by 1."""
+    key = jax.random.PRNGKey(0)
+    kw = dict(chunk_size=1024, tap_size=16)
+    static = simulator.simulate_fork_join(
+        key, 45.0, 8_000, T5,
+        cluster=ClusterSpec(r=r, routing=routing, replica_impl=impl), **kw)
+    pinned = simulator.simulate_fork_join(
+        key, 45.0, 8_000, T5,
+        cluster=ClusterSpec(routing=routing, replica_impl=impl,
+                            autoscale=_pinned(r)), **kw)
+    for name in ("count", "sum_response", "sumsq_response", "sum_broker",
+                 "sum_cluster", "sum_server", "hist"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(static, name)),
+            np.asarray(getattr(pinned, name)),
+            err_msg=f"{routing} r={r} {impl}: {name}")
+    # and the cost integral knows nothing ever scaled
+    np.testing.assert_allclose(float(pinned.mean_active_replicas), r,
+                               rtol=1e-6)
+
+
+def test_active_policy_fused_matches_masked(x64):
+    """Under a LIVE policy (scale-outs and drains actually happen) the
+    fused route-compacted engine still agrees with the masked phantom
+    oracle — x64 brings the float gap under 1e-9."""
+    pol = AutoscalePolicy(min_r=1, max_r=3, target_utilization=0.5,
+                          decision_interval_seconds=0.3,
+                          stabilization_intervals=2)
+    key = jax.random.PRNGKey(1)
+    kw = dict(chunk_size=512, mode="cache", p=4)
+    params = dataclasses.replace(capacity.scenario_params(memory=1, p=4),
+                                 p=4)
+    out = {}
+    for impl in ("fused", "masked"):
+        out[impl] = simulator.simulate_fork_join(
+            key, 55.0, 6_000, params,
+            cluster=ClusterSpec(routing="jsq", replica_impl=impl,
+                                autoscale=pol), **kw)
+    # the policy really moved (otherwise this test is the pinned one)
+    assert 1.0 < float(out["fused"].mean_active_replicas) < 3.0
+    for name in ("count", "sum_response", "sumsq_response", "sum_broker",
+                 "sum_cluster", "sum_server", "replica_seconds",
+                 "elapsed_seconds"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(out["fused"], name)),
+            np.asarray(getattr(out["masked"], name)), rtol=1e-9,
+            err_msg=name)
+
+
+# ------------------------------------------------------------ cost integral
+
+def test_replica_seconds_bounds_and_trajectory():
+    """replica_seconds integrates the active count over valid time, so
+    min_r * elapsed <= replica_seconds <= max_r * elapsed; telemetry's
+    active_replicas exposes the trajectory and reacts to load."""
+    pol = AutoscalePolicy(min_r=1, max_r=4, target_utilization=0.6,
+                          decision_interval_seconds=0.4,
+                          stabilization_intervals=2)
+    res = simulator.simulate_fork_join(
+        jax.random.PRNGKey(2), 60.0, 12_000, T5, chunk_size=1024,
+        cluster=ClusterSpec(routing="jsq", autoscale=pol),
+        telemetry=TelemetrySpec(n_bins=16))
+    rs = float(res.replica_seconds)
+    el = float(res.elapsed_seconds)
+    assert 0.0 < el
+    assert pol.min_r * el <= rs <= pol.max_r * el + 1e-6
+    mean_act = float(res.mean_active_replicas)
+    assert 1.0 <= mean_act <= 4.0
+
+    act = np.asarray(res.timeline.active_replicas)
+    cnt = np.asarray(res.timeline.count)
+    live = cnt > 0
+    assert live.any()
+    assert np.all(act[live] >= pol.min_r - 1e-6)
+    assert np.all(act[live] <= pol.max_r + 1e-6)
+    # 60 qps on one Table-5 replica saturates: the policy must scale out
+    assert act[live].max() > 1.5
+
+
+def test_static_run_has_no_elastic_fields():
+    res = simulator.simulate_fork_join(jax.random.PRNGKey(3), 20.0,
+                                       2_000, T5)
+    assert res.replica_seconds is None
+    assert res.elapsed_seconds is None
+    with pytest.raises(ValueError, match="no autoscaler ran"):
+        _ = res.mean_active_replicas
+
+
+# ------------------------------------------------- ClusterSpec vs legacy
+
+def test_cluster_spec_equals_legacy_keywords():
+    """The deprecation shim builds the same program: legacy keywords and
+    the equivalent ClusterSpec produce bitwise-identical results, and
+    the warning fires once per process."""
+    key = jax.random.PRNGKey(4)
+    cluster_mod._warned_legacy = False
+    try:
+        with pytest.warns(DeprecationWarning, match="cluster=ClusterSpec"):
+            legacy = simulator.simulate_fork_join(  # staticcheck: disable=RPR006  (shim under test)
+                key, 40.0, 4_000, T5, r=2, routing="jsq",
+                result_cache=(0.3, 1e-3), chunk_size=512)
+        # second legacy call: no second warning (warn-once flag)
+        import warnings as _w
+        with _w.catch_warnings():
+            _w.simplefilter("error", DeprecationWarning)
+            legacy2 = simulator.simulate_fork_join(  # staticcheck: disable=RPR006  (shim under test)
+                key, 40.0, 4_000, T5, r=2, routing="jsq",
+                result_cache=(0.3, 1e-3), chunk_size=512)
+    finally:
+        cluster_mod._warned_legacy = True
+    spec = simulator.simulate_fork_join(
+        key, 40.0, 4_000, T5, chunk_size=512,
+        cluster=ClusterSpec(r=2, routing="jsq", result_cache=(0.3, 1e-3)))
+    for name in ("count", "sum_response", "hist", "sum_broker"):
+        np.testing.assert_array_equal(np.asarray(getattr(legacy, name)),
+                                      np.asarray(getattr(spec, name)),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(getattr(legacy2, name)),
+                                      np.asarray(getattr(spec, name)),
+                                      err_msg=name)
+
+
+def test_cluster_and_legacy_together_is_an_error():
+    with pytest.raises(TypeError, match="both cluster= and deprecated"):
+        simulator.simulate_fork_join(  # staticcheck: disable=RPR006  (error path under test)
+            jax.random.PRNGKey(5), 20.0, 256, T5,
+            cluster=ClusterSpec(r=2), routing="jsq")
+
+
+def test_cluster_spec_validation():
+    with pytest.raises(ValueError, match="unknown routing"):
+        ClusterSpec(routing="nope")
+    with pytest.raises(ValueError, match="unknown replica_impl"):
+        ClusterSpec(replica_impl="nope")
+    with pytest.raises(ValueError, match="leave r at its default"):
+        ClusterSpec(r=2, autoscale=AutoscalePolicy(min_r=1, max_r=4))
+    with pytest.raises(TypeError, match="AutoscalePolicy"):
+        ClusterSpec(autoscale="1..4")
+    assert ClusterSpec(autoscale=AutoscalePolicy(min_r=1,
+                                                 max_r=4)).engine_r == 4
+    assert ClusterSpec(r=3).engine_r == 3
+    # hashable => valid jit static argument
+    assert hash(ClusterSpec(result_cache=(0.3, 1e-3))) == \
+        hash(ClusterSpec(result_cache=(0.3, 1e-3)))
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="min_r <= max_r"):
+        AutoscalePolicy(min_r=3, max_r=2)
+    with pytest.raises(ValueError, match="target_utilization"):
+        AutoscalePolicy(min_r=1, max_r=2, target_utilization=1.5)
+    with pytest.raises(ValueError, match="init_r"):
+        AutoscalePolicy(min_r=2, max_r=4, init_r=1)
+    assert AutoscalePolicy(min_r=2, max_r=4).start_r == 2
+    assert AutoscalePolicy(min_r=2, max_r=4, init_r=3).start_r == 3
+
+
+def test_for_slo_wires_straggler_tax():
+    """for_slo budgets the Eq 6 synchronization tax H_p into the
+    trigger: more servers per replica => hotter tax => lower target."""
+    kw = dict(mean_service=0.05, slo_seconds=0.5)
+    t4 = AutoscalePolicy.for_slo(1, 4, p=4, **kw).target_utilization
+    t64 = AutoscalePolicy.for_slo(1, 4, p=64, **kw).target_utilization
+    assert t64 < t4 < 1.0
+    expect4 = 1.0 - elastic.expected_straggler_tax(4) * 0.05 / 0.5
+    np.testing.assert_allclose(t4, expect4, rtol=1e-12)
+
+
+# ----------------------------------------------------------- sweep plumbing
+
+def test_policy_grid_axis_and_frontier():
+    """The policy axis rides the sweep: shape swaps r for len(policies),
+    the frontier prices by replica-seconds, and the analytic path
+    refuses (policies are simulation-only)."""
+    pols = (AutoscalePolicy(min_r=1, max_r=2,
+                            decision_interval_seconds=0.5),
+            AutoscalePolicy(min_r=1, max_r=3,
+                            decision_interval_seconds=0.5))
+    grid = sweep.SweepGrid.build(lam=[25.0, 50.0], p=[8.0], base=T5,
+                                 hit=[0.17], broker_from_p=False,
+                                 autoscale=pols)
+    assert grid.shape == (2, 1, 1, 1, 1, 2)
+    with pytest.raises(ValueError, match="sweep_analytical cannot"):
+        sweep.sweep_analytical(grid)
+    res = sweep.sweep_simulated(grid, jax.random.PRNGKey(6),
+                                n_queries=4_000, chunk_size=512,
+                                cluster=ClusterSpec(routing="jsq"))
+    assert res.stats.replica_seconds.shape == grid.shape
+    eff = np.asarray(res.stats.replica_seconds
+                     / np.maximum(np.asarray(res.stats.elapsed_seconds),
+                                  1e-30))
+    assert np.all(eff >= 1.0 - 1e-6)
+    assert np.all(eff[..., 0] <= 2.0 + 1e-6)
+    assert np.all(eff[..., 1] <= 3.0 + 1e-6)
+
+    fr = sweep.extract_frontier(res, 2.0)
+    assert fr.autoscale is not None and len(fr.autoscale) == 2
+    for i in range(2):
+        if bool(fr.feasible[i]):
+            assert fr.autoscale[i] in pols
+            assert "autoscale" in fr.describe(i)
+
+
+def test_policy_grid_keeps_r_axis_static_error():
+    pols = (AutoscalePolicy(min_r=1, max_r=2),)
+    with pytest.raises(ValueError, match="policy grid replaces"):
+        sweep.SweepGrid.build(lam=[20.0], p=[8.0], base=T5,
+                              r=[2.0], autoscale=pols)
+
+
+def test_plan_capacity_autoscale_crosscheck():
+    """plan_capacity keeps the static Sec-6 sizing as the headline but
+    simulates the elastic fleet and reports its mean active count."""
+    pol = AutoscalePolicy(min_r=1, max_r=6,
+                          decision_interval_seconds=1.0)
+    with pytest.raises(ValueError, match="simulate=True"):
+        capacity.plan_capacity(T5, 60.0, 0.9,
+                               cluster=ClusterSpec(autoscale=pol))
+    plan = capacity.plan_capacity(T5, 60.0, 0.9, simulate=True,
+                                  cluster=ClusterSpec(routing="jsq",
+                                                      autoscale=pol),
+                                  key=jax.random.PRNGKey(7))
+    assert plan.autoscale is pol
+    assert plan.mean_active_replicas is not None
+    assert 1.0 <= plan.mean_active_replicas <= 6.0
+    assert plan.response_simulated_ms is not None
+
+
+# ------------------------------------------------ hypothesis: carry chaining
+# Guarded like tests/test_calibrate.py so the rest of the module runs
+# without hypothesis.
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    _POL = AutoscalePolicy(min_r=1, max_r=5, target_utilization=0.55,
+                           decision_interval_seconds=0.25,
+                           stabilization_intervals=2,
+                           queue_trigger_seconds=2.0)
+    _N = 96
+    _GAPS = jnp.asarray(
+        np.random.default_rng(0).exponential(0.05, (2, _N)), jnp.float32)
+    _DEMAND = jnp.asarray(
+        np.random.default_rng(1).exponential(0.3, (2, _N)), jnp.float32)
+
+    @given(st.lists(st.integers(min_value=1, max_value=_N - 1),
+                    min_size=0, max_size=6, unique=True))
+    @settings(max_examples=30, deadline=None)
+    def test_autoscale_scan_chunking_invariant(cuts):
+        """ACCEPTANCE: splitting the stream at ANY boundaries and
+        chaining the carry reproduces the monolithic per-query active
+        counts exactly — the controller is chunking-invariant, which is
+        what lets the streaming engine run it per chunk."""
+        carry0 = autoscale_init(_POL, 2, jnp.float32)
+        _, whole = autoscale_scan(_POL, 8, carry0, _GAPS, _DEMAND)
+        bounds = [0] + sorted(cuts) + [_N]
+        carry = autoscale_init(_POL, 2, jnp.float32)
+        parts = []
+        for a, b in zip(bounds[:-1], bounds[1:]):
+            carry, n = autoscale_scan(_POL, 8, carry,
+                                      _GAPS[:, a:b], _DEMAND[:, a:b])
+            parts.append(np.asarray(n))
+        np.testing.assert_array_equal(np.concatenate(parts, axis=1),
+                                      np.asarray(whole))
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis (see "
+                      "pyproject [project.optional-dependencies].test)")
+    def test_autoscale_scan_chunking_invariant():
+        pass

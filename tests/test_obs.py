@@ -27,6 +27,7 @@ import pytest
 
 from repro.core import capacity, simulator, sweep
 from repro.core.arrivals import ArrivalProcess
+from repro.core.cluster import ClusterSpec
 from repro.core.queueing import ServerParams, service_time_server
 from repro.obs import DEFAULT_TIMELINE_BINS, TelemetrySpec, Timeline
 from repro.obs import profile as obs_profile
@@ -81,8 +82,8 @@ def test_telemetry_leaves_base_stats_bitwise_identical(kwargs):
 def test_counts_conserved_across_chunkings(chunk):
     n_q = 9_000
     res = simulator.simulate_fork_join(
-        KEY, 30.0, n_q, PARAMS, chunk_size=chunk, r=2,
-        telemetry=TelemetrySpec(n_bins=12))
+        KEY, 30.0, n_q, PARAMS, chunk_size=chunk,
+        cluster=ClusterSpec(r=2), telemetry=TelemetrySpec(n_bins=12))
     tl = res.timeline
     assert float(jnp.sum(tl.count)) == float(n_q)
     assert float(jnp.sum(tl.replica_count)) == float(n_q)
@@ -93,8 +94,9 @@ def test_totals_independent_of_n_bins():
     telescope, so every total is conserved (f32 re-summation only)."""
     def totals(n_bins):
         tl = simulator.simulate_fork_join(
-            KEY, 24.0, 10_000, PARAMS, chunk_size=1024, r=2,
-            routing="jsq", result_cache=(0.2, 2e-3),
+            KEY, 24.0, 10_000, PARAMS, chunk_size=1024,
+            cluster=ClusterSpec(r=2, routing="jsq",
+                                result_cache=(0.2, 2e-3)),
             telemetry=TelemetrySpec(n_bins=n_bins, slo_seconds=0.3),
         ).timeline
         return {f: float(jnp.sum(getattr(tl, f)))
@@ -131,11 +133,13 @@ def test_trace_binned_busy_equals_trace_totals():
 
 def test_fused_and_masked_engines_agree_on_timelines():
     spec = TelemetrySpec(n_bins=8, slo_seconds=0.4)
-    kw = dict(r=2, chunk_size=512, telemetry=spec)
-    tf = simulator.simulate_fork_join(KEY, 20.0, 6_000, PARAMS,
-                                      replica_impl="fused", **kw).timeline
-    tm = simulator.simulate_fork_join(KEY, 20.0, 6_000, PARAMS,
-                                      replica_impl="masked", **kw).timeline
+    kw = dict(chunk_size=512, telemetry=spec)
+    tf = simulator.simulate_fork_join(
+        KEY, 20.0, 6_000, PARAMS,
+        cluster=ClusterSpec(r=2, replica_impl="fused"), **kw).timeline
+    tm = simulator.simulate_fork_join(
+        KEY, 20.0, 6_000, PARAMS,
+        cluster=ClusterSpec(r=2, replica_impl="masked"), **kw).timeline
     for f in ("count", "resp_sum", "busy_broker", "busy_server",
               "replica_count", "slo_count"):
         np.testing.assert_allclose(
@@ -313,7 +317,8 @@ def test_profile_kernels_and_roofline_table():
 def test_report_renders_and_sparkline_handles_nan():
     assert obs_report.sparkline([0.0, float("nan"), 1.0]) == "▁ █"
     tl = simulator.simulate_fork_join(
-        KEY, 20.0, 3_000, PARAMS, r=2, result_cache=(0.3, 1e-3),
+        KEY, 20.0, 3_000, PARAMS,
+        cluster=ClusterSpec(r=2, result_cache=(0.3, 1e-3)),
         telemetry=TelemetrySpec(n_bins=8, slo_seconds=0.2)).timeline
     panel = obs_report.render_timeline(tl, "unit")
     for needle in ("throughput", "imbalance", "cache hits",

@@ -19,6 +19,7 @@ import pytest
 
 from repro.core import capacity, queueing, simulator, sweep
 from repro.core.arrivals import ArrivalProcess
+from repro.core.cluster import ClusterSpec
 from repro.core.queueing import ServerParams
 
 T5 = capacity.TABLE5_PARAMS
@@ -73,8 +74,8 @@ def test_round_robin_equals_subsequence_reference(x64):
     n_warm = int(n * 0.1)
     ref_mean = float(np.mean(response[n_warm:]))
 
-    res = simulator.simulate_fork_join(key, lam, n, T5, r=r,
-                                       routing="round_robin",
+    res = simulator.simulate_fork_join(key, lam, n, T5,
+                                       cluster=ClusterSpec(r=r),
                                        chunk_size=chunk)
     np.testing.assert_allclose(float(res.mean_response), ref_mean,
                                rtol=1e-5)
@@ -85,9 +86,9 @@ def test_result_cache_hit0_bit_identical():
     pre-replication engine bit for bit (the cache RNG is salted)."""
     base = simulator.simulate_fork_join(jax.random.PRNGKey(1), 20.0,
                                         30_000, T5)
-    zero = simulator.simulate_fork_join(jax.random.PRNGKey(1), 20.0,
-                                        30_000, T5,
-                                        result_cache=(0.0, 1e-3))
+    zero = simulator.simulate_fork_join(
+        jax.random.PRNGKey(1), 20.0, 30_000, T5,
+        cluster=ClusterSpec(result_cache=(0.0, 1e-3)))
     np.testing.assert_array_equal(np.asarray(base.sum_response),
                                   np.asarray(zero.sum_response))
     np.testing.assert_array_equal(np.asarray(base.hist),
@@ -102,8 +103,9 @@ def test_low_utilization_matches_analytic_prediction():
     exponential-mode mean at the H_p upper bound as rho -> 0)."""
     lam, r = 9.0, 3                       # per-replica util ~ 0.10
     _, hi = queueing.response_time_bounds(lam / r, T5)
-    res = simulator.simulate_fork_join(jax.random.PRNGKey(2), lam,
-                                       120_000, T5, r=r, routing="random")
+    res = simulator.simulate_fork_join(
+        jax.random.PRNGKey(2), lam, 120_000, T5,
+        cluster=ClusterSpec(r=r, routing="random"))
     rel = abs(float(res.mean_response) - float(hi)) / float(hi)
     assert rel <= 0.10, (float(res.mean_response), float(hi), rel)
 
@@ -115,8 +117,9 @@ def test_random_split_matches_single_replica():
     lam = 20.0
     one = simulator.simulate_fork_join(jax.random.PRNGKey(3), lam,
                                        150_000, T5)
-    rep = simulator.simulate_fork_join(jax.random.PRNGKey(4), 3 * lam,
-                                       450_000, T5, r=3, routing="random")
+    rep = simulator.simulate_fork_join(
+        jax.random.PRNGKey(4), 3 * lam, 450_000, T5,
+        cluster=ClusterSpec(r=3, routing="random"))
     m1, m3 = float(one.mean_response), float(rep.mean_response)
     assert abs(m3 - m1) / m1 <= 0.08, (m1, m3)
 
@@ -138,8 +141,8 @@ def test_routing_ordering_under_imbalanced_service():
     means = {}
     for routing in simulator.ROUTING_POLICIES:
         res = simulator.simulate_fork_join(
-            jax.random.PRNGKey(5), lam, 150_000, params, r=3, p=4,
-            mode="cache", routing=routing)
+            jax.random.PRNGKey(5), lam, 150_000, params, p=4,
+            mode="cache", cluster=ClusterSpec(r=3, routing=routing))
         means[routing] = float(res.mean_response)
     assert means["jsq"] <= means["round_robin"] * 1.02, means
     assert means["round_robin"] <= means["random"] * 1.02, means
@@ -165,8 +168,8 @@ def test_slo_boundary_matches_replicas_needed():
         for f in dataclasses.fields(ServerParams)})
     lams = jnp.asarray(factors * lam_star * r, jnp.float32)
     res = simulator.simulate_fork_join_batch(
-        jax.random.PRNGKey(6), lams, vec, 200_000, p=8, r=r,
-        routing="random")
+        jax.random.PRNGKey(6), lams, vec, 200_000, p=8,
+        cluster=ClusterSpec(r=r, routing="random"))
     means = np.asarray(res.mean_response)
     assert means[0] < slo < means[-1], means
     cross = float(np.interp(slo, means, factors * lam_star))
@@ -180,10 +183,11 @@ def test_result_cache_below_eq8_bound_and_helps():
     the cache-less run."""
     lam, r, cache = 60.0, 3, (0.3, 2e-3)
     with_cache = simulator.simulate_fork_join(
-        jax.random.PRNGKey(7), lam, 150_000, T5, r=r, routing="random",
-        result_cache=cache)
+        jax.random.PRNGKey(7), lam, 150_000, T5,
+        cluster=ClusterSpec(r=r, routing="random", result_cache=cache))
     without = simulator.simulate_fork_join(
-        jax.random.PRNGKey(7), lam, 150_000, T5, r=r, routing="random")
+        jax.random.PRNGKey(7), lam, 150_000, T5,
+        cluster=ClusterSpec(r=r, routing="random"))
     eq8 = float(queueing.response_time_with_result_cache(
         lam / r, T5, *cache))
     m = float(with_cache.mean_response)
@@ -201,8 +205,9 @@ def test_result_cache_is_per_replica():
     lam, r, (hit_r, s_cache) = 450.0, 4, (0.9, 5e-3)
     assert lam * hit_r * s_cache > 1.0   # one shared cache WOULD saturate
     res = simulator.simulate_fork_join(
-        jax.random.PRNGKey(11), lam, 200_000, T5, r=r, routing="random",
-        result_cache=(hit_r, s_cache))
+        jax.random.PRNGKey(11), lam, 200_000, T5,
+        cluster=ClusterSpec(r=r, routing="random",
+                            result_cache=(hit_r, s_cache)))
     m = float(res.mean_response)
     # thinned per-replica operating point: hits at lam*hit_r/r on the
     # cache queue, misses at lam*(1-hit_r)/r on the fork-join
@@ -220,11 +225,13 @@ def test_replicated_under_flash_crowd_profile():
     crowd = ArrivalProcess.flash_crowd(
         45.0, burst_starts=[200.0], burst_seconds=200.0,
         burst_multiplier=3.0, period_seconds=1000.0, bin_seconds=100.0)
-    kw = dict(mode="exponential", routing="round_robin", chunk_size=1024)
+    kw = dict(mode="exponential", chunk_size=1024)
     r2 = simulator.simulate_fork_join(jax.random.PRNGKey(8), crowd,
-                                      120_000, T5, r=2, **kw)
+                                      120_000, T5,
+                                      cluster=ClusterSpec(r=2), **kw)
     r4 = simulator.simulate_fork_join(jax.random.PRNGKey(8), crowd,
-                                      120_000, T5, r=4, **kw)
+                                      120_000, T5,
+                                      cluster=ClusterSpec(r=4), **kw)
     assert float(r4.quantile(0.95)) < float(r2.quantile(0.95))
     assert float(r4.mean_response) < float(r2.mean_response)
 
@@ -255,7 +262,8 @@ def test_sweep_replica_axis_and_frontier():
     assert "x3 replicas" in fr.describe(1)
 
     sim = sweep.sweep_simulated(grid, jax.random.PRNGKey(9),
-                                n_queries=40_000, routing="random")
+                                n_queries=40_000,
+                                cluster=ClusterSpec(routing="random"))
     assert sim.mean.shape == grid.shape
     lo = np.asarray(ana.response_lower)
     hi = np.asarray(ana.response_upper)
@@ -270,7 +278,8 @@ def test_plan_capacity_simulated_crosscheck():
     the replicated engine: the simulated mean respects the SLO the plan
     promised and stays above the Eq 7 lower bound."""
     plan = capacity.plan_capacity(T5, 80.0, 0.9, simulate=True,
-                                  routing="random", key=jax.random.PRNGKey(10))
+                                  cluster=ClusterSpec(routing="random"),
+                                  key=jax.random.PRNGKey(10))
     assert plan.n_replicas >= 2
     assert plan.response_simulated_ms is not None
     assert plan.response_simulated_ms <= 0.9 * 1e3
@@ -288,7 +297,7 @@ def test_validate_gains_replicated_column():
     traces = [simulate_trace(jax.random.PRNGKey(i), lam, 6_000, true)
               for i, lam in enumerate([10.0, 18.0])]
     cal = calibrate(traces, n_windows=8, n_iters=2)
-    report = validate(traces, cal, n_windows=6, replicas=2,
+    report = validate(traces, cal, n_windows=6, cluster=ClusterSpec(r=2),
                       simulator_queries=20_000)
     assert report.r_sim_replicated is not None
     assert report.replicas == 2
@@ -320,12 +329,15 @@ def test_fused_matches_masked_oracle(x64, routing, r, cache):
     params = dataclasses.replace(capacity.scenario_params(memory=1, p=4),
                                  p=4)
     key = jax.random.PRNGKey(11)
-    kw = dict(p=4, r=r, routing=routing, chunk_size=1024, mode="cache",
-              result_cache=cache, tap_size=32)
-    fused = simulator.simulate_fork_join(key, 50.0, 6000, params,
-                                         replica_impl="fused", **kw)
-    masked = simulator.simulate_fork_join(key, 50.0, 6000, params,
-                                          replica_impl="masked", **kw)
+    kw = dict(p=4, chunk_size=1024, mode="cache", tap_size=32)
+    fused = simulator.simulate_fork_join(
+        key, 50.0, 6000, params,
+        cluster=ClusterSpec(r=r, routing=routing, result_cache=cache,
+                            replica_impl="fused"), **kw)
+    masked = simulator.simulate_fork_join(
+        key, 50.0, 6000, params,
+        cluster=ClusterSpec(r=r, routing=routing, result_cache=cache,
+                            replica_impl="masked"), **kw)
     for name in ("count", "sum_response", "sumsq_response", "sum_broker",
                  "sum_cluster", "sum_server"):
         np.testing.assert_allclose(
@@ -347,11 +359,13 @@ def test_fused_r1_bit_identical_across_impls():
     "fused" and "masked" are the SAME program as the pre-fusion streaming
     engine — bit-identical statistics, cache path included."""
     key = jax.random.PRNGKey(12)
-    kw = dict(chunk_size=2048, result_cache=(0.2, 2e-3))
-    a = simulator.simulate_fork_join(key, 30.0, 20_000, T5,
-                                     replica_impl="fused", **kw)
-    b = simulator.simulate_fork_join(key, 30.0, 20_000, T5,
-                                     replica_impl="masked", **kw)
+    cache = (0.2, 2e-3)
+    a = simulator.simulate_fork_join(
+        key, 30.0, 20_000, T5, chunk_size=2048,
+        cluster=ClusterSpec(result_cache=cache, replica_impl="fused"))
+    b = simulator.simulate_fork_join(
+        key, 30.0, 20_000, T5, chunk_size=2048,
+        cluster=ClusterSpec(result_cache=cache, replica_impl="masked"))
     for f in dataclasses.fields(simulator.SimResult):
         np.testing.assert_array_equal(
             np.asarray(getattr(a, f.name)), np.asarray(getattr(b, f.name)),
@@ -367,8 +381,8 @@ def test_sweep_replica_impl_passthrough(x64):
                                  result_cache=(0.2, 2e-3))
     key = jax.random.PRNGKey(13)
     f = sweep.sweep_simulated(grid, key, n_queries=4000, chunk_size=512,
-                              replica_impl="fused")
+                              cluster=ClusterSpec(replica_impl="fused"))
     m = sweep.sweep_simulated(grid, key, n_queries=4000, chunk_size=512,
-                              replica_impl="masked")
+                              cluster=ClusterSpec(replica_impl="masked"))
     np.testing.assert_allclose(np.asarray(f.mean), np.asarray(m.mean),
                                rtol=1e-9)

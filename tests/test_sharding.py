@@ -171,6 +171,7 @@ def test_scenario_sharded_sweep_8_devices():
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import simulator, sweep
         from repro.core.arrivals import ArrivalProcess
+        from repro.core.cluster import ClusterSpec
         from repro.core.queueing import ServerParams
         from repro.launch.mesh import make_sweep_mesh
         import dataclasses
@@ -212,7 +213,8 @@ def test_scenario_sharded_sweep_8_devices():
         direct = simulator.simulate_fork_join_batch(
             dev_keys[0], ArrivalProcess.stationary(lam_slab[:3]),
             jax.tree_util.tree_map(lambda x: x[:3], p_slab),
-            3000, p=4, r=2, chunk_size=512, result_cache=(0.2, 2e-3))
+            3000, p=4, chunk_size=512,
+            cluster=ClusterSpec(r=2, result_cache=(0.2, 2e-3)))
         flat_idx = [np.unravel_index(s, (5, 2, 1, 2)) for s in range(3)]
         got = np.asarray([res.stats.sum_response[l, 0, c, d, h, 1]
                           for (l, c, d, h) in flat_idx])

@@ -167,13 +167,15 @@ def test_rpr004_handwired_replicas():
              "            key, lam / n_replicas, n, params))\n"
              "    return outs\n"),
         # sweep_simulated's real shape: loop over grid cells, but the
-        # engine is told about replication via r=
-        clean=("from repro.core.simulator import simulate_fork_join_batch\n"
+        # engine is told about replication via cluster=
+        clean=("from repro.core.cluster import ClusterSpec\n"
+               "from repro.core.simulator import simulate_fork_join_batch\n"
                "def f(keys, lam, n, params, n_rep):\n"
                "    outs = []\n"
                "    for j in range(2):\n"
                "        outs.append(simulate_fork_join_batch(\n"
-               "            keys[j], lam, params, n, p=4, r=n_rep))\n"
+               "            keys[j], lam, params, n, p=4,\n"
+               "            cluster=ClusterSpec(r=n_rep)))\n"
                "    return outs\n"))
 
 
@@ -208,6 +210,43 @@ def test_rpr005_handbuilt_timeline():
              "                    slo_count=xs)\n"),
         clean=("def f(trace):\n"
                "    return trace.to_timeline()\n"))
+
+
+def test_rpr006_loose_topology_keywords():
+    assert_triple(
+        "RPR006", "src/repro/core/x.py",
+        bad=("from repro.core.simulator import simulate_fork_join\n"
+             "def f(key, params):\n"
+             "    return simulate_fork_join(key, 50.0, 256, params,\n"
+             "                              r=3, routing='jsq')\n"),
+        clean=("from repro.core.cluster import ClusterSpec\n"
+               "from repro.core.simulator import simulate_fork_join\n"
+               "def f(key, params):\n"
+               "    return simulate_fork_join(\n"
+               "        key, 50.0, 256, params,\n"
+               "        cluster=ClusterSpec(r=3, routing='jsq'))\n"))
+
+
+def test_rpr006_covers_validate_replicas():
+    assert_triple(
+        "RPR006", "tests/x.py",
+        bad=("from repro.calibrate import validate\n"
+             "def f(traces, cal):\n"
+             "    return validate(traces, cal, replicas=2)\n"),
+        clean=("from repro.calibrate import validate\n"
+               "from repro.core.cluster import ClusterSpec\n"
+               "def f(traces, cal):\n"
+               "    return validate(traces, cal, cluster=ClusterSpec(r=2))\n"))
+
+
+def test_rpr006_scope():
+    # fnmatch `*` crosses `/`: files directly under tests/ and nested
+    # under src/ are both in scope; the shim module itself is excluded
+    assert sc.RULES["RPR006"].applies_to("tests/test_replication.py")
+    assert sc.RULES["RPR006"].applies_to("src/repro/obs/report.py")
+    assert sc.RULES["RPR006"].applies_to("examples/replicated_sweep.py")
+    assert sc.RULES["RPR006"].applies_to("benchmarks/replicated_bench.py")
+    assert not sc.RULES["RPR006"].applies_to("src/repro/core/cluster.py")
 
 
 def test_rpr005_silent_in_obs_package():
