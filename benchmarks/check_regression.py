@@ -49,7 +49,7 @@ GATES = {
 
 BASELINE_FILES = ("BENCH_streaming.json", "BENCH_calibrate.json",
                   "BENCH_replicated.json", "BENCH_sharded.json",
-                  "BENCH_obs.json")
+                  "BENCH_obs.json", "BENCH_faults.json")
 
 # keys every record's profile block must carry (see _util.profile_block)
 _PROFILE_KEYS = ("compile_s", "flops", "bytes_accessed", "peak_bytes")

@@ -1,0 +1,193 @@
+"""Fault-injection benchmark: degraded-path throughput + memory law.
+
+Registers the perf trajectory of the streaming engine with a live
+`FaultSpec` (outage windows + stochastic MTBF/MTTR + partial-quorum
+merge + hedged retries — every fault channel at once) and ASSERTS the
+acceptance criteria the fault layer must never regress:
+
+* ``ClusterSpec(fault=None)`` stays BIT-IDENTICAL to an all-up spec
+  (no outages, slowdown factors of 1, never-firing timeout and hedge)
+  in every shared statistic — the fault machinery may cost nothing
+  when nothing can fail;
+* the fused engine's r-free peak-memory law survives fault injection:
+  the outage mask and quorum join add O(S x r) carry slots and
+  S x p x chunk temporaries, so measured compiled temp memory per
+  extra replica stays under the same small buffer allowance as the
+  fault-free engine;
+* measured temp memory is INDEPENDENT of n_queries (the faulted
+  engine is still streaming).
+
+All are checked against XLA's own ``memory_analysis()`` of the lowered
+streaming program.  Timing is a median of 3 passes.  The headline
+``queries_per_s`` measures the ALL-CHANNELS faulted run (outage +
+MTBF + quorum + hedge on round_robin); ``fault_overhead_frac`` records
+its slowdown against the fault-free twin.  Results go to
+``BENCH_faults.json`` for CI's bench-regression diff.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import _util
+
+_F32 = 4
+# same allowance as BENCH_replicated: the fault path may keep a few
+# S x p x chunk temporaries (quorum sort, hedge draws) but must not
+# re-introduce an r-scaled full re-scan
+_MAX_BUFFERS_PER_R = 10.0
+_TIMING_PASSES = 3
+
+# every statistic the fault-free and all-up programs must share bitwise
+_SHARED_FIELDS = ("count", "sum_response", "sumsq_response", "sum_broker",
+                  "sum_cluster", "sum_server", "hist")
+
+
+def _compiled_temp_bytes(lam, params, n_queries, p, r, chunk, fault=None):
+    from repro.core import simulator
+    proc = simulator._as_batch_process(lam)
+    compiled = simulator._simulate_stream.lower(
+        jax.random.PRNGKey(0), proc, params, jnp.asarray(0.0),
+        jnp.asarray(0.0), n_queries=n_queries, p=p, mode="exponential",
+        impl="xla", chunk=chunk, warmup_fraction=0.1, hist_bins=256,
+        tap_size=0, r=r, routing="round_robin",
+        has_cache=False, replica_impl="fused",
+        fault=fault).compile()
+    return int(compiled.memory_analysis().temp_size_in_bytes)
+
+
+def bench_faults(rows):
+    from repro.core import capacity, simulator
+    from repro.core.cluster import ClusterSpec
+    from repro.core.faults import FaultSpec
+    from repro.core.queueing import ServerParams
+
+    n_scen, p, r, chunk = 3, 8, 4, 4096
+    n_q = _util.scale_queries(200_000, 50_000)
+    lam = jnp.asarray([30.0, 60.0, 90.0])
+    vec = ServerParams(**{
+        f.name: jnp.asarray(
+            [getattr(capacity.TABLE5_PARAMS, f.name)] * n_scen,
+            jnp.float32)
+        for f in dataclasses.fields(ServerParams)})
+    key = jax.random.PRNGKey(0)
+
+    # every fault channel live at once: one replica down for a stretch,
+    # a background MTBF/MTTR churn, a slow disk on server 2, k-of-p
+    # quorum under a broker deadline, and one hedged retry
+    horizon = n_q / float(lam[0])
+    full_fault = FaultSpec(
+        outages=((0, 0.2 * horizon, 0.5 * horizon),),
+        mtbf_seconds=0.3 * horizon, mttr_seconds=0.03 * horizon,
+        degraded=((2, 1.5),),
+        broker_timeout_seconds=0.25, quorum_k=p - 1,
+        hedge_after_seconds=0.4)
+    # the all-up twin: nothing can ever fire, numerics must not move
+    all_up = FaultSpec(degraded=((0, 1.0),),
+                       broker_timeout_seconds=1e9, quorum_k=1,
+                       hedge_after_seconds=1e9)
+
+    def run(fault, n=n_q):
+        res = simulator.simulate_fork_join_batch(
+            key, lam, vec, n, p=p, impl="xla", chunk_size=chunk,
+            cluster=ClusterSpec(r=r, routing="round_robin", fault=fault))
+        jax.block_until_ready(res.sum_response)
+        return res
+
+    def timed(fault):
+        res = run(fault)                       # compile + warm
+        times = []
+        for _ in range(_TIMING_PASSES):
+            t0 = time.perf_counter()
+            run(fault)
+            times.append(time.perf_counter() - t0)
+        return statistics.median(times), res
+
+    # --- acceptance: fault=None bit-identical to the all-up spec -------
+    probe_q = 20_000
+    res_none = run(None, probe_q)
+    res_all_up = run(all_up, probe_q)
+    for name in _SHARED_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res_none, name)),
+            np.asarray(getattr(res_all_up, name)),
+            err_msg=f"all-up FaultSpec perturbed {name}: the fault "
+                    "machinery is no longer free when nothing can fail")
+
+    dt_free, _ = timed(None)
+    dt, res = timed(full_fault)
+
+    profile = _util.profile_block(
+        jax.jit(lambda k: simulator.simulate_fork_join_batch(
+            k, lam, vec, n_q, p=p, impl="xla", chunk_size=chunk,
+            cluster=ClusterSpec(r=r, routing="round_robin",
+                                fault=full_fault))),
+        jax.random.PRNGKey(0),
+        name=f"faulted_stream[{n_scen}x{r}x{n_q}]", n_runs=0)
+
+    # --- the r-free memory law must survive fault injection ------------
+    probe_mem_q = 50_000
+    temp_r1 = _compiled_temp_bytes(lam, vec, probe_mem_q, p, 1, chunk,
+                                   fault=full_fault)
+    temp_r4 = _compiled_temp_bytes(lam, vec, probe_mem_q, p, r, chunk,
+                                   fault=full_fault)
+    temp_r4_long = _compiled_temp_bytes(lam, vec, 4 * probe_mem_q, p, r,
+                                        chunk, fault=full_fault)
+    temp_r4_free = _compiled_temp_bytes(lam, vec, probe_mem_q, p, r, chunk)
+
+    unit = n_scen * p * chunk * _F32
+    slope_per_r = (temp_r4 - temp_r1) / (r - 1)
+    assert slope_per_r <= _MAX_BUFFERS_PER_R * unit, (
+        f"faulted peak temp grows {slope_per_r / unit:.1f} S*p*chunk "
+        f"buffers per replica — above {_MAX_BUFFERS_PER_R}; fault "
+        "injection broke the fused r-free streaming law")
+    assert abs(temp_r4_long - temp_r4) <= 0.02 * temp_r4, (
+        f"faulted peak temp moved with n_queries ({temp_r4} -> "
+        f"{temp_r4_long}); the faulted engine is no longer streaming")
+
+    queries_per_s = n_scen * n_q / dt
+    record = {
+        "bench": "faults",
+        "n_scenarios": n_scen,
+        "p": p,
+        "r": r,
+        "n_queries": n_q,
+        "chunk_size": chunk,
+        "routing": "round_robin",
+        "fault": repr(full_fault),
+        "wall_seconds": dt,
+        "wall_seconds_fault_free": dt_free,
+        "queries_per_s": queries_per_s,
+        "queries_per_s_fault_free": n_scen * n_q / dt_free,
+        "fault_overhead_frac": dt / dt_free - 1.0,
+        "availability": float(jnp.mean(res.availability)),
+        "spill_fraction": float(jnp.mean(res.spill_fraction)),
+        "degraded_fraction": float(jnp.mean(res.degraded_fraction)),
+        "peak_mem_measured_bytes": temp_r4,
+        "peak_mem_measured_r1_bytes": temp_r1,
+        "peak_mem_fault_free_bytes": temp_r4_free,
+        "peak_mem_slope_buffers_per_r": slope_per_r / unit,
+        "profile": profile,
+    }
+    out = _util.bench_output_path("BENCH_faults.json")
+    out.write_text(json.dumps(record, indent=2) + "\n")
+
+    rows.append(("faults", dt * 1e6,
+                 f"{n_scen} scen x {r} replicas x {n_q} queries, every "
+                 f"fault channel live; {queries_per_s / 1e6:.2f}M "
+                 f"queries/s ({(dt / dt_free - 1.0) * 100:+.0f}% vs "
+                 f"fault-free), availability "
+                 f"{float(jnp.mean(res.availability)) * 100:.1f}%, "
+                 f"spill {float(jnp.mean(res.spill_fraction)) * 100:.1f}%, "
+                 f"degraded "
+                 f"{float(jnp.mean(res.degraded_fraction)) * 100:.1f}%; "
+                 f"peak temp {temp_r4 / 2**20:.1f} MiB "
+                 f"({slope_per_r / unit:.1f} SxPxChunk buffers/replica, "
+                 f"n-invariant; all-up spec bit-identical); -> {out}"))

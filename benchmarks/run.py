@@ -17,9 +17,10 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (calibrate_bench, kernels_bench, obs_bench,
-                        paper_tables, partitioning_bench, replicated_bench,
-                        sharded_bench, streaming_bench, sweep_bench)
+from benchmarks import (calibrate_bench, faults_bench, kernels_bench,
+                        obs_bench, paper_tables, partitioning_bench,
+                        replicated_bench, sharded_bench, streaming_bench,
+                        sweep_bench)
 
 BENCHES = [
     paper_tables.bench_table2_query_lengths,
@@ -44,6 +45,7 @@ BENCHES = [
     sweep_bench.bench_sweep_simulated,
     streaming_bench.bench_streaming_sweep,
     replicated_bench.bench_replicated_sweep,
+    faults_bench.bench_faults,
     sharded_bench.bench_sharded_sweep,
     calibrate_bench.bench_calibrate,
     obs_bench.bench_obs_telemetry,

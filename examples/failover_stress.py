@@ -1,0 +1,141 @@
+"""Does the fleet survive losing a replica at the worst moment?
+
+The paper sizes a fleet for peak load (Section 6) assuming every replica
+stays up; a real vertical deployment loses machines, and the capacity
+question becomes N+k: does the p95 SLO hold while k replicas are down
+and failover routing spills their share onto the survivors?  This
+example stresses exactly that:
+
+  1. a diurnal + flash-crowd week is replayed against a fixed r-replica
+     fleet, fault-free, for the baseline p95;
+  2. the same week is replayed with one replica DOWN for the hours
+     around the flash crowd (a deterministic `FaultSpec` outage window)
+     — the survivors' p95 answers "does N-1 hold the SLO at peak?";
+  3. a `SweepGrid` fault axis compares graceful-degradation knobs at
+     equal load: full fork-join vs k-of-p partial-quorum merging under
+     a broker timeout, with and without the outage;
+  4. an N+k plan from `plan_capacity(survive_faults=1)` shows what the
+     planner would buy to make step 2 pass by construction.
+
+The "week" is time-compressed (a few seconds per hourly bin) so the
+whole shape fits in a tractable query budget.
+
+Run:  PYTHONPATH=src python examples/failover_stress.py [--quick]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import capacity, simulator, sweep
+from repro.core.arrivals import ArrivalProcess
+from repro.core.cluster import ClusterSpec
+from repro.core.faults import FaultSpec
+from repro.core.queueing import ServerParams
+from repro.obs.report import render_timeline
+from repro.obs.timeline import TelemetrySpec
+from repro.workloadgen import loadgen
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--quick", action="store_true",
+                help="CI smoke mode: fewer queries, smaller grid")
+args = ap.parse_args()
+
+MS = 1e3
+SLO = 0.75                     # p95 objective (s)
+LAM = 24.0                     # time-averaged total qps
+R = 3                          # the provisioned fleet
+BIN_S = 2.0                    # seconds per "hour" of the compressed week
+N_Q = 6_000 if args.quick else 48_000
+CHUNK = 64                     # small: every ~2s profile bin gets sampled
+
+PARAMS = ServerParams(p=4, s_broker=0.004, s_hit=0.0125, s_miss=0.05,
+                      s_disk=0.04, hit=0.5)
+
+# -- the load: a diurnal week with a flash crowd on Wednesday 15:00 -----
+week = loadgen.diurnal_rates(1.0, peak_to_trough=3.0)      # (168,) hourly
+crowd_hour = 2 * 24 + 15
+week = week.at[crowd_hour].mul(2.5)
+profile = week / jnp.mean(week)
+arrival = ArrivalProcess.piecewise(LAM * profile, BIN_S)
+
+# the outage covers the crowd and the hours around it — the worst window
+down_t0, down_t1 = (crowd_hour - 2) * BIN_S, (crowd_hour + 4) * BIN_S
+outage = FaultSpec(outages=((0, down_t0, down_t1),))
+
+key = jax.random.PRNGKey(23)
+tele = TelemetrySpec(n_bins=28)
+
+
+def run(spec, k=key):
+    return simulator.simulate_fork_join(
+        k, arrival, N_Q, PARAMS, chunk_size=CHUNK, cluster=spec,
+        telemetry=tele)
+
+
+print(f"== failover stress: r={R}, lam={LAM:g} qps avg, flash crowd "
+      f"x2.5, p95 SLO {SLO * MS:.0f} ms ==")
+
+base = run(ClusterSpec(r=R, routing="round_robin"))
+p95_base = float(base.quantile(0.95))
+print(f"  fault-free     p95 {p95_base * MS:7.1f} ms  "
+      f"mean {float(base.mean_response) * MS:6.1f} ms")
+
+hit = run(ClusterSpec(r=R, routing="round_robin", fault=outage))
+p95_hit = float(hit.quantile(0.95))
+ok = p95_hit <= SLO
+print(f"  1 replica down p95 {p95_hit * MS:7.1f} ms  "
+      f"mean {float(hit.mean_response) * MS:6.1f} ms  "
+      f"spill {float(hit.spill_fraction) * 100:.1f}%  "
+      f"availability {float(hit.availability) * 100:.2f}%")
+print(f"  -> survivors {'HOLD' if ok else 'VIOLATE'} the p95 SLO "
+      f"during the outage ({p95_hit * MS:.0f} ms vs {SLO * MS:.0f} ms)")
+print()
+print(render_timeline(hit.timeline, "outage week (1 of 3 down at peak)"))
+
+# -- graceful degradation: full fork-join vs k-of-p quorum --------------
+# Under a broker timeout the merge returns with the k fastest servers'
+# results; the query is DEGRADED (partial coverage) but fast.  Sweep the
+# knob with and without the outage at equal load.
+p = int(PARAMS.p)
+deadline = 0.6 * SLO
+scenarios = (
+    None,
+    FaultSpec(broker_timeout_seconds=deadline, quorum_k=p - 1),
+    FaultSpec(outages=outage.outages),
+    FaultSpec(outages=outage.outages,
+              broker_timeout_seconds=deadline, quorum_k=p - 1),
+)
+labels = ("fault-free", f"quorum {p - 1}/{p}", "outage",
+          f"outage + quorum {p - 1}/{p}")
+grid = sweep.SweepGrid.build(
+    lam=[LAM], p=[float(p)], hit=[PARAMS.hit], base=PARAMS,
+    broker_from_p=False, r=[float(R)], fault=scenarios)
+res = sweep.sweep_simulated(
+    grid, jax.random.PRNGKey(5), n_queries=N_Q, chunk_size=CHUNK,
+    profile=profile, profile_bin_seconds=BIN_S,
+    cluster=ClusterSpec(routing="round_robin"))
+p95s = jnp.reshape(res.quantile(0.95), (-1,))
+degr = jnp.reshape(res.stats.degraded_fraction, (-1,))
+print("\n== degraded operation vs full fork-join (same week, same fleet) ==")
+for j, lab in enumerate(labels):
+    d = float(degr[j])
+    note = f"  degraded {d * 100:5.1f}%" if d > 0 else ""
+    flag = "ok " if float(p95s[j]) <= SLO else "SLO"
+    print(f"  {lab:<22} p95 {float(p95s[j]) * MS:7.1f} ms [{flag}]{note}")
+
+# -- what would the planner buy to survive this? ------------------------
+plan = capacity.plan_capacity(
+    PARAMS, LAM * float(jnp.max(profile)), SLO, survive_faults=1,
+    simulate=not args.quick, key=jax.random.PRNGKey(3),
+    n_queries=max(4_000, N_Q // 4))
+print(f"\n== N+1 plan for the peak rate ==")
+print(f"  {plan.n_replicas} replicas x {plan.servers_per_replica} servers "
+      f"(k={plan.survive_faults} spare) -> "
+      f"{plan.total_servers} servers total")
+if plan.response_faulted_p95_ms is not None:
+    fok = plan.response_faulted_p95_ms <= SLO * MS
+    print(f"  simulated p95 with {plan.survive_faults} replica down: "
+          f"{plan.response_faulted_p95_ms:.1f} ms "
+          f"[{'holds SLO' if fok else 'exceeds SLO'}]")

@@ -29,6 +29,7 @@ from repro.calibrate.fit import CalibratedParams
 from repro.calibrate.measure import TraceRecord
 from repro.core import simulator
 from repro.core.cluster import ClusterSpec, resolve_cluster
+from repro.core.faults import FaultSpec
 from repro.core.queueing import ServerParams
 from repro.launch.elastic import AutoscalePolicy
 
@@ -56,9 +57,15 @@ class ValidationReport:
     # analytical even-split assumption cannot see.  None when r == 1.
     # Under an autoscale policy ``replicas`` is the policy's max_r (the
     # provisioned fleet) and ``autoscale`` records the policy itself.
+    # With a FaultSpec on the spec the column runs the same calibrated
+    # fleet under injected faults (``fault`` records the spec, and
+    # ``faulted_degraded_fraction`` its partial-quorum share) — the
+    # "does the calibrated model survive an outage" column.
     r_sim_replicated: Optional[Array] = None
     replicas: int = 1
     autoscale: Optional[AutoscalePolicy] = None
+    fault: Optional["FaultSpec"] = None
+    faulted_degraded_fraction: Optional[Array] = None
 
     @property
     def rel_err_observed(self) -> Array:
@@ -134,6 +141,13 @@ class ValidationReport:
                 f"vs x{self.replicas}-replicated simulator: mean "
                 f"{float(jnp.mean(self.rel_err_replicated)) * 100:.1f}%  "
                 f"max {float(jnp.max(self.rel_err_replicated)) * 100:.1f}%")
+        if self.fault is not None:
+            note = f"replicated column fault-injected: {self.fault!r}"
+            if self.faulted_degraded_fraction is not None:
+                note += (
+                    "  (degraded "
+                    f"{float(jnp.mean(self.faulted_degraded_fraction)) * 100:.1f}%)")
+            lines.append(note)
         return "\n".join(lines)
 
 
@@ -177,8 +191,13 @@ def validate(
     behave like calibrated x 1 under the chosen routing?  With
     ``autoscale=`` on the spec the column runs the elastic fleet at
     ``max_r`` x the window rate (peak per-replica load matches when
-    fully scaled out).  The loose ``replicas=`` / ``routing=`` /
-    ``result_cache=`` keywords keep working through the
+    fully scaled out).  With ``fault=FaultSpec(...)`` on the spec the
+    column runs the calibrated fleet UNDER those injected faults —
+    outage windows, degraded disks, partial-quorum merging — scoring
+    how far degraded operation drifts from the calibrated prediction
+    (the report then carries the spec and the observed
+    ``faulted_degraded_fraction``).  The loose ``replicas=`` /
+    ``routing=`` / ``result_cache=`` keywords keep working through the
     `repro.core.cluster.resolve_cluster` deprecation shim.
     """
     spec = resolve_cluster(cluster, r=replicas, routing=routing,
@@ -196,14 +215,17 @@ def validate(
         p=int(params.p), mode="cache", impl=impl)
     r_sim = sim.mean_response
 
-    r_rep = None
+    r_rep = degr_frac = None
     rep_r = spec.engine_r
-    if rep_r > 1 or spec.autoscale is not None:
+    if rep_r > 1 or spec.autoscale is not None or spec.fault is not None:
         rep = simulator.simulate_fork_join_batch(
             jax.random.fold_in(key, rep_r), lam_h * rep_r,
             _vec_params(params, n_hold), simulator_queries,
             p=int(params.p), mode="cache", impl=impl, cluster=spec)
         r_rep = rep.mean_response
+        if (spec.fault is not None
+                and spec.fault.broker_timeout_seconds is not None):
+            degr_frac = rep.degraded_fraction
 
     order = jnp.argsort(lam_h)
     return ValidationReport(
@@ -211,7 +233,9 @@ def validate(
         r_calibrated=r_cal[order], r_simulated=r_sim[order],
         calibrated=calibrated,
         r_sim_replicated=None if r_rep is None else r_rep[order],
-        replicas=rep_r, autoscale=spec.autoscale)
+        replicas=rep_r, autoscale=spec.autoscale, fault=spec.fault,
+        faulted_degraded_fraction=(None if degr_frac is None
+                                   else degr_frac[order]))
 
 
 def calibrate_and_validate(

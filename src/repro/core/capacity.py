@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import queueing
 from repro.core.cluster import ClusterSpec, resolve_cluster
+from repro.core.faults import FaultSpec
 from repro.core.queueing import ServerParams
 from repro.launch.elastic import AutoscalePolicy
 
@@ -175,6 +176,14 @@ class CapacityPlan:
     count it actually used — comparing it to ``n_replicas`` (the static
     Sec-6 answer, which stays the provisioning headline) quantifies the
     elastic saving.
+
+    ``survive_faults``/``response_faulted_p95_ms`` are the N+k
+    survivability extension (``plan_capacity(..., survive_faults=k)``):
+    the fleet is provisioned with k spare replicas so the SLO holds
+    with k replicas down, and — when the simulated cross-check ran —
+    ``response_faulted_p95_ms`` is the observed p95 of exactly that
+    degraded scenario (k replicas held down for the whole run, failover
+    routing spilling their share to the survivors).
     """
 
     n_replicas: int
@@ -189,6 +198,8 @@ class CapacityPlan:
     routing: Optional[str] = None
     autoscale: Optional[AutoscalePolicy] = None
     mean_active_replicas: Optional[float] = None
+    survive_faults: int = 0
+    response_faulted_p95_ms: Optional[float] = None
 
 
 def plan_capacity(
@@ -203,6 +214,7 @@ def plan_capacity(
     routing: Optional[str] = None,
     n_queries: int = 60_000,
     mode: str = "exponential",
+    survive_faults: int = 0,
 ) -> CapacityPlan:
     """Section-6 sizing, optionally cross-checked by simulation.
 
@@ -227,6 +239,21 @@ def plan_capacity(
     — the replica-seconds integral that makes "elastic vs static" a
     like-for-like cost comparison.  Policies need the simulator, so
     ``simulate=False`` with an autoscale policy is an error.
+
+    ``survive_faults=k`` is the N+k survivability criterion (the
+    ROADMAP's "one replica down at global peak" question, k=1): the
+    fleet is sized so the SLO still holds with k replicas down — the
+    Eq 7/8 bound is evaluated at the SURVIVOR rate ``target_rate /
+    (n - k)`` and ``n`` gains k spares, so the plan is always at least
+    as conservative as the fault-free one (equal at k=0).  With
+    ``simulate=True`` the cross-check runs exactly that degraded
+    scenario — k replicas held down for the whole run via a
+    `repro.core.faults.FaultSpec` outage window, failover spilling
+    their share to survivors — and if the observed p95 still misses
+    the SLO (routing imbalance the even-split bound can't see), the
+    fleet is grown further until it holds.  The plan only accepts a
+    configuration whose simulated faulted p95 meets the SLO
+    (``response_faulted_p95_ms``).
     """
     spec = resolve_cluster(cluster, routing=routing,
                            result_cache=result_cache,
@@ -239,18 +266,33 @@ def plan_capacity(
         raise ValueError(
             "an autoscale policy only affects the simulated cross-check "
             "(the Eq 7/8 sizing is static); pass simulate=True")
+    k_down = int(survive_faults)
+    if k_down < 0:
+        raise ValueError(f"survive_faults must be >= 0; got {survive_faults}")
+    if k_down and spec.autoscale is not None:
+        raise ValueError(
+            "survive_faults sizes a static fleet; with an autoscale "
+            "policy the max_r provisioning is the policy's job — plan "
+            "the two separately")
+    if k_down and spec.fault is not None:
+        raise ValueError(
+            "survive_faults synthesizes its own k-replicas-down "
+            "FaultSpec; a ClusterSpec.fault would double-inject — give "
+            "one or the other")
     cache = spec.result_cache
     n, per_replica = replicas_needed(
         params, target_rate, slo_seconds, result_cache=cache)
-    n_i = int(n)
-    rate = float(target_rate) / max(n_i, 1)
+    # N+k: the bound must hold at the SURVIVOR rate target / n_base, so
+    # provisioning gains k spares on top of the fault-free answer
+    n_i = int(n) + k_down
+    rate = float(target_rate) / max(int(n), 1)
     lo, hi = queueing.response_time_bounds(rate, params)
     if cache is not None:
         hi = queueing.response_time_with_result_cache(
             rate, params, *cache)
     p = int(jnp.asarray(params.p))
     util = queueing.utilization(rate, queueing.service_time_server(params))
-    sim_ms = sim_p95_ms = mean_active = None
+    sim_ms = sim_p95_ms = mean_active = faulted_p95_ms = None
     _SIM_REPLICA_CAP = 256
     sim_r = (spec.autoscale.max_r if spec.autoscale is not None else n_i)
     feasible = float(per_replica) > 1e-9 or spec.autoscale is not None
@@ -266,6 +308,25 @@ def plan_capacity(
         sim_p95_ms = float(sim.quantile(0.95)) * 1e3
         if spec.autoscale is not None:
             mean_active = float(sim.mean_active_replicas)
+        if k_down:
+            # the survivability check proper: k replicas held down for
+            # the WHOLE run (the peak-coincident worst case), failover
+            # spilling their share to the survivors.  The even-split
+            # bound already sized for this; the simulation additionally
+            # sees routing imbalance, so grow the fleet if p95 misses.
+            horizon = 2.0 * n_queries / max(float(target_rate), 1e-9)
+            down = FaultSpec(
+                outages=tuple((j, 0.0, horizon) for j in range(k_down)))
+            for _ in range(4):
+                ft_spec = dataclasses.replace(spec, r=n_i, fault=down)
+                ft = simulator.simulate_fork_join(
+                    key, float(target_rate), n_queries, params,
+                    mode=mode, cluster=ft_spec)
+                faulted_p95_ms = float(ft.quantile(0.95)) * 1e3
+                if (faulted_p95_ms <= slo_seconds * 1e3
+                        or n_i >= _SIM_REPLICA_CAP):
+                    break
+                n_i += 1
     elif simulate:
         import warnings
         reason = ("infeasible SLO" if float(per_replica) <= 1e-9
@@ -289,6 +350,8 @@ def plan_capacity(
         routing=spec.routing if sim_ms is not None else None,
         autoscale=spec.autoscale if sim_ms is not None else None,
         mean_active_replicas=mean_active,
+        survive_faults=k_down,
+        response_faulted_p95_ms=faulted_p95_ms,
     )
 
 

@@ -31,6 +31,7 @@ import dataclasses
 import warnings
 from typing import Optional
 
+from repro.core.faults import FaultSpec
 from repro.launch.elastic import AutoscalePolicy
 
 __all__ = ["ClusterSpec", "ROUTING_POLICIES", "REPLICA_IMPLS",
@@ -55,6 +56,9 @@ class ClusterSpec:
                   "masked" (full-stream re-scan oracle).
     autoscale:    optional :class:`AutoscalePolicy` making the active
                   replica count time-varying inside the scan.
+    fault:        optional :class:`repro.core.faults.FaultSpec` injecting
+                  replica outages, degraded servers, a partial-quorum
+                  broker timeout and hedged retries into the scan.
 
     Instances are frozen and hashable (``result_cache`` is coerced to a
     float tuple) so a spec is a valid ``jax.jit`` static argument.
@@ -65,6 +69,7 @@ class ClusterSpec:
     result_cache: Optional[tuple[float, float]] = None
     replica_impl: str = "fused"
     autoscale: Optional[AutoscalePolicy] = None
+    fault: Optional[FaultSpec] = None
 
     def __post_init__(self):
         object.__setattr__(self, "r", int(self.r))
@@ -90,6 +95,9 @@ class ClusterSpec:
                     "with autoscale= the engine provisions "
                     "autoscale.max_r replicas; leave r at its default "
                     f"(got r={self.r})")
+        if self.fault is not None and not isinstance(self.fault, FaultSpec):
+            raise TypeError("fault must be a repro.core.faults.FaultSpec; "
+                            f"got {type(self.fault).__name__}")
 
     @property
     def engine_r(self) -> int:

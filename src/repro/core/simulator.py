@@ -124,6 +124,7 @@ from repro.core import queueing
 from repro.core.arrivals import ArrivalProcess
 from repro.core.cluster import ClusterSpec, ROUTING_POLICIES, \
     resolve_cluster
+from repro.core.faults import FaultSpec, fault_init, fault_scan
 from repro.core.queueing import ServerParams, service_time_server
 from repro.launch.elastic import AutoscalePolicy, autoscale_init, \
     autoscale_scan
@@ -138,6 +139,7 @@ __all__ = [
     "ArrivalProcess",
     "ClusterSpec",
     "AutoscalePolicy",
+    "FaultSpec",
     "SimResult",
     "simulate_fork_join",
     "simulate_fork_join_batch",
@@ -159,6 +161,7 @@ DEFAULT_HIST_BINS = 256
 _TAP_SALT = 0x7EE5
 _ROUTE_SALT = 0x2077
 _CACHE_SALT = 0xCA8E
+_FAULT_SALT = 0xFA17
 # log-histogram span, in decades around the per-scenario analytic scale
 _HIST_DECADES_BELOW = 3.0
 _HIST_DECADES_TOTAL = 6.0
@@ -172,18 +175,24 @@ def maxplus_combine(x, y):
 
 
 def fcfs_completion_times(arrivals: Array, services: Array,
-                          impl: str = "xla",
+                          impl: str = "auto",
                           carry: Optional[Array] = None) -> Array:
     """Completion times of an FCFS single-server queue.
 
     arrivals: (..., n) nondecreasing along the last axis.
     services: (..., n) positive.
     impl: "xla" (associative_scan) or "pallas" (TPU kernel; interpret=True
-    on CPU) — both compute the identical recurrence.
+    on CPU) — both compute the identical recurrence.  The default
+    "auto" picks "pallas" on real TPU hardware and "xla" everywhere
+    else (interpret-mode Pallas is slower than associative_scan); see
+    `repro.kernels.maxplus_scan.ops.resolve_scan_impl`.
     carry: optional (...,) completion time of the work *before* this
     block; seeding composes it on top of the scan, which is how the
     streaming engine chains chunks.
     """
+    if impl == "auto":
+        from repro.kernels.maxplus_scan.ops import resolve_scan_impl
+        impl = resolve_scan_impl(impl)
     a = arrivals + services
     b = services
     if impl == "pallas":
@@ -232,6 +241,15 @@ class SimResult:
     t=0).  None unless the run carried an
     :class:`~repro.launch.elastic.AutoscalePolicy`, following the
     timeline convention.
+
+    ``spill_count`` / ``unavail_count`` / ``degraded_count`` are the
+    fault channels (None unless the run carried a
+    :class:`~repro.core.faults.FaultSpec`, same convention): post-warmup
+    queries re-routed off a down replica, queries arriving with NO
+    surviving replica to route to, and partial-quorum (k-of-p) results
+    cut short by the broker timeout.  The derived ``availability`` /
+    ``spill_fraction`` / ``degraded_fraction`` are what capacity plans
+    gate on.
     """
 
     count: Array           # post-warmup samples per scenario
@@ -247,6 +265,9 @@ class SimResult:
     timeline: Optional[Timeline] = None  # per-bin telemetry (see obs)
     replica_seconds: Optional[Array] = None  # integral of active r dt
     elapsed_seconds: Optional[Array] = None  # integral of dt (valid)
+    spill_count: Optional[Array] = None      # failover-spilled queries
+    unavail_count: Optional[Array] = None    # no surviving replica
+    degraded_count: Optional[Array] = None   # k-of-p partial results
 
     @property
     def _n(self) -> Array:
@@ -277,6 +298,29 @@ class SimResult:
                              "recorded under ClusterSpec(autoscale=...)")
         return self.replica_seconds / jnp.maximum(self.elapsed_seconds,
                                                   1e-30)
+
+    def _fault_channel(self, name: str) -> Array:
+        val = getattr(self, name)
+        if val is None:
+            raise ValueError(
+                f"no faults were injected: {name} is only recorded "
+                "under ClusterSpec(fault=FaultSpec(...))")
+        return val
+
+    @property
+    def availability(self) -> Array:
+        """Fraction of post-warmup queries that found a live replica."""
+        return 1.0 - self._fault_channel("unavail_count") / self._n
+
+    @property
+    def spill_fraction(self) -> Array:
+        """Fraction of queries failed over off a down replica."""
+        return self._fault_channel("spill_count") / self._n
+
+    @property
+    def degraded_fraction(self) -> Array:
+        """Fraction of responses returned on a k-of-p partial quorum."""
+        return self._fault_channel("degraded_count") / self._n
 
     @property
     def mean_broker_residence(self) -> Array:
@@ -441,36 +485,63 @@ def _clamp_chunk_for_profile(proc: ArrivalProcess, chunk: int) -> int:
 
 def _routing_assign(routing: str, r: int, key: Array, c_idx, gidx,
                     n_scen: int, chunk: int,
-                    n_act: Optional[Array] = None) -> Optional[Array]:
+                    n_act: Optional[Array] = None,
+                    up: Optional[Array] = None):
     """(S, chunk) integer replica assignment for oblivious policies.
 
-    Returns None for "jsq" (its choice needs the carried work state and
-    is computed inside the scan body).  Round-robin assigns by GLOBAL
-    query index, so the assignment is invariant to how the stream is
-    chunked.
+    Returns ``(assign, spill, unavail)``; ``assign`` is None for "jsq"
+    (its choice needs the carried work state and is computed inside the
+    scan body).  Round-robin assigns by GLOBAL query index, so the
+    assignment is invariant to how the stream is chunked.
 
     ``n_act`` (autoscaling): per-query active replica count (S, chunk).
     Oblivious policies then target only the active fleet — round-robin
     wraps the global index at n_active, random thins uniformly over
     n_active — so inactive replicas receive no new work and drain.
+
+    ``up`` (fault injection): per-query replica-up mask (S, chunk, r)
+    from `repro.core.faults.fault_scan`.  Failover spills a query
+    raw-routed to a down replica onto the next surviving (and active)
+    replica cyclically — the smallest offset j with up[(raw + j) % r] —
+    which preserves round-robin's even split over the survivors.
+    ``spill`` marks re-routed queries, ``unavail`` queries for which no
+    active replica was up (those keep their raw assignment: the
+    dispatcher has nowhere better to send them, and the availability
+    channel records the incident).  Both are None when ``up`` is None,
+    and the assignment is bit-identical to the fault-free one.
     """
     if routing == "round_robin":
         if n_act is not None:
-            return gidx[None, :].astype(jnp.int32) % n_act
-        return jnp.broadcast_to((gidx % r)[None, :], (n_scen, chunk))
-    if routing == "random":
+            raw = gidx[None, :].astype(jnp.int32) % n_act
+        else:
+            raw = jnp.broadcast_to((gidx % r)[None, :], (n_scen, chunk))
+    elif routing == "random":
         k_route = jax.random.fold_in(
             jax.random.fold_in(key, c_idx), _ROUTE_SALT)
         if n_act is not None:
             u = jax.random.uniform(k_route, (n_scen, chunk))
-            return jnp.minimum((u * n_act).astype(jnp.int32), n_act - 1)
-        return jax.random.randint(k_route, (n_scen, chunk), 0, r)
-    return None
+            raw = jnp.minimum((u * n_act).astype(jnp.int32), n_act - 1)
+        else:
+            raw = jax.random.randint(k_route, (n_scen, chunk), 0, r)
+    else:
+        return None, None, None
+    if up is None:
+        return raw, None, None
+    ok = up
+    if n_act is not None:
+        ok = ok & (jnp.arange(r)[None, None, :] < n_act[:, :, None])
+    cand = (raw[:, :, None] + jnp.arange(r)[None, None, :]) % r
+    ok_c = jnp.take_along_axis(ok, cand, axis=-1)     # (S, chunk, r)
+    j = jnp.argmax(ok_c, axis=-1).astype(jnp.int32)   # first ok offset
+    any_ok = jnp.any(ok_c, axis=-1)
+    assign = jnp.where(any_ok, (raw + j) % r, raw)
+    return assign, any_ok & (j > 0), ~any_ok
 
 
 def _jsq_route(w: Array, gaps: Array, services: Array, live: Array,
                r: int, dtype,
-               n_act: Optional[Array] = None) -> tuple[Array, Array]:
+               n_act: Optional[Array] = None,
+               up: Optional[Array] = None):
     """Join-shortest-queue on carried per-replica work (fluid backlog).
 
     w: (S, r, p) remaining seconds of work per replica server, measured
@@ -484,32 +555,58 @@ def _jsq_route(w: Array, gaps: Array, services: Array, live: Array,
     active replica count (S, chunk); inactive replicas are masked out
     of the argmin — no new work — but their trackers keep draining,
     which is exactly the scale-in semantics (in-flight work finishes).
-    Returns ((S, chunk) integer replica choice, updated work state) —
-    the work state rides in the outer scan carry, so JSQ pressure
-    persists across chunks; both the masked and the fused replicated
-    paths consume the same choice stream.
+    ``up`` (fault injection): per-query replica-up mask (S, chunk, r);
+    down replicas are masked out of the argmin exactly like inactive
+    ones, and the step additionally reports whether the fault mask
+    overrode the fault-free choice (``spill``) or left no candidate at
+    all (``unavail``; the query then takes the fault-free choice — the
+    dispatcher has nowhere better to send it).
+    Returns ``(choice, work)`` — plus ``(spill, unavail)`` when ``up``
+    is given — where choice is the (S, chunk) integer replica pick; the
+    work state rides in the outer scan carry, so JSQ pressure persists
+    across chunks; both the masked and the fused replicated paths
+    consume the same choice stream.
     """
+    faulty = up is not None
 
     def step(w, inp):
-        if n_act is None:
-            gap, svc, lv = inp                   # (S,), (S, p), (S,)
-        else:
+        if faulty:
+            gap, svc, lv, upq = inp[:4]          # upq: (S, r)
+            act = inp[4] if n_act is not None else None
+        elif n_act is not None:
             gap, svc, lv, act = inp
+        else:
+            gap, svc, lv = inp                   # (S,), (S, p), (S,)
         w = jnp.maximum(w - gap[:, None, None], 0.0)
         backlog = jnp.max(w, axis=-1)            # (S, r) slowest server
         if n_act is not None:
             active = jnp.arange(r)[None, :] < act[:, None]
             backlog = jnp.where(active, backlog, jnp.inf)
         choice = jnp.argmin(backlog, axis=-1)    # (S,)
+        if faulty:
+            raw = choice
+            bl_up = jnp.where(upq > 0, backlog, jnp.inf)
+            any_up = jnp.any(jnp.isfinite(bl_up), axis=-1)
+            choice = jnp.where(any_up, jnp.argmin(bl_up, axis=-1), raw)
+            raw_up = jnp.take_along_axis(
+                upq, raw[:, None], axis=-1)[:, 0] > 0
+            out = (choice, any_up & ~raw_up, ~any_up)
+        else:
+            out = choice
         oh = (choice[:, None] == jnp.arange(r)[None, :]).astype(dtype)
         w = w + (oh * lv[:, None])[:, :, None] * svc[:, None, :]
-        return w, choice
+        return w, out
 
     xs = (gaps.T, jnp.moveaxis(services, -1, 0), live.T)
+    if faulty:
+        xs = xs + (jnp.moveaxis(up.astype(jnp.int32), 1, 0),)
     if n_act is not None:
         xs = xs + (n_act.T,)
-    w, choice_seq = jax.lax.scan(step, w, xs)    # choice_seq: (chunk, S)
-    return choice_seq.T, w
+    w, out_seq = jax.lax.scan(step, w, xs)       # leaves: (chunk, S)
+    if faulty:
+        choice_seq, spill_seq, unav_seq = out_seq
+        return choice_seq.T, w, spill_seq.T, unav_seq.T
+    return out_seq.T, w
 
 
 def _fcfs_segmented(arrivals: Array, services: Array, flags: Array,
@@ -544,7 +641,7 @@ def _fcfs_segmented(arrivals: Array, services: Array, flags: Array,
 
 def fcfs_completion_times_routed(
     arrivals: Array, services: Array, assign: Array, r: int,
-    *, impl: str = "xla", carry: Optional[Array] = None,
+    *, impl: str = "auto", carry: Optional[Array] = None,
 ) -> tuple[Array, Array]:
     """Completions of r parallel FCFS queues with per-query routing.
 
@@ -560,6 +657,9 @@ def fcfs_completion_times_routed(
     order.  Returns ``(completions (..., n), new_carry (..., r))`` where
     empty queues keep their old carry.
     """
+    if impl == "auto":
+        from repro.kernels.maxplus_scan.ops import resolve_scan_impl
+        impl = resolve_scan_impl(impl)
     if r < 1:
         raise ValueError(f"need at least one queue; got r={r}")
     if carry is None:
@@ -588,7 +688,7 @@ def fcfs_completion_times_routed(
     jax.jit, static_argnames=("n_queries", "p", "mode", "impl", "chunk",
                               "warmup_fraction", "hist_bins", "tap_size",
                               "r", "routing", "has_cache", "replica_impl",
-                              "autoscale", "telemetry"))
+                              "autoscale", "telemetry", "fault"))
 def _simulate_stream(
     key: Array,
     proc: ArrivalProcess,
@@ -609,6 +709,7 @@ def _simulate_stream(
     replica_impl: str = "fused",
     autoscale: Optional[AutoscalePolicy] = None,
     telemetry: Optional[TelemetrySpec] = None,
+    fault: Optional[FaultSpec] = None,
 ) -> SimResult:
     """The one chunked engine behind every fork-join entry point.
 
@@ -638,9 +739,27 @@ def _simulate_stream(
     routing policies.  Like telemetry it appends carry slots only when
     present — ``autoscale=None`` compiles the exact static-r program —
     and draws no randomness, so the canonical chunk plan is untouched.
+
+    ``fault`` (static) injects the `repro.core.faults.FaultSpec`
+    failure modes: per-query replica-up masks (deterministic windows +
+    the MTBF/MTTR Markov process) flow into the routing policies as
+    failover (down replicas get no new work; in-flight work drains,
+    exactly the autoscale scale-in semantics), degraded-server factors
+    rescale the canonical service draws, the broker timeout turns the
+    join into a k-of-p order statistic, and hedged duplicates race the
+    straggling join.  All fault randomness comes from the
+    ``_FAULT_SALT`` stream and all fault carry slots append only when
+    present, so ``fault=None`` compiles the bit-identical pre-fault
+    program — and an all-up spec reproduces its statistics bitwise.
     """
     n_scen = proc.rates.shape[0]
     elastic = autoscale is not None
+    faulty = fault is not None
+    # sub-features gate their ops individually so an all-up spec keeps
+    # every branch (and the fused fast path) of the fault-free program
+    f_outage = faulty and fault.has_outages
+    f_quorum = faulty and fault.broker_timeout_seconds is not None
+    f_hedge = faulty and fault.hedge_after_seconds is not None
     n_chunks = -(-n_queries // chunk)
     n_warm = int(n_queries * warmup_fraction)
     dtype = jnp.result_type(float)
@@ -716,11 +835,18 @@ def _simulate_stream(
             as_carry = carry[off:off + 5]
             rep_secs, elapsed = carry[off + 5:off + 7]
             off += 7
+        if faulty:
+            (f_up, f_tabs, s_spill, s_unav, s_degr) = carry[off:off + 5]
+            off += 5
         if telemetry is not None:
             (t_abs, tm_count, tm_resp, tm_bb, tm_bs, tm_rc, tm_hit,
              tm_slo) = carry[off:off + 8]
+            toff = off + 8
             if elastic:
-                tm_act = carry[off + 8]
+                tm_act = carry[toff]
+                toff += 1
+            if faulty:
+                tm_up, tm_spill, tm_degr = carry[toff:toff + 3]
         if has_trace:
             c_idx, trace_gaps_c = x
         else:
@@ -741,6 +867,32 @@ def _simulate_stream(
         # permute `arrivals` into replica-compacted layout
         last_arrival = arrivals[:, -1]
         gidx = c_idx * chunk + col
+
+        if faulty:
+            # Degraded servers: rescale the CANONICAL service draws (a
+            # slow disk / throttled CPU on one index partition, on every
+            # replica) before anything consumes them — the autoscaler's
+            # demand feedback, telemetry's busy integrals and both
+            # replica engines all see the degraded times.
+            if fault.degraded:
+                factors = [1.0] * p
+                for srv, f in fault.degraded:
+                    factors[srv % p] *= f
+                services = services * jnp.asarray(
+                    factors, dtype)[None, :, None]
+            # Replica-up mask at each arrival, off the chunking-invariant
+            # recurrence; stochastic transitions draw from the salted
+            # fault stream so the canonical plan is untouched.
+            k_fault = jax.random.fold_in(
+                jax.random.fold_in(key, c_idx), _FAULT_SALT)
+            u_fault = (jax.random.uniform(
+                jax.random.fold_in(k_fault, 0), (n_scen, chunk, r))
+                if fault.mtbf_seconds is not None else None)
+            (f_up,), up_q = fault_scan(
+                fault, r, (f_up,), f_tabs[:, None] + arrivals, gaps,
+                u_fault)
+            up_cnt = jnp.sum(up_q.astype(dtype), axis=-1)  # (S, chunk)
+            f_tabs = f_tabs + last_arrival
 
         if has_cache:
             # Result-cache hits short-circuit at their replica's broker
@@ -771,8 +923,9 @@ def _simulate_stream(
             if has_cache:
                 dem = dem * miss_f
             gaps_v = gaps * vf
-            as_carry, n_act = autoscale_scan(autoscale, p, as_carry,
-                                             gaps_v, dem * vf)
+            as_carry, n_act = autoscale_scan(
+                autoscale, p, as_carry, gaps_v, dem * vf,
+                up_frac=up_cnt / r if f_outage else None)
             n_act_f = n_act.astype(dtype)
             # the cost integral the policy sweeps price: provisioned
             # replica-seconds and wall seconds (warmup included — the
@@ -789,6 +942,31 @@ def _simulate_stream(
                       else services)
             tm_brk = s_broker_c * miss_f if has_cache else s_broker_c
             tm_hit_c = is_hit.astype(dtype) if has_cache else None
+        def _quorum_join(completions, fork_base, axis):
+            """Fork-join merge: full quorum, or k-of-p past the timeout.
+
+            The broker waits for all p servers until ``fork_base +
+            broker_timeout_seconds``; past it, it returns as soon as at
+            least k answers are in (the k-th order statistic of the
+            per-server completions).  Returns ``(join, degraded)``;
+            with no timeout configured this is exactly ``max`` and
+            ``degraded`` is None.  An infinite timeout keeps the select
+            on the full-quorum side everywhere, so the join is bitwise
+            the fault-free one.
+            """
+            full = jnp.max(completions, axis=axis)
+            if not f_quorum:
+                return full, None
+            k = fault.quorum(p)
+            if k >= p:
+                return full, jnp.zeros(full.shape, bool)
+            t_k = jnp.take(jnp.sort(completions, axis=axis), k - 1,
+                           axis=axis)
+            deadline = fork_base + fault.broker_timeout_seconds
+            late = full > deadline
+            return jnp.where(late, jnp.maximum(t_k, deadline), full), late
+
+        degr = None
         # `perm` maps chunk-order (S, chunk) arrays into the layout the
         # fused branches compute in (replica-compacted); None = identity.
         # All streaming statistics are permutation-invariant (sums,
@@ -811,20 +989,25 @@ def _simulate_stream(
                                     (n_scen, p, chunk))
             completions = fcfs_completion_times(fork, services, impl=impl,
                                                 carry=c_srv[:, 0])
-            join = jnp.max(completions, axis=1)
+            join, degr = _quorum_join(completions, broker_done, axis=1)
             server0 = completions[:, 0, :]
             c_brk_new = (broker_done[:, -1])[:, None]
             c_srv_new = (completions[:, :, -1])[:, None, :]
             w_jsq_new = w_jsq
         else:
             live = miss_f if has_cache else jnp.ones_like(gaps)
-            assign = _routing_assign(routing, r, key, c_idx, gidx,
-                                     n_scen, chunk,
-                                     n_act=n_act if elastic else None)
+            up_route = up_q if f_outage else None
+            assign, spill_q, unav_q = _routing_assign(
+                routing, r, key, c_idx, gidx, n_scen, chunk,
+                n_act=n_act if elastic else None, up=up_route)
             if assign is None:  # jsq: needs the carried work state
-                assign, w_jsq_new = _jsq_route(
+                routed = _jsq_route(
                     w_jsq, gaps, services, live, r, dtype,
-                    n_act=n_act if elastic else None)
+                    n_act=n_act if elastic else None, up=up_route)
+                if up_route is None:
+                    assign, w_jsq_new = routed
+                else:
+                    assign, w_jsq_new, spill_q, unav_q = routed
             else:
                 w_jsq_new = w_jsq
 
@@ -859,19 +1042,25 @@ def _simulate_stream(
             completions = fcfs_completion_times(
                 fork, services[:, None, :, :] * mask_srv[:, :, None, :],
                 impl=impl, carry=c_srv)
-            join_r = jnp.max(completions, axis=2)        # (S, r, chunk)
+            join_r, degr_r = _quorum_join(completions,
+                                          broker_done_r, axis=2)
             # read each query off its OWN replica's sample path
             broker_done = jnp.sum(broker_done_r * mask_srv, axis=1)
             join = jnp.sum(join_r * mask_srv, axis=1)
+            if f_quorum:
+                degr = jnp.sum(degr_r.astype(dtype) * mask_srv,
+                               axis=1) > 0.0
             server0 = jnp.sum(completions[:, :, 0, :] * mask_srv, axis=1)
             c_brk_new = broker_done_r[:, :, -1]
             c_srv_new = completions[:, :, :, -1]
-        elif routing == "round_robin" and chunk % r == 0 and not elastic:
+        elif (routing == "round_robin" and chunk % r == 0
+              and not elastic and not f_outage):
             # Fused fast path: with chunk % r == 0 the round-robin
             # assignment is col % r every chunk, so compaction into
             # per-replica contiguous runs is a pure reshape — no sort.
             # (Autoscaled round-robin wraps at the time-varying active
-            # count, so it rides the general sorted path below.)
+            # count, and failover spills break the col % r pattern, so
+            # both ride the general sorted path below.)
             # Each query is scanned ONCE on its own replica's queues:
             # chunk broker elements + p * chunk server elements total,
             # r x less work than the masked oracle.
@@ -902,7 +1091,11 @@ def _simulate_stream(
             completions = fcfs_completion_times(fork, svc_q, impl=impl,
                                                 carry=c_srv)
             broker_done = broker_done_q.reshape(n_scen, chunk)
-            join = jnp.max(completions, axis=2).reshape(n_scen, chunk)
+            join_q, degr_q = _quorum_join(completions,
+                                          broker_done_q, axis=2)
+            join = join_q.reshape(n_scen, chunk)
+            if f_quorum:
+                degr = degr_q.reshape(n_scen, chunk)
             server0 = completions[:, :, 0, :].reshape(n_scen, chunk)
             c_brk_new = broker_done_q[..., -1]
             c_srv_new = completions[..., -1]
@@ -952,7 +1145,7 @@ def _simulate_stream(
                 jnp.swapaxes(c_srv, 1, 2), asg_s[:, None, :], axis=-1)
             completions = _fcfs_segmented(
                 fork, svc_s, flags[:, None, :], carry_srv_q, impl)
-            join = jnp.max(completions, axis=1)
+            join, degr = _quorum_join(completions, broker_done, axis=1)
             server0 = completions[:, 0, :]
             c_brk_new = jnp.where(
                 counts > 0,
@@ -962,9 +1155,32 @@ def _simulate_stream(
             c_srv_new = jnp.where(counts[:, :, None] > 0,
                                   jnp.swapaxes(srv_ends, 1, 2), c_srv)
 
+        if f_hedge:
+            # Hedged retries: each attempt races the (possibly partial-
+            # quorum) join with a duplicate fork fired a backoff delay
+            # after the broker fork, served OFF-QUEUE by spare capacity
+            # with fresh draws from the salted fault stream (optimistic:
+            # duplicates add no queue load — the trade Eq 6's
+            # `hedge_threshold` prices).  A response the hedge wins is a
+            # full-quorum result, so it clears the degraded flag.
+            cand = None
+            for h_j, h_delay in enumerate(fault.hedge_delays()):
+                k_h = jax.random.fold_in(k_fault, 1 + h_j)
+                dup = jnp.max(jax.random.exponential(
+                    k_h, (n_scen, p, chunk)), axis=1) * s_mean[:, None]
+                if perm is not None:
+                    dup = perm(dup)
+                c = broker_done + h_delay + dup
+                cand = c if cand is None else jnp.minimum(cand, c)
+            if degr is not None:
+                degr = degr & (join <= cand)
+            join = jnp.minimum(join, cand)
+
         if has_cache:
             if perm is not None:
                 is_hit = perm(is_hit)
+            if degr is not None:
+                degr = degr & ~is_hit   # hits never fork: always whole
             resp_cache = cache_done - arrivals
             response = jnp.where(is_hit, resp_cache, join - arrivals)
             broker_res = jnp.where(is_hit, resp_cache,
@@ -978,6 +1194,7 @@ def _simulate_stream(
             server_res = server0 - broker_done
             c_cache_new = c_cache
         mf = ((gidx >= n_warm) & (gidx < n_queries)).astype(dtype)[None, :]
+        mf0 = mf                 # chunk-order copy for chunk-order sums
         if perm is not None:
             mf = perm(mf)
         count = count + jnp.broadcast_to(jnp.sum(mf, -1), (n_scen,))
@@ -986,6 +1203,20 @@ def _simulate_stream(
         s_br = s_br + jnp.sum(broker_res * mf, -1)
         s_cl = s_cl + jnp.sum(cluster_res * mf, -1)
         s_sv = s_sv + jnp.sum(server_res * mf, -1)
+        if faulty:
+            # spill/unavail live in chunk (arrival) order, the degraded
+            # flag in the engine's (possibly permuted) layout; the sums
+            # are permutation-invariant either way.
+            if f_outage and r > 1:
+                s_spill = s_spill + jnp.sum(
+                    spill_q.astype(dtype) * mf0, -1)
+                s_unav = s_unav + jnp.sum(
+                    unav_q.astype(dtype) * mf0, -1)
+            elif f_outage:       # r == 1: down means nowhere to route
+                s_unav = s_unav + jnp.sum(
+                    (1.0 - up_q[:, :, 0].astype(dtype)) * mf0, -1)
+            if degr is not None:
+                s_degr = s_degr + jnp.sum(degr.astype(dtype) * mf, -1)
 
         bins = jnp.clip(
             jnp.floor((jnp.log(jnp.maximum(response, 1e-30))
@@ -1117,6 +1348,19 @@ def _simulate_stream(
                 # the autoscaler trajectory: active fleet size summed
                 # over each bin's arrivals (n_act is in chunk order)
                 tm_act = tm_act + bin_sums(n_act_f)
+            if faulty:
+                # fault trajectory: surviving-replica count and spills
+                # are in chunk order; the degraded flag rides the same
+                # inverse permute as the responses
+                tm_up = tm_up + bin_sums(up_cnt)
+                if f_outage and r > 1:
+                    tm_spill = tm_spill + bin_sums(spill_q.astype(dtype))
+                if degr is not None:
+                    dg = jnp.broadcast_to(degr.astype(dtype),
+                                          (n_scen, chunk))
+                    if perm is not None:
+                        dg = jnp.take_along_axis(dg, inv, axis=-1)
+                    tm_degr = tm_degr + bin_sums(dg)
             t_abs = t_abs + last_arrival
 
         shift = last_arrival
@@ -1124,13 +1368,14 @@ def _simulate_stream(
         c_srv_s = c_srv_new - shift[:, None, None]
         c_cache_s = (c_cache_new - shift[:, None] if has_cache
                      else c_cache_new)
-        if elastic:
-            # An inactive replica receives no work, so its rebased carry
-            # would drift toward -inf chunk after chunk.  Clamping at
-            # the chunk origin is EXACT — seeding max(a, c + b) is
-            # unchanged for any c <= the segment head's arrival, and
-            # arrivals are positive — and pins a fully drained replica
-            # at 0, the same cold state a scale-out replica starts from.
+        if elastic or f_outage:
+            # An inactive (or failed) replica receives no work, so its
+            # rebased carry would drift toward -inf chunk after chunk.
+            # Clamping at the chunk origin is EXACT — seeding
+            # max(a, c + b) is unchanged for any c <= the segment head's
+            # arrival, and arrivals are positive — and pins a fully
+            # drained replica at 0, the same cold state a scale-out (or
+            # repaired) replica starts from.
             c_brk_s = jnp.maximum(c_brk_s, 0.0)
             c_srv_s = jnp.maximum(c_srv_s, 0.0)
             if has_cache:
@@ -1142,11 +1387,16 @@ def _simulate_stream(
                      tap_pri, tap_val)
         if elastic:
             new_carry = new_carry + tuple(as_carry) + (rep_secs, elapsed)
+        if faulty:
+            new_carry = new_carry + (f_up, f_tabs, s_spill, s_unav,
+                                     s_degr)
         if telemetry is not None:
             new_carry = new_carry + (t_abs, tm_count, tm_resp, tm_bb,
                                      tm_bs, tm_rc, tm_hit, tm_slo)
             if elastic:
                 new_carry = new_carry + (tm_act,)
+            if faulty:
+                new_carry = new_carry + (tm_up, tm_spill, tm_degr)
         return new_carry, None
 
     zeros = jnp.zeros((n_scen,), dtype)
@@ -1162,6 +1412,9 @@ def _simulate_stream(
     if elastic:
         init = init + autoscale_init(autoscale, n_scen, dtype) \
             + (zeros, zeros)
+    if faulty:
+        init = init + fault_init(fault, n_scen, r) \
+            + (zeros, zeros, zeros, zeros)
     if telemetry is not None:
         zb = jnp.zeros((n_scen, tl_bins), dtype)
         init = init + (zeros, zb, zb,
@@ -1171,6 +1424,8 @@ def _simulate_stream(
                        zb, zb)
         if elastic:
             init = init + (zb,)
+        if faulty:
+            init = init + (zb, zb, zb)
     final, _ = jax.lax.scan(body, init, xs)
     (t_last, c_brk, c_srv, c_cache, w_jsq, count, s_resp, ss_resp, s_br,
      s_cl, s_sv, hist, tap_pri, tap_val) = final[:14]
@@ -1179,23 +1434,38 @@ def _simulate_stream(
     if elastic:
         rep_secs, elapsed = final[off + 5:off + 7]
         off += 7
+    spill = unavail = degraded = None
+    if faulty:
+        spill, unavail, degraded = final[off + 2:off + 5]
+        off += 5
 
     timeline = None
     if telemetry is not None:
         (_, tm_count, tm_resp, tm_bb, tm_bs, tm_rc, tm_hit,
          tm_slo) = final[off:off + 8]
+        toff = off + 8
+        active_sum = None
+        if elastic:
+            active_sum = final[toff]
+            toff += 1
+        up_sum = spill_sum = degraded_sum = None
+        if faulty:
+            up_sum, spill_sum, degraded_sum = final[toff:toff + 3]
         timeline = Timeline(
             bin_seconds=tl_bin_w, count=tm_count, resp_sum=tm_resp,
             busy_broker=tm_bb, busy_server=tm_bs, replica_count=tm_rc,
             hit_count=tm_hit, slo_count=tm_slo,
-            active_sum=final[off + 8] if elastic else None)
+            active_sum=active_sum, up_sum=up_sum, spill_sum=spill_sum,
+            degraded_sum=degraded_sum)
 
     return SimResult(
         count=count, sum_response=s_resp, sumsq_response=ss_resp,
         sum_broker=s_br, sum_cluster=s_cl, sum_server=s_sv,
         hist=hist, hist_log_lo=hist_log_lo, hist_log_step=hist_log_step,
         tap_response=tap_val, timeline=timeline,
-        replica_seconds=rep_secs, elapsed_seconds=elapsed)
+        replica_seconds=rep_secs, elapsed_seconds=elapsed,
+        spill_count=spill, unavail_count=unavail,
+        degraded_count=degraded)
 
 
 def _cache_args(result_cache) -> tuple[Array, Array, bool]:
@@ -1214,7 +1484,7 @@ def simulate_fork_join(
     *,
     p: Optional[int] = None,
     mode: str = "exponential",
-    impl: str = "xla",
+    impl: str = "auto",
     warmup_fraction: float = 0.1,
     chunk_size: int = DEFAULT_CHUNK,
     hist_bins: int = DEFAULT_HIST_BINS,
@@ -1254,6 +1524,11 @@ def simulate_fork_join(
       time-varying; the result gains ``replica_seconds`` /
       ``elapsed_seconds`` and (with telemetry) the active-replica
       trajectory.
+    * ``fault=FaultSpec(...)`` injects replica outages (failover spills
+      to survivors), degraded servers, a partial-quorum broker timeout
+      and hedged retries; the result gains ``spill_count`` /
+      ``unavail_count`` / ``degraded_count`` and (with telemetry) the
+      up/spill/degraded trajectories.  See `repro.core.faults`.
 
     The loose keywords ``r=`` / ``routing=`` / ``result_cache=`` /
     ``replica_impl=`` are DEPRECATED shims for the same fields (warn
@@ -1267,6 +1542,8 @@ def simulate_fork_join(
                            result_cache=result_cache,
                            replica_impl=replica_impl,
                            caller="simulate_fork_join")
+    from repro.kernels.maxplus_scan.ops import resolve_scan_impl
+    impl = resolve_scan_impl(impl)  # concrete before the jit cache key
     p = int(params.p) if p is None else p  # static before tracing
     cache_hit, cache_service, has_cache = _cache_args(spec.result_cache)
     proc = _as_batch_process(lam)
@@ -1279,7 +1556,8 @@ def simulate_fork_join(
                            tap_size, r=spec.engine_r, routing=spec.routing,
                            has_cache=has_cache,
                            replica_impl=spec.replica_impl,
-                           autoscale=spec.autoscale, telemetry=telemetry)
+                           autoscale=spec.autoscale, telemetry=telemetry,
+                           fault=spec.fault)
     return jax.tree_util.tree_map(lambda x: x[0], res)
 
 
@@ -1291,7 +1569,7 @@ def simulate_fork_join_batch(
     *,
     p: int,
     mode: str = "exponential",
-    impl: str = "xla",
+    impl: str = "auto",
     warmup_fraction: float = 0.1,
     chunk_size: int = DEFAULT_CHUNK,
     hist_bins: int = DEFAULT_HIST_BINS,
@@ -1326,6 +1604,8 @@ def simulate_fork_join_batch(
                            result_cache=result_cache,
                            replica_impl=replica_impl,
                            caller="simulate_fork_join_batch")
+    from repro.kernels.maxplus_scan.ops import resolve_scan_impl
+    impl = resolve_scan_impl(impl)  # concrete before the jit cache key
     cache_hit, cache_service, has_cache = _cache_args(spec.result_cache)
     proc = _as_batch_process(lam)
     _check_trace(proc, n_queries)
@@ -1337,7 +1617,8 @@ def simulate_fork_join_batch(
                             r=spec.engine_r, routing=spec.routing,
                             has_cache=has_cache,
                             replica_impl=spec.replica_impl,
-                            autoscale=spec.autoscale, telemetry=telemetry)
+                            autoscale=spec.autoscale, telemetry=telemetry,
+                            fault=spec.fault)
 
 
 @functools.partial(jax.jit, static_argnames=("c",))

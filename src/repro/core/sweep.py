@@ -44,6 +44,7 @@ from repro import compat
 from repro.core import capacity, queueing, simulator
 from repro.core.arrivals import ArrivalProcess
 from repro.core.cluster import ClusterSpec, resolve_cluster
+from repro.core.faults import FaultSpec
 from repro.core.queueing import ServerParams
 from repro.launch.elastic import AutoscalePolicy
 
@@ -90,6 +91,14 @@ class SweepGrid:
     (the Eq 7/8 bounds have no notion of a time-varying fleet), and
     :func:`extract_frontier` prices their cells by observed
     replica-seconds instead of a static replica count.
+
+    ``fault`` likewise replaces the replica axis with a FAULT-SCENARIO
+    axis: a tuple of `repro.core.faults.FaultSpec` values (None entries
+    are the fault-free baseline) becomes the 6th dimension, every cell
+    running at the single fixed replica count on the ``r`` axis.  Fault
+    grids are simulation-only too — the analytic bounds assume every
+    replica is up — and answer "same hardware, which failure scenarios
+    still meet the SLO?" in one dispatch sweep.
     """
 
     lam: Array
@@ -103,8 +112,31 @@ class SweepGrid:
         default_factory=lambda: jnp.ones((1,), jnp.float32))
     result_cache: Optional[tuple[float, float]] = None
     autoscale: Optional[tuple[AutoscalePolicy, ...]] = None
+    fault: Optional[tuple[Optional[FaultSpec], ...]] = None
 
     def __post_init__(self):
+        if self.fault is not None:
+            fts = (tuple(self.fault)
+                   if isinstance(self.fault, (tuple, list))
+                   else (self.fault,))
+            if not fts:
+                raise ValueError("fault= needs at least one scenario "
+                                 "(or None for a fault-free grid)")
+            for ft in fts:
+                if ft is not None and not isinstance(ft, FaultSpec):
+                    raise TypeError(
+                        "fault must hold FaultSpec (or None) values; "
+                        f"got {type(ft).__name__}")
+            if self.autoscale is not None:
+                raise ValueError(
+                    "autoscale and fault both claim the grid's 6th "
+                    "axis; sweep one at a time")
+            if self.r.shape[0] != 1:
+                raise ValueError(
+                    "a fault grid replaces the replica axis; give r ONE "
+                    "value (the fixed replica count every scenario "
+                    "runs at)")
+            object.__setattr__(self, "fault", fts)
         if self.autoscale is None:
             return
         pols = (tuple(self.autoscale)
@@ -133,6 +165,7 @@ class SweepGrid:
               r: ArrayLike = 1.0,
               result_cache: Optional[tuple[float, float]] = None,
               autoscale=None,
+              fault=None,
               ) -> "SweepGrid":
         """Grid from explicit axes; defaults come from Table 6 ``memory``."""
         if base is None:
@@ -145,12 +178,17 @@ class SweepGrid:
         return cls(lam=_axis(lam), p=_axis(p), cpu=_axis(cpu),
                    disk=_axis(disk), hit=_axis(hit), base=base,
                    broker_from_p=broker_from_p, r=_axis(r),
-                   result_cache=result_cache, autoscale=autoscale)
+                   result_cache=result_cache, autoscale=autoscale,
+                   fault=fault)
 
     @property
     def shape(self) -> tuple[int, ...]:
-        last = (len(self.autoscale) if self.autoscale is not None
-                else self.r.shape[0])
+        if self.autoscale is not None:
+            last = len(self.autoscale)
+        elif self.fault is not None:
+            last = len(self.fault)
+        else:
+            last = self.r.shape[0]
         return (self.lam.shape[0], self.p.shape[0], self.cpu.shape[0],
                 self.disk.shape[0], self.hit.shape[0], last)
 
@@ -304,6 +342,10 @@ def sweep_analytical(grid: SweepGrid, *, mesh=None) -> SweepResult:
         raise ValueError(
             "sweep_analytical cannot evaluate a policy grid: the Eq 7/8 "
             "bounds assume a fixed replica count (use sweep_simulated)")
+    if grid.fault is not None:
+        raise ValueError(
+            "sweep_analytical cannot evaluate a fault grid: the Eq 7/8 "
+            "bounds assume every replica is up (use sweep_simulated)")
     lam_rep = grid.lam_replica()
     _, params = grid.broadcast()
     shape = grid.shape
@@ -481,6 +523,14 @@ def sweep_simulated(
     (the autoscaler's cost integral), which `extract_frontier` uses to
     price policies by time-averaged fleet size.
 
+    ``grid.fault`` swaps the replica axis for a FAULT-SCENARIO axis
+    instead: one dispatch per `repro.core.faults.FaultSpec` (None
+    entries are the fault-free baseline), every cell at the grid's one
+    fixed replica count.  Simulation-only like policy grids; the cells'
+    ``stats.spill_count`` / ``degraded_count`` channels come back with
+    the grid shape, so degraded-vs-full-quorum frontiers read straight
+    off the sweep (see ``examples/failover_stress.py``).
+
     ``profile`` makes the load non-stationary: a (n_bins,) relative-rate
     curve (e.g. `repro.workloadgen.loadgen.diurnal_rates`) that tiles with
     period ``n_bins * profile_bin_seconds``.  It is normalized to mean 1,
@@ -521,6 +571,10 @@ def sweep_simulated(
         raise ValueError(
             "autoscale policies form a sweep axis: put them on "
             "SweepGrid(autoscale=...) rather than the ClusterSpec")
+    if spec.fault is not None:
+        raise ValueError(
+            "fault scenarios form a sweep axis: put them on "
+            "SweepGrid(fault=...) rather than the ClusterSpec")
     if spec.result_cache is not None and grid.result_cache is not None:
         raise ValueError(
             "result_cache given on both the ClusterSpec and the grid; "
@@ -528,6 +582,7 @@ def sweep_simulated(
     cache = (spec.result_cache if spec.result_cache is not None
              else grid.result_cache)
     policies = grid.autoscale
+    faults = grid.fault
     if telemetry is not None and policies is not None:
         max_rs = {pol.max_r for pol in policies}
         if len(max_rs) > 1:
@@ -588,6 +643,27 @@ def sweep_simulated(
             return run(k, arrival, params_ij)
         return _sharded_batch(run, mesh, k, arrival, params_ij)
 
+    def fill_fault_channels(res, r: int):
+        """Zero-filled fault channels for the ``fault=None`` baseline cell.
+
+        A fault axis may mix FaultSpec cells with a fault-free baseline;
+        the baseline's SimResult carries ``None`` in the fault slots,
+        which would break the pytree stack across cells.  Materialize
+        the semantically-equal constants instead: nothing spilled or
+        degraded, every replica up for every arrival.
+        """
+        if res.spill_count is not None:
+            return res
+        z = jnp.zeros_like(res.count)
+        kw = dict(spill_count=z, unavail_count=z, degraded_count=z)
+        if res.timeline is not None and res.timeline.up_sum is None:
+            tl = res.timeline
+            kw["timeline"] = dataclasses.replace(
+                tl, up_sum=tl.count * float(r),
+                spill_sum=jnp.zeros_like(tl.count),
+                degraded_sum=jnp.zeros_like(tl.count))
+        return dataclasses.replace(res, **kw)
+
     p_slabs = []
     for i in range(n_p):
         p = _static_count(p_axis[i], "server")
@@ -598,6 +674,12 @@ def sweep_simulated(
                                    result_cache=cache,
                                    replica_impl=spec.replica_impl,
                                    autoscale=policies[j])
+            elif faults is not None:
+                cell = ClusterSpec(r=_static_count(r_axis[0], "replica"),
+                                   routing=spec.routing,
+                                   result_cache=cache,
+                                   replica_impl=spec.replica_impl,
+                                   fault=faults[j])
             else:
                 cell = ClusterSpec(r=_static_count(r_axis[j], "replica"),
                                    routing=spec.routing,
@@ -607,6 +689,8 @@ def sweep_simulated(
                 **{n: v[i, j] for n, v in field_slabs.items()})
             res = dispatch(keys[i * n_cfg + j], lam_slabs[i, j],
                            params_ij, p, cell)
+            if faults is not None:
+                res = fill_fault_channels(res, cell.r)
             slab_shape = (shape[0], shape[2], shape[3], shape[4])
             cfg_slabs.append(jax.tree_util.tree_map(
                 lambda x: x.reshape(slab_shape + x.shape[1:]), res))
@@ -640,7 +724,11 @@ class Frontier:
     On a policy grid ``r`` is the chosen policy's MEAN ACTIVE replica
     count (``replica_seconds / elapsed_seconds`` — generally fractional)
     and ``autoscale`` holds the chosen `AutoscalePolicy` per rate;
-    otherwise ``autoscale`` is None and ``r`` is the static count.
+    otherwise ``autoscale`` is None and ``r`` is the static count.  On a
+    fault grid ``fault`` holds the chosen cell's `FaultSpec` (or None
+    for the fault-free baseline cell) per rate — the harshest-surviving
+    scenario when the surface is fed through a min, or simply the
+    cheapest feasible cell under the default argmin.
     """
 
     lam: Array
@@ -653,6 +741,7 @@ class Frontier:
     response: Array    # targeted-surface response of the chosen config (s)
     r: Array = None    # replicas of the chosen config ((L,); 1s pre-grid)
     autoscale: Optional[tuple[AutoscalePolicy, ...]] = None
+    fault: Optional[tuple[Optional[FaultSpec], ...]] = None
 
     def describe(self, i: int) -> str:
         if not bool(self.feasible[i]):
@@ -666,6 +755,10 @@ class Frontier:
         else:
             reps = 1 if self.r is None else int(round(float(self.r[i])))
             rep_s = f" x{reps} replicas" if reps != 1 else ""
+            if self.fault is not None:
+                ft = self.fault[i]
+                rep_s += (" (fault-free)" if ft is None
+                          else f" under {ft!r}")
         return (f"lam={float(self.lam[i]):g} qps: p={float(self.p[i]):g} "
                 f"cpu x{float(self.cpu[i]):g} disk x{float(self.disk[i]):g} "
                 f"hit={float(self.hit[i]):.2f}{rep_s} -> "
@@ -739,10 +832,17 @@ def extract_frontier(
         surface.reshape(grid.shape[0], -1),
         best[:, None], axis=1)[:, 0]
     any_feasible = jnp.isfinite(best_cost)
+    chosen_fault = None
     if grid.autoscale is not None:
         chosen_r = jnp.take_along_axis(
             eff_r.reshape(grid.shape[0], -1), best[:, None], axis=1)[:, 0]
         chosen_pol = tuple(grid.autoscale[int(t)] for t in np.asarray(ir))
+    elif grid.fault is not None:
+        # fault cells all run at the one fixed replica count; the 6th
+        # index picks the failure scenario, not the fleet size
+        chosen_r = jnp.broadcast_to(grid.r[:1], ir.shape)
+        chosen_pol = None
+        chosen_fault = tuple(grid.fault[int(t)] for t in np.asarray(ir))
     else:
         chosen_r = grid.r[ir]
         chosen_pol = None
@@ -757,4 +857,5 @@ def extract_frontier(
         response=chosen_resp,
         r=chosen_r,
         autoscale=chosen_pol,
+        fault=chosen_fault,
     )

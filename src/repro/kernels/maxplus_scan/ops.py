@@ -7,6 +7,7 @@ identity (a = -inf, b = 0), and picks interpret mode automatically off-TPU.
 from __future__ import annotations
 
 import functools
+import logging
 
 import jax
 import jax.numpy as jnp
@@ -18,9 +19,37 @@ from repro.kernels.maxplus_scan.kernel import (
     maxplus_segment_scan_pallas,
 )
 
+SCAN_IMPLS = ("auto", "xla", "pallas")
+
+_logger = logging.getLogger(__name__)
+_logged_auto = False
+
 
 def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def resolve_scan_impl(impl: str = "auto") -> str:
+    """Resolve the scan backend: "auto" -> "pallas" on TPU, else "xla".
+
+    Interpret-mode Pallas is strictly slower than
+    ``jax.lax.associative_scan`` off-TPU, so "auto" (now the default of
+    the simulator entry points) only picks the kernel on real TPU
+    hardware.  Pass "xla" or "pallas" explicitly to override.  Logs the
+    auto choice once per process.
+    """
+    global _logged_auto
+    if impl not in SCAN_IMPLS:
+        raise ValueError(f"unknown scan impl {impl!r}; choose one of "
+                         f"{SCAN_IMPLS}")
+    if impl != "auto":
+        return impl
+    resolved = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if not _logged_auto:
+        _logger.info("maxplus scan impl=auto resolved to %r (backend %r)",
+                     resolved, jax.default_backend())
+        _logged_auto = True
+    return resolved
 
 
 @functools.partial(jax.jit, static_argnames=("block_len", "row_tile",

@@ -162,7 +162,7 @@ def autoscale_init(policy: AutoscalePolicy, n_scen: int, dtype):
 
 
 def autoscale_scan(policy: AutoscalePolicy, p: int, carry,
-                   gaps, demand):
+                   gaps, demand, up_frac=None):
     """Run the controller over one block of queries; returns per-query n.
 
     gaps: (S, n) interarrival seconds; demand: (S, n) server-seconds of
@@ -173,6 +173,14 @@ def autoscale_scan(policy: AutoscalePolicy, p: int, carry,
     chunking-invariant by construction (property-tested in
     tests/test_autoscale.py).  Zero-gap, zero-demand entries (the
     streaming engine's padded tail) advance nothing.
+
+    up_frac (optional, (S, n)): fraction of provisioned replicas that
+    are actually up (fault injection's capacity-loss coupling).  The
+    controller sees an outage as lost capacity — effective demand is
+    inflated by 1/up_frac and the fluid backlog drains at the surviving
+    rate — so it scales OUT under failures exactly as a utilization
+    autoscaler would in production.  ``None`` (the default) takes the
+    original, bitwise-identical all-up path.
 
     Returns ``(new_carry, n_active (S, n) int32)`` where ``n_active[i]``
     is the count in force when query i is routed (decisions at interval
@@ -188,15 +196,27 @@ def autoscale_scan(policy: AutoscalePolicy, p: int, carry,
     stab_n = int(policy.stabilization_intervals)
     lo, hi = int(policy.min_r), int(policy.max_r)
     trigger = policy.queue_trigger_seconds
+    faulty = up_frac is not None
 
     def step(c, inp):
-        n, te, we, st, bk = c
-        gap, dem = inp                         # (S,), (S,)
-        nf = n.astype(gap.dtype)
-        cap_rate = nf * p                      # server-seconds per second
-        bk = jnp.maximum(bk - cap_rate * gap, 0.0) + dem
-        te = te + gap
-        we = we + dem
+        if faulty:
+            n, te, we, st, bk = c
+            gap, dem, upf = inp                # (S,) each
+            # floor: even fully-down fleets plan against >= one replica
+            upf = jnp.maximum(upf, 1.0 / hi)
+            nf = n.astype(gap.dtype)
+            cap_rate = nf * p                  # server-seconds per second
+            bk = jnp.maximum(bk - cap_rate * upf * gap, 0.0) + dem
+            te = te + gap
+            we = we + dem / upf
+        else:
+            n, te, we, st, bk = c
+            gap, dem = inp                     # (S,), (S,)
+            nf = n.astype(gap.dtype)
+            cap_rate = nf * p                  # server-seconds per second
+            bk = jnp.maximum(bk - cap_rate * gap, 0.0) + dem
+            te = te + gap
+            we = we + dem
         decide = te >= interval
         # HPA: desired = ceil(n * util / target) with
         # util = we / (n * p * te) — the n cancels into offered load
@@ -221,7 +241,8 @@ def autoscale_scan(policy: AutoscalePolicy, p: int, carry,
         we = jnp.where(decide, 0.0, we)
         return (n, te, we, st, bk), n
 
-    xs = (gaps.T, demand.T)
+    xs = ((gaps.T, demand.T, up_frac.T) if faulty
+          else (gaps.T, demand.T))
     carry, n_seq = jax.lax.scan(step, carry, xs)   # n_seq: (n, S)
     return carry, n_seq.T
 

@@ -79,6 +79,16 @@ def render_timeline(tl, label: str = "") -> str:
         line("imbalance", tl_np(tl.imbalance_share))
     if float(tl_np(tl.hit_count).sum()) > 0:
         line("cache hits", tl_np(tl.hit_fraction))
+    if getattr(tl, "active_sum", None) is not None:
+        line("active repl", tl_np(tl.active_replicas))
+    if getattr(tl, "up_sum", None) is not None:
+        line("up replicas", tl_np(tl.up_replicas))
+    if (getattr(tl, "spill_sum", None) is not None
+            and float(tl_np(tl.spill_sum).sum()) > 0):
+        line("spill frac", tl_np(tl.spill_fraction))
+    if (getattr(tl, "degraded_sum", None) is not None
+            and float(tl_np(tl.degraded_sum).sum()) > 0):
+        line("degraded frac", tl_np(tl.degraded_fraction))
     return "\n".join(rows)
 
 

@@ -99,6 +99,13 @@ class Timeline:
                                    None otherwise — like
                                    ``SimResult.timeline`` itself, a None
                                    field contributes no pytree leaves)
+    up_sum:        (..., B)        summed up-replica counts of each bin's
+                                   arrivals (fault-injected runs only)
+    spill_sum:     (..., B)        arrivals failed over to a non-primary
+                                   replica, per bin (fault + r > 1 only)
+    degraded_sum:  (..., B)        partial-quorum (degraded) responses,
+                                   per arrival bin (fault + broker
+                                   timeout only)
     """
 
     bin_seconds: Array
@@ -110,6 +117,9 @@ class Timeline:
     hit_count: Array
     slo_count: Array
     active_sum: Optional[Array] = None
+    up_sum: Optional[Array] = None
+    spill_sum: Optional[Array] = None
+    degraded_sum: Optional[Array] = None
 
     @property
     def n_bins(self) -> int:
@@ -182,6 +192,45 @@ class Timeline:
             raise ValueError("no active-replica channel: this timeline "
                              "came from a run without autoscale")
         return self.active_sum / self._n
+
+    @property
+    def up_replicas(self) -> Array:
+        """(..., B) mean up-replica count over each bin's arrivals.
+
+        The availability trajectory: outage windows show up as dips
+        below the provisioned r.  Only present on fault-injected runs
+        (``ClusterSpec(fault=...)``).
+        """
+        if self.up_sum is None:
+            raise ValueError("no up-replica channel: this timeline came "
+                             "from a run without fault injection")
+        return self.up_sum / self._n
+
+    @property
+    def spill_fraction(self) -> Array:
+        """(..., B) share of each bin's arrivals failed over.
+
+        A spilled query reached a *surviving* replica instead of its
+        primary — load concentration on survivors during an outage.
+        Only present on fault-injected runs with r > 1.
+        """
+        if self.spill_sum is None:
+            raise ValueError("no spill channel: this timeline came from "
+                             "a run without fault injection (or r == 1)")
+        return self.spill_sum / self._n
+
+    @property
+    def degraded_fraction(self) -> Array:
+        """(..., B) share of each bin's arrivals answered degraded.
+
+        Degraded = the broker timed out and returned a partial-quorum
+        (k-of-p) result.  Only present on fault-injected runs with a
+        ``broker_timeout_seconds``.
+        """
+        if self.degraded_sum is None:
+            raise ValueError("no degraded channel: this timeline came "
+                             "from a run without a broker timeout")
+        return self.degraded_sum / self._n
 
     @property
     def mean_service_per_query(self) -> Array:

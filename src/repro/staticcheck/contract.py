@@ -117,6 +117,19 @@ def _probes() -> dict[str, Callable[[], dict[str, str]]]:
                 telemetry=TelemetrySpec(n_bins=8)),
             key))
 
+    def p_sim_fault():
+        from repro.core.faults import FaultSpec
+        from repro.obs.timeline import TelemetrySpec
+        ft = FaultSpec(outages=((0, 1.0, 3.0),), mtbf_seconds=30.0,
+                       degraded=((1, 2.0),), broker_timeout_seconds=0.4,
+                       quorum_k=3, hedge_after_seconds=0.3)
+        return _tree_specs(jax.eval_shape(
+            lambda k: simulator.simulate_fork_join(
+                k, 120.0, 256, params, chunk_size=128,
+                cluster=ClusterSpec(r=3, fault=ft),
+                telemetry=TelemetrySpec(n_bins=8)),
+            key))
+
     def p_sim_batch():
         lam = jax.ShapeDtypeStruct((3,), jnp.float32)
         batch_params = jax.tree_util.tree_map(
@@ -179,6 +192,7 @@ def _probes() -> dict[str, Callable[[], dict[str, str]]]:
         "simulate_fork_join[r=3,cache]": p_sim_replicated,
         "simulate_fork_join[telemetry]": p_sim_telemetry,
         "simulate_fork_join[autoscale]": p_sim_autoscale,
+        "simulate_fork_join[fault]": p_sim_fault,
         "simulate_fork_join_batch": p_sim_batch,
         "sweep_analytical": p_sweep_analytical,
         "sweep_simulated": p_sweep_simulated,

@@ -325,3 +325,52 @@ def check_cluster_spec(mod: Module) -> Iterator[Finding]:
                 f"deprecated loose keyword(s) {', '.join(bad)} on "
                 f"{leaf}(); move them onto cluster=ClusterSpec(...) "
                 "(ROADMAP ClusterSpec convention)")
+
+
+# --------------------------------------------------------------------------
+# RPR007: FaultSpec convention (PR 10)
+# --------------------------------------------------------------------------
+
+# the fault recurrence primitives only the engine may drive directly;
+# everyone else describes faults declaratively on the ClusterSpec
+_FAULT_PRIMITIVES = {"fault_scan", "fault_init"}
+
+
+@rule("RPR007", "faults-via-fault-spec", "convention",
+      "fault injection goes through cluster=ClusterSpec(fault=FaultSpec("
+      "...)): raw literals on fault= and hand-threaded fault_scan/"
+      "fault_init outage-mask recurrences bypass the validated spec",
+      scope=["src/*.py", "tests/*.py", "examples/*.py",
+             "benchmarks/*.py"],
+      exclude=["src/repro/core/faults.py",
+               "src/repro/core/simulator.py",
+               "tests/test_faults.py"])
+def check_fault_spec(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        qn = resolve_call(mod, node)
+        leaf = qn.rsplit(".", 1)[-1] if qn else None
+        if leaf in _FAULT_PRIMITIVES:
+            yield Finding(
+                "RPR007", mod.rel, node.lineno, node.col_offset,
+                f"direct {leaf}() call hand-threads the outage-mask "
+                "recurrence; describe the faults as ClusterSpec(fault="
+                "FaultSpec(...)) and let the engine drive it")
+            continue
+        if leaf != "ClusterSpec":
+            continue
+        for kw in node.keywords:
+            if kw.arg != "fault":
+                continue
+            v = kw.value
+            literal = isinstance(v, (ast.Dict, ast.List, ast.Tuple,
+                                     ast.Set))
+            literal = literal or (isinstance(v, ast.Constant)
+                                  and v.value is not None)
+            if literal:
+                yield Finding(
+                    "RPR007", mod.rel, node.lineno, node.col_offset,
+                    "raw literal on ClusterSpec(fault=...); build a "
+                    "FaultSpec(...) so outage windows and quorum knobs "
+                    "are validated in one place")

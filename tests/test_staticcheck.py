@@ -544,3 +544,51 @@ def test_contract_catches_removed_probe(tmp_path, live_snapshot):
 def test_contract_missing_file_is_a_finding(tmp_path):
     findings = contract.check(tmp_path / "nope.json", live={})
     assert findings and findings[0].rule_id == "RPR301"
+
+
+def test_rpr007_fault_spec_literal():
+    assert_triple(
+        "RPR007", "src/repro/core/x.py",
+        bad=("from repro.core.cluster import ClusterSpec\n"
+             "spec = ClusterSpec(r=3, fault=((0, 5.0, 10.0),))\n"),
+        clean=("from repro.core.cluster import ClusterSpec\n"
+               "from repro.core.faults import FaultSpec\n"
+               "spec = ClusterSpec(r=3, fault=FaultSpec(\n"
+               "    outages=((0, 5.0, 10.0),)))\n"))
+
+
+def test_rpr007_hand_threaded_fault_scan():
+    assert_triple(
+        "RPR007", "examples/x.py",
+        bad=("from repro.core.faults import FaultSpec, fault_init, "
+             "fault_scan\n"
+             "def masks(spec, t, gaps):\n"
+             "    carry = fault_init(spec, 2, 4)\n"
+             "    return fault_scan(spec, 4, carry, t, gaps)\n"),
+        clean=("from repro.core.cluster import ClusterSpec\n"
+               "from repro.core.faults import FaultSpec\n"
+               "from repro.core.simulator import simulate_fork_join\n"
+               "def f(key, params, spec):\n"
+               "    return simulate_fork_join(\n"
+               "        key, 50.0, 256, params,\n"
+               "        cluster=ClusterSpec(r=3, fault=spec))\n"))
+
+
+def test_rpr007_allows_none_and_names():
+    ok = ("from repro.core.cluster import ClusterSpec\n"
+          "from repro.core.faults import FaultSpec\n"
+          "ft = FaultSpec(mtbf_seconds=30.0)\n"
+          "a = ClusterSpec(r=2, fault=None)\n"
+          "b = ClusterSpec(r=2, fault=ft)\n")
+    assert "RPR007" not in ids_of(ok, "src/repro/core/x.py")
+
+
+def test_rpr007_scope():
+    # the engine and the spec module drive the recurrence legitimately,
+    # and tests/test_faults.py property-tests it directly
+    assert sc.RULES["RPR007"].applies_to("examples/failover_stress.py")
+    assert sc.RULES["RPR007"].applies_to("benchmarks/faults_bench.py")
+    assert sc.RULES["RPR007"].applies_to("tests/test_sweep.py")
+    assert not sc.RULES["RPR007"].applies_to("src/repro/core/faults.py")
+    assert not sc.RULES["RPR007"].applies_to("src/repro/core/simulator.py")
+    assert not sc.RULES["RPR007"].applies_to("tests/test_faults.py")
